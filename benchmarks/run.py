@@ -1,0 +1,40 @@
+"""Benchmark harness — one module per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV rows.  Quality metrics are
+FID-proxy / paired-MSE on synthetic latents (ordering is the validated
+claim); latency/speedup numbers are modeled on the paper's 8-device setup
+from roofline terms (no TPU in this container).  See EXPERIMENTS.md.
+
+  PYTHONPATH=src python -m benchmarks.run [--only table1,table5] [--fast]
+"""
+import argparse
+import os
+import sys
+import time
+
+TABLES = ["table1_quality", "table23_fewer_steps", "table4_ablation",
+          "table5_comm_fraction", "fig9_scaling", "fig10_tradeoff"]
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None, help="comma list of modules")
+    ap.add_argument("--fast", action="store_true",
+                    help="fewer train steps / samples (smoke)")
+    args = ap.parse_args()
+    if args.fast:
+        os.environ.setdefault("BENCH_TRAIN_STEPS", "60")
+        os.environ.setdefault("BENCH_SAMPLES", "32")
+    mods = args.only.split(",") if args.only else TABLES
+    print("name,us_per_call,derived")
+    for name in mods:
+        key = name if name in TABLES else next(
+            (t for t in TABLES if t.startswith(name)), name)
+        t0 = time.time()
+        mod = __import__(f"benchmarks.{key}", fromlist=["run"])
+        mod.run()
+        print(f"# {key} done in {time.time()-t0:.1f}s", file=sys.stderr)
+
+
+if __name__ == "__main__":
+    main()

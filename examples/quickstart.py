@@ -1,0 +1,53 @@
+"""Quickstart: the DICE public API in ~60 lines.
+
+1. Build a (CPU-sized) DiT-MoE, train it briefly on synthetic latents.
+2. Sample under synchronous expert parallelism and under DICE.
+3. Compare outputs + the communication/memory accounting.
+
+Run:  PYTHONPATH=src python examples/quickstart.py
+"""
+import jax
+import jax.numpy as jnp
+
+from repro.configs.dit_moe_xl import tiny
+from repro.core.schedules import DiceConfig
+from repro.data.synthetic import latent_batches
+from repro.metrics.fid_proxy import mse_vs_reference
+from repro.models.dit_moe import init_dit
+from repro.optim.adamw import adamw_init
+from repro.sampling.rectified_flow import rf_sample, rf_train_step
+
+
+def main():
+    cfg = tiny()
+    print(f"model: {cfg.name}  layers={cfg.num_layers} experts={cfg.num_experts}"
+          f" (+{cfg.num_shared_experts} shared), {cfg.param_count()/1e6:.1f}M params")
+
+    # -- train a little ------------------------------------------------------
+    params = init_dit(jax.random.PRNGKey(0), cfg)
+    opt = adamw_init(params)
+    data = latent_batches(batch=16, tokens=cfg.patch_tokens,
+                          channels=cfg.in_channels,
+                          num_classes=cfg.num_classes)
+    key = jax.random.PRNGKey(1)
+    for i in range(40):
+        key, k = jax.random.split(key)
+        params, opt, m = rf_train_step(params, opt, next(data), k, cfg)
+        if i % 10 == 0:
+            print(f"  train step {i:3d}  loss {float(m['loss']):.4f}")
+
+    # -- sample under two schedules -----------------------------------------
+    classes = jnp.arange(8) % cfg.num_classes
+    ref, _ = rf_sample(params, cfg, DiceConfig.sync_ep(), num_steps=12,
+                       classes=classes, key=jax.random.PRNGKey(7))
+    dice, stats = rf_sample(params, cfg, DiceConfig.dice(), num_steps=12,
+                            classes=classes, key=jax.random.PRNGKey(7))
+    print(f"samples: {dice.shape}; MSE(DICE vs sync) = "
+          f"{mse_vs_reference(dice, ref):.6f}")
+    print(f"DICE staleness buffers: {stats['buffer_bytes'][-1]:,.0f} bytes; "
+          f"per-step dispatch bytes: {stats['dispatch_bytes'][0]:,.0f} "
+          f"(refresh) vs {stats['dispatch_bytes'][3]:,.0f} (light)")
+
+
+if __name__ == "__main__":
+    main()

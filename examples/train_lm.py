@@ -1,0 +1,25 @@
+"""Train any assigned architecture's reduced config on the synthetic token
+pipeline — exercises the full substrate (configs, model zoo, AdamW,
+checkpointing) through the public launcher.
+
+Run:  PYTHONPATH=src python examples/train_lm.py --arch rwkv6-3b --steps 30
+"""
+import argparse
+
+from repro.configs import get_smoke, list_configs
+from repro.launch.train import train_lm
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen3-moe-30b-a3b",
+                    choices=[c for c in list_configs() if "dit" not in c])
+    ap.add_argument("--steps", type=int, default=30)
+    args = ap.parse_args()
+    cfg = get_smoke(args.arch)
+    train_lm(cfg, steps=args.steps, batch=4, seq=64,
+             ckpt=f"results/{cfg.name}.ckpt", log_every=5)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,54 @@
+"""Checkpointing: msgpack serialization of arbitrary pytrees of arrays.
+
+No orbax in this container; this is a compact, dependency-light format:
+a manifest (tree structure + dtypes/shapes) and raw little-endian buffers.
+"""
+from __future__ import annotations
+
+import os
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import msgpack
+import numpy as np
+
+
+def _flatten(tree):
+    leaves, treedef = jax.tree_util.tree_flatten(tree)
+    return leaves, treedef
+
+
+def save_checkpoint(path: str, tree: Any, *, step: int = 0) -> None:
+    leaves, treedef = _flatten(tree)
+    manifest = {
+        "step": step,
+        "treedef": str(treedef),
+        "leaves": [
+            {"dtype": str(np.asarray(l).dtype), "shape": list(np.asarray(l).shape)}
+            for l in leaves
+        ],
+    }
+    os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+    with open(path, "wb") as f:
+        f.write(msgpack.packb(manifest))
+        for l in leaves:
+            arr = np.asarray(jax.device_get(l))
+            f.write(msgpack.packb(arr.tobytes()))
+
+
+def load_checkpoint(path: str, like: Any) -> Any:
+    """Restore into the structure of ``like`` (shapes/dtypes must match)."""
+    leaves, treedef = _flatten(like)
+    with open(path, "rb") as f:
+        unpacker = msgpack.Unpacker(f, max_buffer_size=2**31)
+        manifest = unpacker.unpack()
+        out = []
+        for meta, ref in zip(manifest["leaves"], leaves):
+            buf = unpacker.unpack()
+            arr = np.frombuffer(buf, dtype=meta["dtype"]).reshape(meta["shape"])
+            if tuple(arr.shape) != tuple(np.asarray(ref).shape):
+                raise ValueError(
+                    f"checkpoint shape {arr.shape} != expected {np.asarray(ref).shape}")
+            out.append(jnp.asarray(arr, dtype=np.asarray(ref).dtype))
+    return jax.tree_util.tree_unflatten(treedef, out)

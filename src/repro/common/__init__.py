@@ -1,0 +1,6 @@
+from repro.common.config import (
+    ModelConfig,
+    ShapeConfig,
+    INPUT_SHAPES,
+    HW,
+)

@@ -1,0 +1,107 @@
+"""Sharding rules: parameter / activation / cache PartitionSpecs.
+
+Conventions (see DESIGN.md §6):
+  * batch        -> ("pod","data") when present, else ("data",)
+  * heads / ffn-hidden / vocab / experts -> "model"
+  * optimizer states additionally ZeRO-shard their largest replicated dim
+    over "data" when divisible.
+"""
+from __future__ import annotations
+
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+
+def batch_spec(mesh) -> Any:
+    return ("pod", "data") if "pod" in mesh.axis_names else "data"
+
+
+def _divisible(dim: int, mesh, axis: str) -> bool:
+    return axis in mesh.axis_names and dim % mesh.shape[axis] == 0
+
+
+def param_spec(path: str, shape, mesh) -> P:
+    """Rule-based parameter sharding.
+
+    ``path`` is a '/'-joined pytree path; rules match on leaf names chosen by
+    the model code (the models name their weights consistently).
+    """
+    name = path.split("/")[-1]
+    ndim = len(shape)
+    m = "model"
+
+    def ok(i):
+        return _divisible(shape[i], mesh, m)
+
+    # Expert-parallel weights over model: the experts dim is dim 0 for bare
+    # (E, d, f) tensors and dim 1 when stacked per layer (L, E, d, f).
+    if name.startswith(("experts_", "moe_")) or "expert" in path:
+        e_dim = 1 if ndim >= 4 else 0
+        if ndim >= 2 and ok(e_dim):
+            return P(*[m if i == e_dim else None for i in range(ndim)])
+
+    if name in ("wq", "wkv_a", "w_qkv", "wk", "wv") or name in ("wq_s", "wk_s", "wv_s"):
+        # (d_model, heads*head_dim): shard output dim
+        if ndim == 2 and ok(1):
+            return P(None, m)
+    if name == "wo":
+        if ndim == 2 and ok(0):
+            return P(m, None)
+    if name in ("w_in", "w_gate", "w_up"):
+        if ndim == 2 and ok(1):
+            return P(None, m)
+    if name in ("w_out", "w_down"):
+        if ndim == 2 and ok(0):
+            return P(m, None)
+    if name in ("embed", "unembed", "lm_head"):
+        # (vocab, d) — shard vocab
+        if ndim == 2 and ok(0):
+            return P(m, None)
+    # SSM inner projections
+    if name in ("w_xz", "w_inner_up"):
+        if ndim == 2 and ok(1):
+            return P(None, m)
+    if name in ("w_inner_down",):
+        if ndim == 2 and ok(0):
+            return P(m, None)
+    # Stacked-per-layer params (leading num_layers dim from lax.scan stacking):
+    if ndim >= 3:
+        # try to shard the largest trailing dim that divides
+        dims = sorted(range(1, ndim), key=lambda i: -shape[i])
+        for i in dims:
+            if ok(i):
+                return P(*[m if j == i else None for j in range(ndim)])
+    if ndim == 2:
+        for i in (1, 0):
+            if ok(i):
+                return P(*[m if j == i else None for j in range(2)])
+    return P(*([None] * ndim))
+
+
+def tree_param_specs(params, mesh):
+    """PartitionSpec pytree for a parameter pytree."""
+    flat, treedef = jax.tree_util.tree_flatten_with_path(params)
+    specs = []
+    for path, leaf in flat:
+        spath = "/".join(str(getattr(k, "key", getattr(k, "idx", k))) for k in path)
+        specs.append(param_spec(spath, jnp.shape(leaf), mesh))
+    return jax.tree_util.tree_unflatten(treedef, specs)
+
+
+def opt_state_spec(pspec: P, shape, mesh) -> P:
+    """ZeRO: additionally shard the largest None dim of the param spec over data."""
+    parts = list(pspec)
+    parts += [None] * (len(shape) - len(parts))
+    cand = [i for i, p in enumerate(parts)
+            if p is None and _divisible(shape[i], mesh, "data")]
+    if cand:
+        i = max(cand, key=lambda i: shape[i])
+        parts[i] = "data"
+    return P(*parts)
+
+
+def named(mesh, spec) -> NamedSharding:
+    return NamedSharding(mesh, spec if isinstance(spec, P) else P(spec))

@@ -1,0 +1,31 @@
+"""Config registry: every assigned architecture + the paper's own models."""
+from importlib import import_module
+
+_MODULES = {
+    "gemma2-9b": "gemma2_9b",
+    "rwkv6-3b": "rwkv6_3b",
+    "qwen3-moe-30b-a3b": "qwen3_moe_30b_a3b",
+    "deepseek-67b": "deepseek_67b",
+    "stablelm-12b": "stablelm_12b",
+    "qwen3-32b": "qwen3_32b",
+    "zamba2-7b": "zamba2_7b",
+    "dbrx-132b": "dbrx_132b",
+    "llama-3.2-vision-11b": "llama32_vision_11b",
+    "seamless-m4t-large-v2": "seamless_m4t_large_v2",
+    "dit-moe-xl": "dit_moe_xl",
+    "dit-moe-g": "dit_moe_g",
+}
+
+ASSIGNED_ARCHS = list(_MODULES)[:10]
+
+
+def get_config(name: str):
+    return import_module(f"repro.configs.{_MODULES[name]}").config()
+
+
+def get_smoke(name: str):
+    return import_module(f"repro.configs.{_MODULES[name]}").smoke()
+
+
+def list_configs():
+    return list(_MODULES)

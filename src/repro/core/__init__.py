@@ -1,0 +1,10 @@
+"""DICE core: staleness-centric optimizations for parallel MoE diffusion inference.
+
+moe.py        — capacity-based expert parallelism (dispatch/combine all-to-alls)
+schedules.py  — SYNC / DISPLACED / INTERWEAVED / DICE step schedules
+staleness.py  — staleness buffers threaded through the sampling loop
+selective.py  — layer-level selective synchronization policies
+conditional.py— token-level conditional communication (router-score gated)
+patch_parallel.py — DistriFusion baseline (displaced patch parallelism)
+"""
+from repro.core.schedules import Schedule, DiceConfig

@@ -1,0 +1,76 @@
+"""Token-level Conditional Communication (paper Sec. 4.3, Alg. 4).
+
+MoE output is the router-score-weighted sum y_i = sum_e s_i^e h_i^e, so a
+staleness perturbation on h propagates with magnitude proportional to the
+score (paper Eq. 1).  Therefore: the top-1 (token, expert) pair is always
+transmitted fresh; lower-ranked pairs reuse their cached expert output and
+refresh only every ``stride`` steps.  Training-free.
+
+In the serving engine this is realised with two compiled step variants:
+"refresh" steps dispatch all K ranks (full capacity), "light" steps
+dispatch only rank-0 pairs into a K-times-smaller buffer — the all-to-all
+payload genuinely shrinks (visible in the lowered HLO), unlike a masked
+send of a fixed-size buffer.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def is_refresh_step(step: int, stride: int) -> bool:
+    return stride <= 1 or (step % stride == 0)
+
+
+def fresh_mask(step: int, num_tokens: int, k: int, *, stride: int,
+               policy: str = "low",
+               key: Optional[jax.Array] = None) -> Optional[jnp.ndarray]:
+    """(T, K) bool: which (token, rank) pairs are transmitted this step.
+
+    policy "low"  — deprioritise low-score (non-top-1) pairs   [paper's choice]
+    policy "high" — deprioritise the top-1 pair                 [ablation]
+    policy "random" — deprioritise a random half of pairs       [ablation]
+    Returns None on refresh steps (everything fresh).
+    """
+    if is_refresh_step(step, stride):
+        return None
+    ranks = jnp.arange(k)[None, :].repeat(num_tokens, axis=0)
+    if policy == "low":
+        return ranks == 0
+    if policy == "high":
+        return ranks != 0
+    if policy == "random":
+        assert key is not None
+        return jax.random.bernoulli(key, 0.5, (num_tokens, k))
+    raise ValueError(f"unknown cond_policy: {policy}")
+
+
+def effective_k(step: int, k: int, *, stride: int, policy: str = "low") -> int:
+    """Ranks actually dispatched this step (sizes the dispatch buffer)."""
+    if is_refresh_step(step, stride):
+        return k
+    if policy == "low":
+        return 1
+    if policy == "high":
+        return k - 1
+    return max(1, k // 2)          # random: expect half
+
+
+def comm_volume_fraction(k: int, stride: int, policy: str = "low") -> float:
+    """Long-run mean all-to-all volume relative to full dispatch."""
+    if stride <= 1:
+        return 1.0
+    kf = {"low": 1, "high": k - 1, "random": k / 2}[policy]
+    # refresh step sends k ranks, the other (stride-1) steps send kf ranks
+    return (k + (stride - 1) * kf) / (stride * k)
+
+
+def update_cache(h_cache: Optional[jnp.ndarray],
+                 pair_vals: jnp.ndarray,
+                 mask: Optional[jnp.ndarray]) -> jnp.ndarray:
+    """Keep fresh pair outputs, retain cached values for stale pairs."""
+    if mask is None or h_cache is None:
+        return pair_vals
+    return jnp.where(mask[..., None], pair_vals, h_cache)

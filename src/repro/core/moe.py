@@ -1,0 +1,246 @@
+"""Capacity-based Mixture-of-Experts with expert parallelism.
+
+This is the substrate the paper's staleness schedules operate on.  The
+dispatch path is sort-based (MaxText-style), never materialising the
+GShard (T, E, C) one-hot tensors:
+
+  1. top-k routing -> (token, rank) -> expert assignments,
+  2. stable-sort pairs by expert, position-in-expert via group offsets,
+  3. scatter into a static (E, capacity, d) buffer (overflow pairs drop),
+  4. expert-parallel all-to-all over the "model" mesh axis (dispatch),
+  5. grouped expert FFN on local experts,
+  6. all-to-all back (combine) + score-weighted un-permute.
+
+Steps 4/6 are the two collectives the paper identifies as the bottleneck
+(60-80% of inference time); every staleness optimisation in repro.core
+re-schedules *when* their results are consumed.
+
+``fresh_mask`` / ``h_cache`` implement the paper's Conditional
+Communication (Sec 4.3 / Alg 4): pairs whose mask is False are NOT
+dispatched (they do not occupy buffer capacity -> smaller all-to-all) and
+their contribution to the weighted sum comes from the cached expert output
+of an earlier step.
+"""
+from __future__ import annotations
+
+import math
+from typing import NamedTuple, Optional
+
+import jax
+import jax.ad_checkpoint
+import jax.numpy as jnp
+
+from repro.common.config import ModelConfig
+from repro.models.layers import dense_init
+
+
+# ---------------------------------------------------------------------------
+# params
+# ---------------------------------------------------------------------------
+def moe_init(key, cfg: ModelConfig, *, dtype=jnp.bfloat16):
+    d, f, E = cfg.d_model, cfg.expert_d_ff, cfg.num_experts
+    ks = jax.random.split(key, 7)
+    p = {
+        "router": dense_init(ks[0], (d, E), dtype=jnp.float32),
+        "experts_gate": dense_init(ks[1], (E, d, f), dtype=dtype),
+        "experts_up": dense_init(ks[2], (E, d, f), dtype=dtype),
+        "experts_down": dense_init(ks[3], (E, f, d), dtype=dtype),
+    }
+    if cfg.num_shared_experts:
+        fs = f * cfg.num_shared_experts
+        p["shared_gate"] = dense_init(ks[4], (d, fs), dtype=dtype)
+        p["shared_up"] = dense_init(ks[5], (d, fs), dtype=dtype)
+        p["shared_down"] = dense_init(ks[6], (fs, d), dtype=dtype)
+    return p
+
+
+def default_capacity(num_tokens: int, cfg: ModelConfig, *,
+                     k: Optional[int] = None, ep_degree: int = 1,
+                     floor: int = 8) -> int:
+    """Static per-expert capacity (rounded up to ``floor`` — 8 keeps TPU
+    lane alignment; decode paths may lower it since the padded slots turn
+    directly into wasted expert GEMM flops)."""
+    k = cfg.experts_per_token if k is None else k
+    c = math.ceil(num_tokens * k * cfg.capacity_factor / cfg.num_experts)
+    return max(floor, -(-c // floor) * floor)
+
+
+# ---------------------------------------------------------------------------
+# routing + dispatch plan
+# ---------------------------------------------------------------------------
+class DispatchPlan(NamedTuple):
+    slot: jnp.ndarray        # (T*K,) destination slot e*C+pos, == E*C if dropped
+    t_sorted: jnp.ndarray    # (T*K,) source token per sorted pair
+    inv_order: jnp.ndarray   # (T*K,) unsort permutation
+    keep: jnp.ndarray        # (T*K,) bool, sorted order
+    capacity: jnp.ndarray    # () static int
+    counts: jnp.ndarray      # (E,) tokens routed per expert (pre-drop)
+
+
+def route(p, x, cfg: ModelConfig, *, key=None):
+    """Router probabilities + top-k selection.  x: (T, d)."""
+    logits = x.astype(jnp.float32) @ p["router"]
+    if key is not None and cfg.router_jitter > 0:
+        logits += cfg.router_jitter * jax.random.normal(key, logits.shape)
+    probs = jax.nn.softmax(logits, axis=-1)
+    scores, idx = jax.lax.top_k(probs, cfg.experts_per_token)
+    return probs, scores, idx
+
+
+def make_plan(idx, E: int, capacity: int,
+              fresh_mask: Optional[jnp.ndarray] = None) -> DispatchPlan:
+    """Sort-based dispatch plan.  idx: (T, K) expert ids."""
+    T, K = idx.shape
+    flat_e = idx.reshape(-1)
+    flat_t = jnp.repeat(jnp.arange(T), K)
+    if fresh_mask is not None:
+        # Stale pairs never enter the buffer: route them to a virtual expert E
+        # so they sort to the end and are dropped from dispatch entirely.
+        flat_e = jnp.where(fresh_mask.reshape(-1), flat_e, E)
+    order = jnp.argsort(flat_e, stable=True)
+    e_sorted = flat_e[order]
+    t_sorted = flat_t[order]
+    counts = jnp.bincount(jnp.clip(flat_e, 0, E), length=E + 1)[:E]
+    starts = jnp.cumsum(counts) - counts
+    pos = jnp.arange(T * K) - starts[jnp.clip(e_sorted, 0, E - 1)]
+    keep = (pos < capacity) & (e_sorted < E)
+    slot = jnp.where(keep, e_sorted * capacity + pos, E * capacity)
+    inv_order = jnp.argsort(order, stable=True)
+    return DispatchPlan(slot=slot, t_sorted=t_sorted, inv_order=inv_order,
+                        keep=keep, capacity=jnp.asarray(capacity),
+                        counts=counts)
+
+
+def dispatch(x, plan: DispatchPlan, E: int, capacity: int):
+    """Scatter tokens into the (E, C, d) dispatch buffer."""
+    d = x.shape[-1]
+    vals = x[plan.t_sorted] * plan.keep[:, None].astype(x.dtype)
+    buf = jnp.zeros((E * capacity, d), x.dtype)
+    buf = buf.at[plan.slot].set(vals, mode="drop")
+    return buf.reshape(E, capacity, d)
+
+
+def combine(buf_out, plan: DispatchPlan, scores, T: int, *,
+            h_cache: Optional[jnp.ndarray] = None,
+            fresh_mask: Optional[jnp.ndarray] = None):
+    """Score-weighted un-permute.  buf_out: (E, C, d).
+
+    Returns (y, pair_vals) where pair_vals (T, K, d) are the per-pair expert
+    outputs actually used (fresh or cached) — the Conditional Communication
+    cache for the next step.
+    """
+    E, C, d = buf_out.shape
+    flat = buf_out.reshape(E * C, d)
+    gathered = flat.at[plan.slot].get(mode="fill", fill_value=0.0)
+    gathered = gathered * plan.keep[:, None].astype(flat.dtype)
+    K = scores.shape[-1]
+    pair_vals = gathered[plan.inv_order].reshape(T, K, d)
+    if h_cache is not None and fresh_mask is not None:
+        pair_vals = jnp.where(fresh_mask[..., None], pair_vals,
+                              h_cache.astype(pair_vals.dtype))
+    y = jnp.einsum("tk,tkd->td", scores.astype(jnp.float32),
+                   pair_vals.astype(jnp.float32))
+    return y, pair_vals
+
+
+# ---------------------------------------------------------------------------
+# expert FFN (grouped, gated) — jnp reference; Pallas kernel in repro.kernels
+# ---------------------------------------------------------------------------
+def expert_ffn(p, buf, *, act: str = "silu", use_pallas: bool = False):
+    """buf: (E_local, C, d) -> (E_local, C, d)."""
+    if use_pallas:
+        from repro.kernels.ops import expert_ffn_pallas
+        return expert_ffn_pallas(buf, p["experts_gate"], p["experts_up"],
+                                 p["experts_down"], act=act)
+    fn = jax.nn.silu if act == "silu" else jax.nn.gelu
+    h = fn(jnp.einsum("ecd,edf->ecf", buf, p["experts_gate"]))
+    h = h * jnp.einsum("ecd,edf->ecf", buf, p["experts_up"])
+    return jnp.einsum("ecf,efd->ecd", h, p["experts_down"])
+
+
+def shared_expert(p, x, *, act: str = "silu"):
+    fn = jax.nn.silu if act == "silu" else jax.nn.gelu
+    return (fn(x @ p["shared_gate"]) * (x @ p["shared_up"])) @ p["shared_down"]
+
+
+# ---------------------------------------------------------------------------
+# load-balance aux loss (switch-style)
+# ---------------------------------------------------------------------------
+def load_balance_loss(probs, idx, E: int):
+    T, K = idx.shape
+    frac_routed = jnp.mean(
+        jax.nn.one_hot(idx, E, dtype=jnp.float32).sum(1), axis=0)  # (E,)
+    mean_prob = jnp.mean(probs, axis=0)
+    return E * jnp.sum(frac_routed / K * mean_prob)
+
+
+# ---------------------------------------------------------------------------
+# full forward — single device or expert-parallel
+# ---------------------------------------------------------------------------
+class MoEAux(NamedTuple):
+    lb_loss: jnp.ndarray
+    dropped_frac: jnp.ndarray
+    dispatch_bytes: jnp.ndarray    # per-device all-to-all payload (one way)
+    pair_vals: Optional[jnp.ndarray]
+    scores: Optional[jnp.ndarray]
+
+
+def moe_forward(p, x, cfg: ModelConfig, *,
+                capacity: Optional[int] = None,
+                fresh_mask: Optional[jnp.ndarray] = None,
+                h_cache: Optional[jnp.ndarray] = None,
+                ep_axis: Optional[str] = None,
+                key=None,
+                use_pallas: bool = False,
+                want_pair_vals: bool = False):
+    """MoE layer forward.  x: (T, d) flat tokens (per-device shard if EP).
+
+    ``ep_axis``: mesh axis name for expert parallelism — call inside
+    shard_map with experts sharded over that axis; the two lax.all_to_all
+    calls are the paper's dispatch/combine collectives.
+    """
+    T, d = x.shape
+    E = cfg.num_experts
+    probs, scores, idx = route(p, x, cfg, key=key)
+    if capacity is None:
+        capacity = default_capacity(T, cfg)
+    plan = make_plan(idx, E, capacity, fresh_mask=fresh_mask)
+    buf = dispatch(x, plan, E, capacity)                        # (E, C, d)
+
+    if ep_axis is None:
+        buf_out = expert_ffn(p, buf, act=cfg.act, use_pallas=use_pallas)
+    else:
+        n = jax.lax.axis_size(ep_axis)
+        e_loc = E // n
+        # ---- dispatch all-to-all (collective #1) -------------------------
+        # NOTE: the CPU backend's float-normalization pass upcasts bf16
+        # collectives to f32 in the lowered HLO; on TPU the wire dtype is
+        # bf16 (repro.launch.hlo_cost applies the bf16-wire correction).
+        b = buf.reshape(n, e_loc, capacity, d)
+        b = jax.lax.all_to_all(b, ep_axis, split_axis=0, concat_axis=0,
+                               tiled=True)                      # (n, e_loc, C, d)
+        # named so remat policies can keep the received buffer and avoid
+        # re-running the dispatch all-to-all during the backward pass
+        b = jax.ad_checkpoint.checkpoint_name(b, "ep_recv")
+        b = jnp.moveaxis(b, 0, 1).reshape(e_loc, n * capacity, d)
+        local = {k: v for k, v in p.items() if k.startswith("experts_")}
+        b = expert_ffn(local, b, act=cfg.act, use_pallas=use_pallas)
+        # ---- combine all-to-all (collective #2) --------------------------
+        b = jnp.moveaxis(b.reshape(e_loc, n, capacity, d), 1, 0)
+        b = jax.lax.all_to_all(b.astype(x.dtype), ep_axis, split_axis=0,
+                               concat_axis=0, tiled=True)
+        buf_out = b.reshape(E, capacity, d)
+
+    y, pair_vals = combine(buf_out, plan, scores, T,
+                           h_cache=h_cache, fresh_mask=fresh_mask)
+    if cfg.num_shared_experts:
+        y = y + shared_expert(p, x, act=cfg.act).astype(y.dtype)
+
+    aux = MoEAux(
+        lb_loss=load_balance_loss(probs, idx, E),
+        dropped_frac=1.0 - jnp.mean(plan.keep.astype(jnp.float32)),
+        dispatch_bytes=jnp.asarray(E * capacity * d * jnp.dtype(x.dtype).itemsize),
+        pair_vals=pair_vals if (want_pair_vals or fresh_mask is not None) else None,
+        scores=scores if (want_pair_vals or fresh_mask is not None) else None,
+    )
+    return y.astype(x.dtype), aux

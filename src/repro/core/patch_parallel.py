@@ -1,0 +1,84 @@
+"""DistriFusion baseline: displaced *patch* (sequence) parallelism.
+
+DistriFusion (Li et al., CVPR'24) replicates the full model on every device
+and splits the latent patches; each device attends with FRESH keys/values
+for its own patch shard and STALE (previous diffusion step) activations for
+every other shard, gathered asynchronously.  1-step staleness on remote
+patches, but the model is replicated (the paper's Fig. 9: DiT-MoE-G at
+~33 GB params does not even fit) and every layer carries a full-sequence
+activation buffer — the memory cost DICE's Fig. 8/9 comparison highlights.
+
+We reproduce the numerics: queries of shard p attend to
+KV[owner == p] = fresh, KV[owner != p] = step s-1.  State per attention
+layer: the full-sequence (pre-attention, post-qkv) activations of the
+previous step.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclass
+class PatchParallelState:
+    """Per-attention-layer buffer of last step's full-sequence K and V."""
+    k_prev: Optional[jnp.ndarray] = None   # (B, S, KVH, Dh)
+    v_prev: Optional[jnp.ndarray] = None
+
+    def bytes(self) -> int:
+        tot = 0
+        for a in (self.k_prev, self.v_prev):
+            if a is not None:
+                tot += a.size * a.dtype.itemsize
+        return tot
+
+
+jax.tree_util.register_dataclass(
+    PatchParallelState, data_fields=["k_prev", "v_prev"], meta_fields=[])
+
+
+def shard_owner(seq_len: int, n_dev: int) -> jnp.ndarray:
+    """(S,) owner device id per patch position (contiguous shards)."""
+    per = -(-seq_len // n_dev)
+    return jnp.minimum(jnp.arange(seq_len) // per, n_dev - 1)
+
+
+def displaced_patch_attention(q, k, v, state: PatchParallelState, *,
+                              n_dev: int, warmup: bool):
+    """Bidirectional attention with per-shard stale remote KV.
+
+    q,k,v: (B, S, H|KVH, Dh).  Returns (out, new_state).  During warmup the
+    remote KV is fresh (synchronized cold-start steps).
+    """
+    B, S, H, Dh = q.shape
+    KVH = k.shape[2]
+    owner = shard_owner(S, n_dev)                      # (S,)
+    if warmup or state.k_prev is None:
+        k_stale, v_stale = k, v
+    else:
+        k_stale, v_stale = state.k_prev, state.v_prev
+
+    # For queries owned by device p: keys at positions owned by p are fresh,
+    # all others come from the previous step's buffer.
+    G = H // KVH
+    scale = 1.0 / jnp.sqrt(jnp.asarray(Dh, jnp.float32))
+    qg = q.reshape(B, S, KVH, G, Dh).astype(jnp.float32) * scale
+
+    def per_device(p):
+        sel = (owner == p)[None, :, None, None]
+        k_mix = jnp.where(sel, k, k_stale).astype(jnp.float32)
+        v_mix = jnp.where(sel, v, v_stale).astype(jnp.float32)
+        s = jnp.einsum("bqhgd,bkhd->bhgqk", qg, k_mix)
+        prob = jax.nn.softmax(s, axis=-1)
+        o = jnp.einsum("bhgqk,bkhd->bqhgd", prob, v_mix)
+        return o.reshape(B, S, H, Dh)
+
+    outs = jax.vmap(per_device)(jnp.arange(n_dev))     # (P, B, S, H, Dh)
+    # each position takes the output computed by its owner device
+    onehot = jax.nn.one_hot(owner, n_dev, dtype=outs.dtype)        # (S, P)
+    out = jnp.einsum("pbshd,sp->bshd", outs, onehot)
+    new = PatchParallelState(k_prev=k, v_prev=v)
+    return out.astype(q.dtype), new

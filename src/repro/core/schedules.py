@@ -1,0 +1,76 @@
+"""Step-level parallelism schedules (paper Fig. 2) and the DICE config.
+
+Staleness (paper Sec. 1): the step-distance between when a MoE layer's
+input activations were produced and the step whose output consumes them.
+
+  SYNC         staleness 0   blocking dispatch+combine     (baseline EP)
+  DISPLACED    staleness 2   both collectives deferred     (DistriFusion-style)
+  INTERWEAVED  staleness 1   dispatch in-step, combine deferred (ours, free)
+  DICE         staleness 1   + selective sync + conditional communication
+"""
+from __future__ import annotations
+
+import enum
+from dataclasses import dataclass
+
+
+class Schedule(enum.Enum):
+    SYNC = "sync"
+    DISPLACED = "displaced"
+    INTERWEAVED = "interweaved"
+    DICE = "dice"
+    # supplement Sec. 8: the staggered-batch alternative the paper REJECTED —
+    # 1-step staleness like interweaved, but persistent dispatch AND combine
+    # buffers (2x memory) and halved effective GEMM batch (utilization loss)
+    STAGGERED_BATCH = "staggered_batch"
+
+    @property
+    def step_staleness(self) -> int:
+        return {"sync": 0, "displaced": 2, "interweaved": 1, "dice": 1,
+                "staggered_batch": 1}[self.value]
+
+    @property
+    def num_buffers(self) -> int:
+        """Persistent per-layer buffers (paper: interweaved halves memory)."""
+        return {"sync": 0, "displaced": 2, "interweaved": 1, "dice": 1,
+                "staggered_batch": 2}[self.value]
+
+
+@dataclass(frozen=True)
+class DiceConfig:
+    schedule: Schedule = Schedule.DICE
+    # -- layer level: selective synchronization ------------------------------
+    sync_policy: str = "deep"        # none | deep | shallow | staggered
+    sync_fraction: float = 0.5       # fraction of layers protected
+    # -- token level: conditional communication ------------------------------
+    cond_comm: bool = True
+    cond_stride: int = 2             # non-top-1 pairs refresh every n steps
+    cond_policy: str = "low"         # low | high | random (ablation Table 4)
+    # -- cold start -----------------------------------------------------------
+    warmup_steps: int = 2            # synchronized steps post cold start
+
+    @staticmethod
+    def sync_ep() -> "DiceConfig":
+        return DiceConfig(schedule=Schedule.SYNC, sync_policy="none",
+                          cond_comm=False, warmup_steps=0)
+
+    @staticmethod
+    def displaced() -> "DiceConfig":
+        return DiceConfig(schedule=Schedule.DISPLACED, sync_policy="none",
+                          cond_comm=False)
+
+    @staticmethod
+    def interweaved() -> "DiceConfig":
+        return DiceConfig(schedule=Schedule.INTERWEAVED, sync_policy="none",
+                          cond_comm=False)
+
+    @staticmethod
+    def dice(*, sync_policy="deep", cond_stride=2, cond_policy="low") -> "DiceConfig":
+        return DiceConfig(schedule=Schedule.DICE, sync_policy=sync_policy,
+                          cond_comm=True, cond_stride=cond_stride,
+                          cond_policy=cond_policy)
+
+    @staticmethod
+    def staggered_batch() -> "DiceConfig":
+        return DiceConfig(schedule=Schedule.STAGGERED_BATCH,
+                          sync_policy="none", cond_comm=False)

@@ -1,0 +1,37 @@
+"""Layer-level Selective Synchronization (paper Sec. 4.2).
+
+Deeper MoE layers handle high-level semantics and are more vulnerable to
+staleness; synchronizing only those recovers most of the quality at a
+fraction of the blocking cost.  Policies match the paper's ablation
+(Table 4): deep / shallow / staggered / none.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+
+def sync_layer_mask(policy: str, num_layers: int, *,
+                    fraction: float = 0.5) -> np.ndarray:
+    """Boolean (num_layers,): True = run this MoE layer synchronously."""
+    mask = np.zeros(num_layers, dtype=bool)
+    k = int(round(num_layers * fraction))
+    if policy == "none":
+        pass
+    elif policy == "deep":
+        mask[num_layers - k:] = True
+    elif policy == "shallow":
+        mask[:k] = True
+    elif policy == "staggered":
+        mask[1::2] = True
+        mask[:] = mask if mask.sum() == k else mask  # staggered = every other
+    elif policy == "all":
+        mask[:] = True
+    else:
+        raise ValueError(f"unknown sync policy: {policy}")
+    return mask
+
+
+def sync_overhead_fraction(policy: str, num_layers: int, *,
+                           fraction: float = 0.5) -> float:
+    """Fraction of MoE layers whose collectives block (latency model input)."""
+    return float(sync_layer_mask(policy, num_layers, fraction=fraction).mean())

@@ -1,0 +1,145 @@
+"""Staleness buffers: the functional JAX encoding of asynchronous execution.
+
+On GPUs the paper's schedules are built from async NCCL handles; the
+numerical effect is deterministic — *which step's activations each MoE
+layer consumes*.  We encode exactly that as per-layer state threaded
+through the sampling loop (DESIGN.md Sec. 2):
+
+  SYNC         y(s) = MoE(x(s))                      state: {}
+  DISPLACED    y(s) = MoE(x(s-2))                    state: {x_prev, y_buf}   (2 buffers)
+  INTERWEAVED  y(s) = MoE(x(s-1))                    state: {y_buf}           (1 buffer)
+  DICE         interweaved + deep layers sync + conditional-communication
+               cache of per-(token, rank) expert outputs
+
+The buffer counts reproduce the paper's memory claim (interweaved halves
+displaced's persistent buffers); ``state_bytes`` makes it measurable.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, replace
+from typing import Dict, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.common.config import ModelConfig
+from repro.core import conditional
+from repro.core.moe import MoEAux, default_capacity, moe_forward
+from repro.core.schedules import DiceConfig, Schedule
+from repro.core.selective import sync_layer_mask
+
+
+@dataclass
+class MoELayerState:
+    """Per-MoE-layer staleness buffers (pytree)."""
+    y_buf: Optional[jnp.ndarray] = None     # (T,d) combined output of step s-1
+    x_prev: Optional[jnp.ndarray] = None    # (T,d) displaced-only: step s-1 tokens
+    h_cache: Optional[jnp.ndarray] = None   # (T,K,d) conditional-comm cache
+
+    def bytes(self) -> int:
+        tot = 0
+        for a in (self.y_buf, self.x_prev, self.h_cache):
+            if a is not None:
+                tot += a.size * a.dtype.itemsize
+        return tot
+
+
+jax.tree_util.register_dataclass(
+    MoELayerState, data_fields=["y_buf", "x_prev", "h_cache"], meta_fields=[])
+
+
+def init_layer_states(num_moe_layers: int) -> Dict[int, MoELayerState]:
+    return {i: MoELayerState() for i in range(num_moe_layers)}
+
+
+def state_bytes(states: Dict[int, MoELayerState]) -> int:
+    return sum(s.bytes() for s in states.values())
+
+
+def moe_step(p, x, cfg: ModelConfig, dcfg: DiceConfig,
+             state: MoELayerState, *,
+             moe_layer_idx: int, num_moe_layers: int, step_idx: int,
+             key=None, ep_axis: Optional[str] = None,
+             use_pallas: bool = False):
+    """One MoE layer under a staleness schedule.
+
+    x: (T, d) flat tokens.  ``step_idx`` counts diffusion-loop iterations
+    (0-based); the first ``dcfg.warmup_steps`` run synchronously (paper:
+    "N synchronized steps post cold start").  Returns (y, new_state, aux).
+    """
+    sched = dcfg.schedule
+    warmup = step_idx < dcfg.warmup_steps
+    sync_mask = sync_layer_mask(dcfg.sync_policy, num_moe_layers,
+                                fraction=dcfg.sync_fraction)
+    layer_sync = bool(sync_mask[moe_layer_idx]) and sched == Schedule.DICE
+
+    run_sync = (sched == Schedule.SYNC) or warmup or layer_sync
+
+    # ---- conditional communication mask / capacity --------------------------
+    mask = None
+    capacity = None
+    if (sched == Schedule.DICE and dcfg.cond_comm and not run_sync):
+        k = cfg.experts_per_token
+        mask = conditional.fresh_mask(step_idx, x.shape[0], k,
+                                      stride=dcfg.cond_stride,
+                                      policy=dcfg.cond_policy, key=key)
+        k_eff = conditional.effective_k(step_idx, k, stride=dcfg.cond_stride,
+                                        policy=dcfg.cond_policy)
+        capacity = default_capacity(x.shape[0], cfg, k=k_eff)
+
+    want_cache = sched == Schedule.DICE and dcfg.cond_comm
+
+    def run(inp, m=None, cache=None):
+        return moe_forward(p, inp, cfg, capacity=capacity, fresh_mask=m,
+                           h_cache=cache, ep_axis=ep_axis, key=key,
+                           use_pallas=use_pallas, want_pair_vals=want_cache)
+
+    if run_sync:
+        y, aux = run(x)
+        new = MoELayerState(
+            y_buf=y if sched.num_buffers >= 1 else None,
+            x_prev=x if sched == Schedule.DISPLACED else None,
+            h_cache=aux.pair_vals if want_cache else None)
+        return y, new, aux
+
+    if sched == Schedule.DISPLACED:
+        # experts process tokens dispatched at s-1; their combine lands at s+1,
+        # so the output consumed *now* is the buffered result of x(s-2).
+        y_new, aux = run(state.x_prev)
+        out = state.y_buf
+        new = MoELayerState(y_buf=y_new, x_prev=x, h_cache=None)
+        return out, new, aux
+
+    if sched == Schedule.STAGGERED_BATCH:
+        # supplement Sec. 8: sub-batches interleave so each half overlaps the
+        # other's communication — 1-step staleness like interweaved, but BOTH
+        # the dispatched tokens and the combined results persist (2 buffers,
+        # the memory cost the paper rejected it for), and each expert GEMM
+        # runs at half the effective batch (utilization cost).
+        half = x.shape[0] // 2
+        y0, aux0 = run(x[:half])
+        y1, aux1 = run(x[half:])
+        y_new = jnp.concatenate([y0, y1], axis=0)
+        out = state.y_buf
+        new = MoELayerState(y_buf=y_new, x_prev=x, h_cache=None)
+        aux = MoEAux(lb_loss=(aux0.lb_loss + aux1.lb_loss) / 2,
+                     dropped_frac=(aux0.dropped_frac + aux1.dropped_frac) / 2,
+                     dispatch_bytes=aux0.dispatch_bytes + aux1.dispatch_bytes,
+                     pair_vals=None, scores=None)
+        return out, new, aux
+
+    # INTERWEAVED / DICE: dispatch of x(s) completes within step s (overlapped
+    # with the previous layer's expert compute); only the combine is deferred,
+    # so the output consumed now is the buffered result of x(s-1).
+    y_new, aux = run(x, mask, state.h_cache if want_cache else None)
+    out = state.y_buf
+    new = MoELayerState(
+        y_buf=y_new, x_prev=None,
+        h_cache=conditional.update_cache(state.h_cache, aux.pair_vals, mask)
+        if want_cache else None)
+    return out, new, aux
+
+
+def staleness_of(schedule: Schedule) -> int:
+    return schedule.step_staleness

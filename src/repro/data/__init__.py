@@ -1,0 +1,5 @@
+from repro.data.synthetic import (
+    token_batches,
+    latent_batches,
+    gaussian_mixture_latents,
+)

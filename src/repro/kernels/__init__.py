@@ -1,0 +1,13 @@
+"""Pallas TPU kernels for the paper's compute hot spots.
+
+Each kernel ships as <name>.py (pl.pallas_call + explicit BlockSpec VMEM
+tiling), a jit'd wrapper in ops.py, and a pure-jnp oracle in ref.py used by
+the per-kernel shape/dtype-sweep tests (interpret mode on CPU):
+
+  expert_ffn       grouped expert gated-MLP over (E, capacity, d) dispatch
+                   buffers — the compute the paper's all-to-alls overlap
+  flash_attention  block-tiled online-softmax attention (causal, sliding
+                   window, logit softcap, GQA via index_map head mapping)
+  rwkv6_scan       RWKV-6 time-mix recurrence with the (DK, DK) state
+                   resident in VMEM scratch across the sequence
+"""

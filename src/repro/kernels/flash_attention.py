@@ -1,0 +1,110 @@
+"""Pallas TPU kernel: block-tiled online-softmax attention.
+
+Supports the whole assigned-arch variant space: causal masking, sliding
+windows (gemma2 local layers / long-context decode), attention-logit
+softcap (gemma2), and GQA (q-head blocks map onto their kv head via the
+index_map, so no KV duplication in VMEM).
+
+Grid (B, H, Sq/bq, Sk/bk) — the kv-block dimension is minor, so the m/l/acc
+running statistics live in VMEM scratch across it (reset at jk==0, flushed
+at jk==last).  Tiles are MXU-aligned: bq, bk multiples of 128 when the
+sequence allows, Dh is kept whole (<= 256 for every assigned arch).
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
+            scale, causal, window, softcap, bq, bk, n_jk):
+    iq = pl.program_id(2)
+    jk = pl.program_id(3)
+
+    @pl.when(jk == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q = q_ref[0, 0].astype(jnp.float32) * scale          # (bq, d)
+    k = k_ref[0, 0].astype(jnp.float32)                  # (bk, d)
+    v = v_ref[0, 0].astype(jnp.float32)
+    s = jnp.dot(q, k.T, preferred_element_type=jnp.float32)   # (bq, bk)
+    if softcap is not None:
+        s = softcap * jnp.tanh(s / softcap)
+
+    pq = iq * bq + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0)
+    pk = jk * bk + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+    mask = jnp.ones((bq, bk), jnp.bool_)
+    if causal:
+        mask &= pq >= pk
+    if window is not None:
+        mask &= (pq - pk) < window
+        if not causal:
+            mask &= (pk - pq) < window
+    s = jnp.where(mask, s, NEG_INF)
+
+    m_prev = m_ref[...]
+    m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1))
+    p = jnp.exp(s - m_new[:, None])
+    corr = jnp.exp(m_prev - m_new)
+    l_ref[...] = l_ref[...] * corr + jnp.sum(p, axis=-1)
+    acc_ref[...] = (acc_ref[...] * corr[:, None]
+                    + jnp.dot(p, v, preferred_element_type=jnp.float32))
+    m_ref[...] = m_new
+
+    @pl.when(jk == n_jk - 1)
+    def _flush():
+        l = jnp.maximum(l_ref[...], 1e-30)
+        o_ref[0, 0] = (acc_ref[...] / l[:, None]).astype(o_ref.dtype)
+
+
+def flash_attention(q, k, v, *, causal: bool = False, window=None,
+                    softcap=None, block_q: int = 128, block_k: int = 128,
+                    interpret: bool = False):
+    """q: (B, Sq, H, Dh); k, v: (B, Sk, KVH, Dh) -> (B, Sq, H, Dh)."""
+    B, Sq, H, Dh = q.shape
+    Sk, KVH = k.shape[1], k.shape[2]
+    G = H // KVH
+    bq = min(block_q, Sq)
+    bk = min(block_k, Sk)
+    assert Sq % bq == 0 and Sk % bk == 0, (Sq, bq, Sk, bk)
+    n_jk = Sk // bk
+    grid = (B, H, Sq // bq, n_jk)
+
+    # layout (B, H, Sq, Dh) for q/out and (B, KVH, Sk, Dh) for k/v
+    qt = q.transpose(0, 2, 1, 3)
+    kt = k.transpose(0, 2, 1, 3)
+    vt = v.transpose(0, 2, 1, 3)
+
+    out = pl.pallas_call(
+        functools.partial(_kernel, scale=1.0 / math.sqrt(Dh), causal=causal,
+                          window=window, softcap=softcap, bq=bq, bk=bk,
+                          n_jk=n_jk),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, bq, Dh), lambda b, h, iq, jk: (b, h, iq, 0)),
+            pl.BlockSpec((1, 1, bk, Dh),
+                         lambda b, h, iq, jk, G=G: (b, h // G, jk, 0)),
+            pl.BlockSpec((1, 1, bk, Dh),
+                         lambda b, h, iq, jk, G=G: (b, h // G, jk, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, bq, Dh),
+                               lambda b, h, iq, jk: (b, h, iq, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, H, Sq, Dh), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bq,), jnp.float32),
+            pltpu.VMEM((bq,), jnp.float32),
+            pltpu.VMEM((bq, Dh), jnp.float32),
+        ],
+        interpret=interpret,
+    )(qt, kt, vt)
+    return out.transpose(0, 2, 1, 3)

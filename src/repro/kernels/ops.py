@@ -1,0 +1,57 @@
+"""Jit'd public wrappers for the Pallas kernels.
+
+On CPU these run in interpret mode (kernel body executed in Python) —
+correctness validation only; on TPU they compile to Mosaic.  Model code
+opts in via ``use_pallas=True``; the dry-run and tests default to the
+pure-jnp references in ``repro.kernels.ref``.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+
+from repro.kernels.expert_ffn import expert_ffn_pallas as _expert_ffn
+from repro.kernels.flash_attention import flash_attention as _flash
+from repro.kernels.rwkv6_scan import rwkv6_scan_pallas as _rwkv6_scan
+
+
+def _on_cpu() -> bool:
+    return jax.default_backend() == "cpu"
+
+
+@partial(jax.jit, static_argnames=("act", "interpret"))
+def expert_ffn_pallas(buf, w_gate, w_up, w_down, *, act="silu",
+                      interpret=None):
+    interpret = _on_cpu() if interpret is None else interpret
+    C = buf.shape[1]
+    f = w_gate.shape[-1]
+    return _expert_ffn(buf, w_gate, w_up, w_down, act=act,
+                       block_c=min(128, C), block_f=min(512, f),
+                       interpret=interpret)
+
+
+def _pick_block(n: int, pref: int = 128) -> int:
+    """Largest power-of-two block <= pref that divides n."""
+    b = min(pref, n)
+    while n % b:
+        b //= 2
+    return max(b, 1)
+
+
+@partial(jax.jit, static_argnames=("causal", "window", "softcap",
+                                   "interpret"))
+def flash_attention_pallas(q, k, v, *, causal=False, window=None,
+                           softcap=None, interpret=None):
+    interpret = _on_cpu() if interpret is None else interpret
+    return _flash(q, k, v, causal=causal, window=window, softcap=softcap,
+                  block_q=_pick_block(q.shape[1]),
+                  block_k=_pick_block(k.shape[1]),
+                  interpret=interpret)
+
+
+@partial(jax.jit, static_argnames=("interpret",))
+def rwkv6_scan(r, k, v, logw, u, s0, *, interpret=None):
+    interpret = _on_cpu() if interpret is None else interpret
+    return _rwkv6_scan(r, k, v, logw, u, s0,
+                       chunk=_pick_block(r.shape[2]), interpret=interpret)

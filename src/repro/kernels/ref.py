@@ -1,0 +1,68 @@
+"""Pure-jnp oracles for the Pallas kernels (the ground truth the kernel
+tests assert against, and the implementation the CPU dry-run uses)."""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+
+def expert_ffn_ref(buf, w_gate, w_up, w_down, *, act: str = "silu"):
+    """Grouped gated-MLP over per-expert token buffers.
+
+    buf: (E, C, d); w_gate/w_up: (E, d, f); w_down: (E, f, d) -> (E, C, d).
+    """
+    fn = jax.nn.silu if act == "silu" else jax.nn.gelu
+    x = buf.astype(jnp.float32)
+    g = fn(jnp.einsum("ecd,edf->ecf", x, w_gate.astype(jnp.float32)))
+    u = jnp.einsum("ecd,edf->ecf", x, w_up.astype(jnp.float32))
+    out = jnp.einsum("ecf,efd->ecd", g * u, w_down.astype(jnp.float32))
+    return out.astype(buf.dtype)
+
+
+def flash_attention_ref(q, k, v, *, causal: bool = False, window=None,
+                        softcap=None):
+    """q: (B, Sq, H, Dh); k, v: (B, Sk, KVH, Dh) -> (B, Sq, H, Dh)."""
+    B, Sq, H, Dh = q.shape
+    Sk, KVH = k.shape[1], k.shape[2]
+    G = H // KVH
+    qg = q.reshape(B, Sq, KVH, G, Dh).astype(jnp.float32)
+    s = jnp.einsum("bqhgd,bkhd->bhgqk", qg,
+                   k.astype(jnp.float32)) / math.sqrt(Dh)
+    if softcap is not None:
+        s = softcap * jnp.tanh(s / softcap)
+    pq = jnp.arange(Sq)
+    pk = jnp.arange(Sk)
+    mask = jnp.ones((Sq, Sk), bool)
+    if causal:
+        mask &= pq[:, None] >= pk[None, :]
+    if window is not None:
+        mask &= (pq[:, None] - pk[None, :]) < window
+        if not causal:                      # bidirectional window is symmetric
+            mask &= (pk[None, :] - pq[:, None]) < window
+    s = jnp.where(mask[None, None, None], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bhgqk,bkhd->bqhgd", p, v.astype(jnp.float32))
+    return out.reshape(B, Sq, H, Dh).astype(q.dtype)
+
+
+def rwkv6_scan_ref(r, k, v, logw, u, s0):
+    """Oracle for the RWKV-6 recurrence kernel.
+
+    r,k,v,logw: (B, H, T, DK); u: (H, DK); s0: (B, H, DK, DK).
+        S_t   = diag(exp(logw_t)) S_{t-1} + k_t^T v_t
+        out_t = r_t (S_{t-1} + diag(u) k_t^T v_t)
+    """
+    def step(S, xs):
+        rt, kt, vt, lwt = xs                           # (B,H,DK)
+        rt, kt, vt = (a.astype(jnp.float32) for a in (rt, kt, vt))
+        w = jnp.exp(lwt.astype(jnp.float32))
+        kv = kt[..., :, None] * vt[..., None, :]
+        out = jnp.einsum("bhk,bhkv->bhv", rt,
+                         S + u[None, :, :, None] * kv)
+        return w[..., :, None] * S + kv, out
+
+    xs = tuple(jnp.moveaxis(a, 2, 0) for a in (r, k, v, logw))
+    sT, outs = jax.lax.scan(step, s0.astype(jnp.float32), xs)
+    return jnp.moveaxis(outs, 0, 2), sT

@@ -1,0 +1,481 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: prove the distribution config is coherent.
+
+For every (architecture x input shape x mesh) combination this lowers and
+compiles the real step function — train_step for train shapes, prefill /
+decode_step for serving shapes — against ShapeDtypeStruct stand-ins (no
+allocation), then reports:
+
+  * memory_analysis()   (fits-per-device evidence)
+  * cost_analysis()     (HLO FLOPs / bytes for the roofline)
+  * collective bytes    (parsed from the compiled HLO: all-to-all,
+                         all-gather, all-reduce, reduce-scatter,
+                         collective-permute)
+
+Run one combo:   python -m repro.launch.dryrun --arch qwen3-moe-30b-a3b \
+                     --shape train_4k [--multi-pod] [--out results.json]
+Run everything:  python -m repro.launch.dryrun --all
+"""
+import argparse
+import json
+import re
+import time
+from functools import partial
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.common.config import HW, INPUT_SHAPES, ModelConfig, ShapeConfig
+from repro.common.sharding import opt_state_spec, tree_param_specs
+from repro.configs import ASSIGNED_ARCHS, get_config
+from repro.launch.mesh import batch_axes, data_axis_size, make_production_mesh
+from repro.models.api import get_model
+from repro.optim.adamw import AdamWState, adamw_update, clip_by_global_norm
+
+# (arch, shape) pairs that run a documented VARIANT for long_500k
+# (DESIGN.md Sec. 5): full-attention archs decode with a sliding window.
+LONG_CONTEXT_WINDOWED = {
+    "gemma2-9b", "deepseek-67b", "stablelm-12b", "qwen3-32b",
+    "qwen3-moe-30b-a3b", "dbrx-132b", "llama-3.2-vision-11b",
+    "seamless-m4t-large-v2",
+}
+
+
+# ---------------------------------------------------------------------------
+# abstract inputs
+# ---------------------------------------------------------------------------
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def input_specs(cfg: ModelConfig, shape: ShapeConfig) -> Dict[str, Any]:
+    """ShapeDtypeStruct stand-ins for every model input of this shape."""
+    B, S = shape.global_batch, shape.seq_len
+    api = get_model(cfg)
+    out: Dict[str, Any] = {}
+    if shape.kind == "train":
+        out["tokens"] = _sds((B, S), jnp.int32)
+        out["labels"] = _sds((B, S), jnp.int32)
+    elif shape.kind == "prefill":
+        out["tokens"] = _sds((B, S), jnp.int32)
+    else:  # decode
+        out["token"] = _sds((B,), jnp.int32)
+    for name, shape_fn, dtype in api.extra_inputs:
+        if shape.kind == "decode":
+            continue                       # modality K/V served from cache
+        out[name] = _sds(shape_fn(cfg, B), dtype)
+    return out
+
+
+def _cache_len(cfg: ModelConfig, shape: ShapeConfig) -> int:
+    if shape.name == "long_500k" and cfg.name in LONG_CONTEXT_WINDOWED:
+        return cfg.long_context_window
+    return shape.seq_len
+
+
+def abstract_cache(cfg: ModelConfig, shape: ShapeConfig):
+    """ShapeDtypeStructs of the serving cache for decode shapes."""
+    api = get_model(cfg)
+    B = shape.global_batch
+    clen = _cache_len(cfg, shape)
+    if api.init_cache is not None:
+        cache = jax.eval_shape(partial(api.init_cache, cfg, B, clen))
+    else:
+        # audio enc-dec: cache comes from prefill; build its shapes directly
+        kvh, dh, nl = cfg.num_kv_heads, cfg.head_dim, cfg.num_layers
+        Tf = cfg.num_audio_frames
+        cache = {
+            "k": _sds((nl, B, clen, kvh, dh), jnp.bfloat16),
+            "v": _sds((nl, B, clen, kvh, dh), jnp.bfloat16),
+            "mem_k": _sds((nl, B, Tf, kvh, dh), jnp.bfloat16),
+            "mem_v": _sds((nl, B, Tf, kvh, dh), jnp.bfloat16),
+            "pos": _sds((), jnp.int32),
+        }
+    # represent "cache at seq_len occupancy"
+    cache = dict(cache)
+    cache["pos"] = _sds((), jnp.int32)
+    return cache
+
+
+# ---------------------------------------------------------------------------
+# shardings
+# ---------------------------------------------------------------------------
+def _divides(n, mesh, axis):
+    return axis in mesh.axis_names and n % mesh.shape[axis] == 0
+
+
+def cache_spec(name: str, shape, mesh) -> P:
+    """Sharding rule for serving-state leaves."""
+    nd = len(shape)
+    ba = batch_axes(mesh)
+    if nd == 0 or name == "pos":
+        return P()
+    # (L, B, S, KVH, Dh) KV caches & friends
+    if nd == 5:
+        batch_p = ba if all(_divides(shape[1], mesh, a) for a in ba) and \
+            shape[1] % int(np.prod([mesh.shape[a] for a in ba])) == 0 else None
+        if _divides(shape[3], mesh, "model"):
+            return P(None, batch_p, None, "model", None)
+        if _divides(shape[2], mesh, "model"):
+            return P(None, batch_p, "model", None, None)
+        return P(None, batch_p, None, None, None)
+    # rwkv6 S state (L, B, H, DK, DK) handled by nd==5 above; conv (L,B,K,inner)
+    if nd == 4:
+        if _divides(shape[-1], mesh, "model"):
+            return P(*([None] * (nd - 1)), "model")
+        return P(*([None] * nd))
+    if nd == 3:
+        if _divides(shape[-1], mesh, "model"):
+            return P(None, None, "model")
+        return P(*([None] * nd))
+    return P(*([None] * nd))
+
+
+def batch_input_spec(name: str, shape, mesh) -> P:
+    ba = batch_axes(mesh)
+    dp = int(np.prod([mesh.shape[a] for a in ba]))
+    nd = len(shape)
+    lead = ba if shape[0] % dp == 0 else None
+    if nd == 1:
+        return P(lead)
+    if nd == 2:
+        return P(lead, None)
+    # (B, T, d) stub embeddings
+    return P(lead, None, None)
+
+
+def tree_shardings(mesh, tree, spec_fn):
+    flat, treedef = jax.tree_util.tree_flatten_with_path(tree)
+    out = []
+    for path, leaf in flat:
+        name = str(getattr(path[-1], "key", getattr(path[-1], "idx", "")))
+        out.append(NamedSharding(mesh, spec_fn(name, leaf.shape)))
+    return jax.tree_util.tree_unflatten(treedef, out)
+
+
+
+# ---------------------------------------------------------------------------
+# DiT-MoE (the paper's model) on the production mesh: one interweaved
+# denoise step under true expert parallelism — batch over ("pod","data")
+# and "model", experts over "model", staleness buffers threaded as state.
+# ---------------------------------------------------------------------------
+def make_dit_step(cfg: ModelConfig, mesh, *, global_batch: int = 4096):
+    from repro.core.schedules import DiceConfig
+    from repro.core import staleness as stale_lib
+    from repro.models.dit_moe import dit_forward, init_dit
+
+    ba = batch_axes(mesh)
+    tok_spec = P(tuple(ba) + ("model",))
+    dcfg = DiceConfig.interweaved()
+    B, T, C, d = global_batch, cfg.patch_tokens, cfg.in_channels, cfg.d_model
+    n_dev = int(np.prod(list(mesh.shape.values())))
+    assert B % n_dev == 0
+
+    params_abs = jax.eval_shape(lambda key: init_dit(key, cfg),
+                                jax.random.PRNGKey(0))
+
+    if cfg.num_experts % mesh.shape["model"]:
+        raise ValueError(
+            f"{cfg.name}: {cfg.num_experts} experts not divisible by the "
+            f"model axis ({mesh.shape['model']}) — use dit-moe-g (16e) for "
+            "the production-mesh dry-run")
+
+    def pspec_fn(path, leaf):
+        names = [str(getattr(k, "key", getattr(k, "idx", ""))) for k in path]
+        return P("model") if any(n.startswith("experts_") for n in names) \
+            else P()
+
+    flat, treedef = jax.tree_util.tree_flatten_with_path(params_abs)
+    pspecs = jax.tree_util.tree_unflatten(
+        treedef, [pspec_fn(p, l) for p, l in flat])
+
+    states_abs = {
+        i: stale_lib.MoELayerState(
+            y_buf=_sds((B * T, d), jnp.float32), x_prev=None, h_cache=None)
+        for i in range(cfg.num_layers)}
+    state_specs = jax.tree.map(lambda _: tok_spec, states_abs)
+
+    inputs = {"latents": _sds((B, T, C), jnp.float32),
+              "classes": _sds((B,), jnp.int32)}
+
+    def denoise_step(params, batch, states):
+        def f(p_l, x_l, cls_l, st_l):
+            t = jnp.full((x_l.shape[0],), 0.5)
+            v, ns_, _, _ = dit_forward(p_l, x_l, t, cls_l, cfg, dcfg, st_l,
+                                       step_idx=5, ep_axis="model")
+            return x_l + (1.0 / 50) * v, ns_
+
+        return jax.shard_map(
+            f, mesh=mesh,
+            in_specs=(pspecs, P(tuple(ba) + ("model",), None, None),
+                      P(tuple(ba) + ("model",)), state_specs),
+            out_specs=(P(tuple(ba) + ("model",), None, None), state_specs),
+        )(params, batch["latents"], batch["classes"], states)
+
+    ns = lambda spec: NamedSharding(mesh, spec)
+    psh = jax.tree.map(ns, pspecs)
+    bspec = P(tuple(ba) + ("model",), None, None)
+    in_sh = (psh, {"latents": ns(bspec),
+                   "classes": ns(P(tuple(ba) + ("model",)))},
+             jax.tree.map(ns, state_specs))
+    out_sh = (ns(bspec), jax.tree.map(ns, state_specs))
+    return denoise_step, (params_abs, inputs, states_abs), in_sh, out_sh
+
+
+# ---------------------------------------------------------------------------
+# step functions
+# ---------------------------------------------------------------------------
+def make_step(cfg: ModelConfig, shape: ShapeConfig, mesh, *,
+              opts: Tuple[str, ...] = ()):
+    """Returns (fn, arg_shapedtypes, in_shardings, out_shardings).
+
+    ``opts`` are the Sec-Perf hillclimb levers:
+      seq_shard   sequence-parallel residual stream (dense/moe train)
+      remat_dots  save matmul outputs instead of full recompute
+      cap1        capacity_factor 1.0 (20% smaller dispatch buffers)
+    """
+    if "cap1" in opts:
+        cfg = cfg.replace(capacity_factor=1.0)
+    api = get_model(cfg)
+    ba = batch_axes(mesh)
+    long_ctx = shape.name == "long_500k"
+    kw: Dict[str, Any] = {"mesh": mesh, "batch_axes": ba}
+    if cfg.family in ("ssm", "hybrid", "audio"):
+        kw = {}                             # these models ignore mesh kwargs
+    if long_ctx and cfg.family in ("hybrid", "audio"):
+        kw["attn_window"] = cfg.long_context_window
+    if long_ctx and cfg.family in ("dense", "moe", "vlm"):
+        kw["long_context"] = True
+    if shape.kind == "decode" and cfg.family == "moe" and "cap_floor4" in opts:
+        kw["capacity_floor"] = 4
+    if shape.kind == "train" and cfg.family in ("dense", "moe"):
+        if "seq_shard" in opts:
+            kw["seq_shard"] = True
+        if "remat_dots" in opts:
+            kw["remat_policy"] = "dots"
+        if "save_ffn" in opts:
+            kw["remat_policy"] = "save_ffn"
+        if "attn_shard" in opts:
+            kw["attn_shard"] = "heads"
+        if "attn_seq" in opts:
+            kw["attn_shard"] = "seq"
+
+    params_abs = jax.eval_shape(partial(api.init, cfg=cfg),
+                                jax.random.PRNGKey(0))
+    pspecs = tree_param_specs(params_abs, mesh)
+    psh = jax.tree.map(lambda s: NamedSharding(mesh, s), pspecs)
+    inputs = input_specs(cfg, shape)
+    in_sh_batch = {k: NamedSharding(mesh, batch_input_spec(k, v.shape, mesh))
+                   for k, v in inputs.items()}
+
+    if shape.kind == "train":
+        opt_abs = jax.eval_shape(
+            lambda p: AdamWState(
+                step=jnp.zeros((), jnp.int32),
+                mu=jax.tree.map(lambda a: jnp.zeros(a.shape, jnp.float32), p),
+                nu=jax.tree.map(lambda a: jnp.zeros(a.shape, jnp.float32), p)),
+            params_abs)
+        ospec = AdamWState(
+            step=P(),
+            mu=jax.tree.map(lambda s, a: opt_state_spec(s, a.shape, mesh),
+                            pspecs, params_abs),
+            nu=jax.tree.map(lambda s, a: opt_state_spec(s, a.shape, mesh),
+                            pspecs, params_abs))
+        osh = jax.tree.map(lambda s: NamedSharding(mesh, s), ospec,
+                           is_leaf=lambda x: isinstance(x, P))
+
+        def train_step(params, opt_state, batch):
+            def lf(p):
+                return api.loss_fn(p, batch, cfg, **kw)[0]
+            loss, grads = jax.value_and_grad(lf)(params)
+            grads, gnorm = clip_by_global_norm(grads, 1.0)
+            new_params, new_opt = adamw_update(grads, opt_state, params,
+                                               lr=1e-4)
+            return new_params, new_opt, loss
+
+        args = (params_abs, opt_abs, inputs)
+        in_sh = (psh, osh, in_sh_batch)
+        out_sh = (psh, osh, NamedSharding(mesh, P()))
+        return train_step, args, in_sh, out_sh
+
+    if shape.kind == "prefill":
+        def prefill_step(params, batch):
+            return api.prefill(params, batch, cfg, **kw)
+
+        cache_abs = jax.eval_shape(prefill_step, params_abs, inputs)[1]
+        cache_sh = tree_shardings(mesh, cache_abs, lambda n, s: cache_spec(n, s, mesh))
+        args = (params_abs, inputs)
+        in_sh = (psh, in_sh_batch)
+        out_sh = (NamedSharding(mesh, P(ba, None)), cache_sh)
+        return prefill_step, args, in_sh, out_sh
+
+    # decode
+    cache_abs = abstract_cache(cfg, shape)
+    cache_sh = tree_shardings(mesh, cache_abs,
+                              lambda n, s: cache_spec(n, s, mesh))
+
+    def decode_fn(params, batch, cache):
+        return api.decode_step(params, batch, cache, cfg, **kw)
+
+    args = (params_abs, inputs, cache_abs)
+    in_sh = (psh, in_sh_batch, cache_sh)
+    logits_sh = NamedSharding(
+        mesh, P(batch_axes(mesh) if shape.global_batch %
+                data_axis_size(mesh) == 0 else None, None))
+    out_sh = (logits_sh, cache_sh)
+    return decode_fn, args, in_sh, out_sh
+
+
+# ---------------------------------------------------------------------------
+# roofline terms
+# ---------------------------------------------------------------------------
+def roofline(flops: float, byts: float, coll: Dict[str, float]) -> Dict[str, Any]:
+    """All inputs are PER-DEVICE (the compiled module is the SPMD partition).
+    flops/bytes are the loop-corrected totals from repro.launch.hlo_cost."""
+    coll_b = float(sum(coll.values()))
+    t_compute = flops / HW.peak_flops_bf16
+    t_memory = byts / HW.hbm_bw
+    # a v5e chip has 4 usable ICI links; ring/all-to-all schedules use them all
+    t_coll = coll_b / (HW.ici_bw * 4)
+    dom = max((t_compute, "compute"), (t_memory, "memory"),
+              (t_coll, "collective"))[1]
+    return {"flops": flops, "bytes": byts, "collective_bytes": coll_b,
+            "t_compute": t_compute, "t_memory": t_memory,
+            "t_collective": t_coll, "dominant": dom}
+
+
+# ---------------------------------------------------------------------------
+# driver
+# ---------------------------------------------------------------------------
+def run_one(arch: str, shape_name: str, *, multi_pod: bool = False,
+            verbose: bool = True,
+            opts: Tuple[str, ...] = ()) -> Dict[str, Any]:
+    cfg = get_config(arch)
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    n_chips = int(np.prod(list(mesh.shape.values())))
+    t0 = time.time()
+    if shape_name == "dit_serve":
+        # the paper's model: one interweaved EP denoise step, batch 4096
+        from repro.common.config import ShapeConfig
+        shape = ShapeConfig("dit_serve", cfg.patch_tokens, 4096, "prefill")
+        fn, args, in_sh, out_sh = make_dit_step(cfg, mesh)
+    else:
+        shape = INPUT_SHAPES[shape_name]
+        fn, args, in_sh, out_sh = make_step(cfg, shape, mesh, opts=opts)
+    jitted = jax.jit(fn, in_shardings=in_sh, out_shardings=out_sh)
+    lowered = jitted.lower(*args)
+    t_lower = time.time() - t0
+    t0 = time.time()
+    compiled = lowered.compile()
+    t_compile = time.time() - t0
+
+    mem = compiled.memory_analysis()
+    cost = compiled.cost_analysis()          # raw XLA (loop bodies counted 1x)
+    from repro.launch import hlo_cost
+    totals = hlo_cost.analyze(compiled.as_text())
+    rl = roofline(totals.flops, totals.bytes, totals.collective_bytes)
+    # 6ND for train (fwd+bwd), 2ND for inference; N = routed-active params
+    n_active = cfg.active_param_count()
+    if shape.kind == "train":
+        model_flops = 6 * n_active * shape.global_batch * shape.seq_len
+    elif shape.kind == "prefill":
+        model_flops = 2 * n_active * shape.global_batch * shape.seq_len
+    else:
+        model_flops = 2 * n_active * shape.global_batch
+
+    res = {
+        "arch": arch, "shape": shape_name,
+        "mesh": "2x16x16" if multi_pod else "16x16",
+        "opts": list(opts),
+        "n_chips": n_chips,
+        "t_lower_s": round(t_lower, 1), "t_compile_s": round(t_compile, 1),
+        "memory": {
+            "argument_bytes": getattr(mem, "argument_size_in_bytes", None),
+            "output_bytes": getattr(mem, "output_size_in_bytes", None),
+            "temp_bytes": getattr(mem, "temp_size_in_bytes", None),
+            "peak_bytes": (getattr(mem, "argument_size_in_bytes", 0) or 0)
+            + (getattr(mem, "temp_size_in_bytes", 0) or 0),
+        },
+        "roofline": rl,
+        "collectives": totals.collective_bytes,
+        "loops": totals.loops,
+        "raw_cost_analysis": {"flops": float(cost.get("flops", 0.0)),
+                              "bytes": float(cost.get("bytes accessed", 0.0))},
+        "model_flops_global": model_flops,
+        "model_flops_per_chip": model_flops / n_chips,
+        "useful_flop_ratio": (model_flops / n_chips) / rl["flops"]
+        if rl["flops"] else None,
+    }
+    if verbose:
+        print(json.dumps(res, indent=2, default=str))
+    return res
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--archs", default=None, help="comma list filter")
+    ap.add_argument("--shapes", default=None, help="comma list filter")
+    ap.add_argument("--opts", default="", help="comma list of perf levers "
+                    "(seq_shard, remat_dots, cap1)")
+    ap.add_argument("--out", default=None, help="JSONL, appended per combo")
+    args = ap.parse_args()
+    opts = tuple(o for o in args.opts.split(",") if o)
+
+    def emit(res):
+        if args.out:
+            with open(args.out, "a") as f:
+                f.write(json.dumps(res, default=str) + "\n")
+
+    if not args.all:
+        emit(run_one(args.arch, args.shape, multi_pod=args.multi_pod,
+                     opts=opts))
+        return
+
+    done = set()
+    if args.out and os.path.exists(args.out):
+        with open(args.out) as f:
+            for line in f:
+                try:
+                    r = json.loads(line)
+                    if "error" not in r:
+                        done.add((r["arch"], r["shape"], r["mesh"]))
+                except json.JSONDecodeError:
+                    pass
+    archs = args.archs.split(",") if args.archs else ASSIGNED_ARCHS
+    shapes = args.shapes.split(",") if args.shapes else list(INPUT_SHAPES)
+    n_fail = 0
+    for arch in archs:
+        for shape in shapes:
+            for mp in (False, True):
+                mesh_name = "2x16x16" if mp else "16x16"
+                if (arch, shape, mesh_name) in done:
+                    print(f"SKIP {arch:24s} {shape:12s} {mesh_name} (cached)")
+                    continue
+                try:
+                    r = run_one(arch, shape, multi_pod=mp, verbose=False,
+                                opts=opts)
+                    emit(r)
+                    print(f"OK   {arch:24s} {shape:12s} {r['mesh']:8s} "
+                          f"compile {r['t_compile_s']:6.1f}s "
+                          f"dominant {r['roofline']['dominant']}", flush=True)
+                except Exception as e:  # noqa: BLE001
+                    n_fail += 1
+                    msg = f"{type(e).__name__}: {str(e)[:500]}"
+                    emit({"arch": arch, "shape": shape, "mesh": mesh_name,
+                          "error": msg})
+                    print(f"FAIL {arch:24s} {shape:12s} {mesh_name:8s} {msg}",
+                          flush=True)
+    print(f"sweep complete, {n_fail} failures")
+
+
+if __name__ == "__main__":
+    main()

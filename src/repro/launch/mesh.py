@@ -1,0 +1,46 @@
+"""Mesh construction for the production TPU v5e deployment.
+
+Everything is a function (never module-level jax state) so importing this
+module does not initialise the backend — required because the dry-run sets
+``XLA_FLAGS=--xla_force_host_platform_device_count=512`` before first init
+while tests/benches must see the single real CPU device.
+"""
+from __future__ import annotations
+
+import jax
+
+
+def _auto(n: int):
+    return (jax.sharding.AxisType.Auto,) * n
+
+
+def make_production_mesh(*, multi_pod: bool = False) -> jax.sharding.Mesh:
+    """16x16 single-pod (256 chips) or 2x16x16 two-pod (512 chips) mesh."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes, axis_types=_auto(len(shape)))
+
+
+def make_local_mesh(data: int = 1, model: int = 1) -> jax.sharding.Mesh:
+    """Small mesh over whatever devices exist (tests / single host)."""
+    n = len(jax.devices())
+    if data * model > n:
+        data, model = 1, min(model, n)
+    return jax.make_mesh((data, model), ("data", "model"),
+                         axis_types=_auto(2))
+
+
+def batch_axes(mesh: jax.sharding.Mesh):
+    """Axes over which the global batch is sharded (pod included if present)."""
+    return ("pod", "data") if "pod" in mesh.axis_names else ("data",)
+
+
+def data_axis_size(mesh: jax.sharding.Mesh) -> int:
+    size = mesh.shape["data"]
+    if "pod" in mesh.axis_names:
+        size *= mesh.shape["pod"]
+    return size
+
+
+def model_axis_size(mesh: jax.sharding.Mesh) -> int:
+    return mesh.shape["model"]

@@ -1,0 +1,90 @@
+"""Render the EXPERIMENTS.md roofline/dry-run tables from the sweep JSONL.
+
+  PYTHONPATH=src python -m repro.launch.roofline_report \
+      results/dryrun_baseline.jsonl [--mesh 16x16] [--markdown]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+from collections import OrderedDict
+
+
+def load(path):
+    rows = OrderedDict()
+    with open(path) as f:
+        for line in f:
+            try:
+                r = json.loads(line)
+            except json.JSONDecodeError:
+                continue
+            key = (r.get("arch"), r.get("shape"), r.get("mesh"))
+            rows[key] = r            # later lines win (reruns)
+    return rows
+
+
+def fmt_s(x):
+    if x is None:
+        return "-"
+    if x >= 1:
+        return f"{x:.2f}s"
+    if x >= 1e-3:
+        return f"{x*1e3:.2f}ms"
+    return f"{x*1e6:.1f}us"
+
+
+def fmt_b(x):
+    if x is None:
+        return "-"
+    for unit, div in (("TB", 1e12), ("GB", 1e9), ("MB", 1e6), ("KB", 1e3)):
+        if x >= div:
+            return f"{x/div:.1f}{unit}"
+    return f"{x:.0f}B"
+
+
+def render(rows, *, mesh="16x16", markdown=True):
+    hdr = ["arch", "shape", "t_comp", "t_mem", "t_coll", "dominant",
+           "hbm/dev", "flops/dev", "coll", "6ND/HLO", "compile"]
+    out = []
+    if markdown:
+        out.append("| " + " | ".join(hdr) + " |")
+        out.append("|" + "---|" * len(hdr))
+    for (arch, shape, m), r in rows.items():
+        if m != mesh:
+            continue
+        if "error" in r:
+            cells = [arch, shape, "FAIL: " + r["error"][:60]] + [""] * 8
+        else:
+            rl = r["roofline"]
+            mem = r["memory"]
+            cells = [
+                arch, shape,
+                fmt_s(rl["t_compute"]), fmt_s(rl["t_memory"]),
+                fmt_s(rl["t_collective"]), rl["dominant"],
+                fmt_b(mem.get("peak_bytes")),
+                f"{rl['flops']/1e12:.2f}T",
+                fmt_b(rl["collective_bytes"]),
+                f"{r['useful_flop_ratio']:.2f}" if r.get("useful_flop_ratio")
+                else "-",
+                f"{r['t_compile_s']}s",
+            ]
+        out.append("| " + " | ".join(str(c) for c in cells) + " |"
+                   if markdown else ",".join(str(c) for c in cells))
+    return "\n".join(out)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("jsonl")
+    ap.add_argument("--mesh", default="16x16")
+    ap.add_argument("--csv", action="store_true")
+    args = ap.parse_args()
+    rows = load(args.jsonl)
+    print(render(rows, mesh=args.mesh, markdown=not args.csv))
+    n_ok = sum(1 for r in rows.values() if "error" not in r)
+    n_err = sum(1 for r in rows.values() if "error" in r)
+    print(f"\n{n_ok} OK, {n_err} failed, {len(rows)} total combos recorded")
+
+
+if __name__ == "__main__":
+    main()

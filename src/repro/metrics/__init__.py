@@ -1,0 +1,4 @@
+from repro.metrics.fid_proxy import (fid_proxy, feature_stats,
+                                     mse_vs_reference,
+                                     inception_score_proxy,
+                                     precision_recall_proxy)

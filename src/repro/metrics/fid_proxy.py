@@ -1,0 +1,100 @@
+"""FID proxy for synthetic-latent experiments.
+
+The paper reports FID against ImageNet using InceptionV3 features.  This
+container has neither; we keep the *estimator* (Fréchet distance between
+Gaussian fits of feature distributions) and replace the feature network
+with a fixed randomly-initialised 2-layer MLP over flattened latents — a
+standard random-features trick: distributional differences caused by
+staleness show up as monotone increases of the proxy, which is exactly the
+claim structure of the paper's tables (ordering, not absolute values).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def _feature_net(x, *, dim: int = 64, seed: int = 1234):
+    """x: (N, T, C) -> (N, dim) fixed random features."""
+    N = x.shape[0]
+    flat = x.reshape(N, -1)
+    k1, k2 = jax.random.split(jax.random.PRNGKey(seed))
+    w1 = jax.random.normal(k1, (flat.shape[1], 128)) / np.sqrt(flat.shape[1])
+    w2 = jax.random.normal(k2, (128, dim)) / np.sqrt(128)
+    return jnp.tanh(flat @ w1) @ w2
+
+
+def feature_stats(x):
+    f = np.asarray(_feature_net(jnp.asarray(x, jnp.float32)))
+    mu = f.mean(0)
+    cov = np.cov(f, rowvar=False)
+    return mu, cov
+
+
+def _sqrtm_psd(a: np.ndarray) -> np.ndarray:
+    w, v = np.linalg.eigh((a + a.T) / 2)
+    w = np.clip(w, 0, None)
+    return (v * np.sqrt(w)) @ v.T
+
+
+def frechet_distance(mu1, cov1, mu2, cov2) -> float:
+    diff = mu1 - mu2
+    s = _sqrtm_psd(_sqrtm_psd(cov1) @ cov2 @ _sqrtm_psd(cov1))
+    return float(diff @ diff + np.trace(cov1 + cov2 - 2 * s))
+
+
+def fid_proxy(samples, reference) -> float:
+    """Fréchet distance between random-feature Gaussians of two sample sets."""
+    m1, c1 = feature_stats(samples)
+    m2, c2 = feature_stats(reference)
+    return frechet_distance(m1, c1, m2, c2)
+
+
+def mse_vs_reference(samples, reference) -> float:
+    """Paired MSE against the synchronous-EP output (same seed/classes)."""
+    a = np.asarray(samples, np.float64)
+    b = np.asarray(reference, np.float64)
+    return float(np.mean((a - b) ** 2))
+
+
+def inception_score_proxy(samples, *, splits: int = 4) -> float:
+    """IS analogue on random features: exp(mean KL(p(y|x) || p(y))) with a
+    fixed random linear 'classifier' head over the feature net."""
+    f = np.asarray(_feature_net(jnp.asarray(samples, jnp.float32)))
+    rng = np.random.default_rng(4321)
+    w = rng.normal(size=(f.shape[1], 16)) / np.sqrt(f.shape[1])
+    logits = f @ w
+    p = np.exp(logits - logits.max(-1, keepdims=True))
+    p /= p.sum(-1, keepdims=True)
+    scores = []
+    n = len(p)
+    for i in range(splits):
+        part = p[i * n // splits:(i + 1) * n // splits]
+        if not len(part):
+            continue
+        py = part.mean(0, keepdims=True)
+        kl = (part * (np.log(part + 1e-12) - np.log(py + 1e-12))).sum(-1)
+        scores.append(np.exp(kl.mean()))
+    return float(np.mean(scores))
+
+
+def precision_recall_proxy(samples, reference, *, k: int = 3):
+    """Kynkaanniemi-style precision/recall on random features: a sample is
+    'covered' if it lies within the k-NN radius of some point of the other
+    set."""
+    fs = np.asarray(_feature_net(jnp.asarray(samples, jnp.float32)))
+    fr = np.asarray(_feature_net(jnp.asarray(reference, jnp.float32)))
+
+    def knn_radius(x):
+        d = np.linalg.norm(x[:, None] - x[None], axis=-1)
+        d.sort(axis=1)
+        return d[:, min(k, len(x) - 1)]
+
+    def coverage(queries, manifold, radii):
+        d = np.linalg.norm(queries[:, None] - manifold[None], axis=-1)
+        return float((d <= radii[None]).any(axis=1).mean())
+
+    precision = coverage(fs, fr, knn_radius(fr))   # fake inside real manifold
+    recall = coverage(fr, fs, knn_radius(fs))      # real inside fake manifold
+    return precision, recall

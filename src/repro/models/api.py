@@ -1,0 +1,99 @@
+"""Family dispatcher: one uniform interface over the model zoo.
+
+``get_model(cfg)`` returns a ``ModelApi`` with ``init / loss_fn / prefill /
+decode_step / make_inputs`` so the launcher, dry-run, smoke tests and
+benchmarks are family-agnostic.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Callable, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.common.config import ModelConfig
+
+
+@dataclass(frozen=True)
+class ModelApi:
+    init: Callable
+    loss_fn: Callable                      # (params, batch, cfg, **kw) -> (loss, metrics)
+    prefill: Callable                      # (params, batch, cfg, **kw) -> (logits, cache)
+    decode_step: Callable                  # (params, batch, cache, cfg, **kw) -> (logits, cache)
+    init_cache: Optional[Callable]         # (cfg, batch, max_len) -> cache; None = cache from prefill only
+    extra_inputs: tuple = ()               # stub modality inputs (name, shape_fn, dtype)
+
+
+def get_model(cfg: ModelConfig) -> ModelApi:
+    fam = cfg.family
+    if fam in ("dense", "moe"):
+        from repro.models import dense as m
+        return ModelApi(
+            init=m.init_lm,
+            loss_fn=m.loss_fn,
+            prefill=lambda p, b, c, **kw: m.prefill(p, b["tokens"], c, **kw),
+            decode_step=lambda p, b, cache, c, **kw: m.decode_step(
+                p, b["token"], cache, c, **kw),
+            init_cache=m.init_cache,
+        )
+    if fam == "ssm":
+        from repro.models import rwkv6 as m
+        return ModelApi(
+            init=m.init_rwkv6,
+            loss_fn=m.loss_fn,
+            prefill=lambda p, b, c, **kw: m.prefill(p, b["tokens"], c),
+            decode_step=lambda p, b, cache, c, **kw: m.decode_step(
+                p, b["token"], cache, c),
+            init_cache=lambda c, batch, max_len, **kw: m.init_state(c, batch),
+        )
+    if fam == "hybrid":
+        from repro.models import zamba2 as m
+        return ModelApi(
+            init=m.init_zamba2,
+            loss_fn=m.loss_fn,
+            prefill=lambda p, b, c, **kw: m.prefill(
+                p, b["tokens"], c, cache_len=kw.get("cache_len")),
+            decode_step=lambda p, b, cache, c, **kw: m.decode_step(
+                p, b["token"], cache, c, attn_window=kw.get("attn_window")),
+            init_cache=lambda c, batch, max_len, **kw: m.init_state(
+                c, batch, attn_cache_len=max_len),
+        )
+    if fam == "vlm":
+        from repro.models import vlm as m
+        return ModelApi(
+            init=m.init_vlm,
+            loss_fn=m.loss_fn,
+            prefill=lambda p, b, c, **kw: m.prefill(
+                p, b["tokens"], b["image_embeds"], c, **kw),
+            decode_step=lambda p, b, cache, c, **kw: m.decode_step(
+                p, b["token"], cache, c, **kw),
+            init_cache=m.init_cache,
+            extra_inputs=(("image_embeds",
+                           lambda c, batch: (batch, c.num_image_tokens, c.d_model),
+                           jnp.bfloat16),),
+        )
+    if fam == "audio":
+        from repro.models import encdec as m
+        return ModelApi(
+            init=m.init_encdec,
+            loss_fn=m.loss_fn,
+            prefill=lambda p, b, c, **kw: m.prefill(
+                p, b["tokens"], b["audio_frames"], c),
+            decode_step=lambda p, b, cache, c, **kw: m.decode_step(
+                p, b["token"], cache, c, window=kw.get("attn_window")),
+            init_cache=None,
+            extra_inputs=(("audio_frames",
+                           lambda c, batch: (batch, c.num_audio_frames, c.d_model),
+                           jnp.bfloat16),),
+        )
+    if fam == "dit_moe":
+        from repro.models import dit_moe as m
+        from repro.sampling.rectified_flow import rf_loss
+        return ModelApi(
+            init=m.init_dit,
+            loss_fn=lambda p, b, c, **kw: rf_loss(p, b, c, kw.get(
+                "key", jax.random.PRNGKey(0))),
+            prefill=None, decode_step=None, init_cache=None,
+        )
+    raise ValueError(f"unknown family: {fam}")

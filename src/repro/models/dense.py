@@ -1,0 +1,372 @@
+"""Decoder-only transformer LM covering the dense and MoE families.
+
+One implementation, config-driven variants:
+  * GQA with RoPE; qk-norm (qwen3); attention-logit softcap + sandwich norms
+    + embed scaling + final-logit softcap (gemma2); alternating local/global
+    sliding windows (gemma2); gated MLP (silu or gelu).
+  * MoE FFN (qwen3-moe, dbrx) with expert-parallel all-to-all dispatch
+    (repro.core.moe) over the "model" mesh axis.
+  * Layers are stacked (leading L dim) and run under ``jax.lax.scan`` with
+    per-layer remat — required to keep 95-layer dry-run compiles tractable.
+
+Entry points: ``forward`` (teacher-forced logits), ``train_step``,
+``prefill``, ``decode_step`` (one token against a KV cache, ring-buffer
+semantics for sliding-window long-context variants).
+"""
+from __future__ import annotations
+
+import math
+from functools import partial
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.ad_checkpoint
+import jax.numpy as jnp
+import numpy as np
+
+from repro.common.config import ModelConfig
+from repro.core import moe as moe_lib
+from repro.models import layers as L
+
+
+# ---------------------------------------------------------------------------
+# per-layer window pattern
+# ---------------------------------------------------------------------------
+def layer_windows(cfg: ModelConfig, *, long_context: bool = False) -> np.ndarray:
+    """(L,) int32 attention window per layer; 0 means unlimited."""
+    w = np.zeros(cfg.num_layers, dtype=np.int32)
+    if cfg.local_global_pattern and cfg.sliding_window:
+        w[0::2] = cfg.sliding_window          # gemma2: even layers local
+    if long_context and cfg.long_context_window:
+        full = w == 0
+        w[full] = cfg.long_context_window     # cap global layers for 500k decode
+    return w
+
+
+# ---------------------------------------------------------------------------
+# init
+# ---------------------------------------------------------------------------
+def _stack(trees):
+    return jax.tree.map(lambda *xs: jnp.stack(xs), *trees)
+
+
+def init_lm(key, cfg: ModelConfig, *, dtype=jnp.bfloat16) -> Dict[str, Any]:
+    n_layers = cfg.num_layers
+    keys = jax.random.split(key, n_layers + 2)
+
+    def one_layer(k):
+        ka, km = jax.random.split(k)
+        p = {
+            "ln1": L.rmsnorm_init(cfg.d_model),
+            "ln2": L.rmsnorm_init(cfg.d_model),
+            "attn": L.attn_init(ka, cfg.d_model, cfg.num_heads,
+                                cfg.num_kv_heads, cfg.head_dim,
+                                qk_norm=cfg.qk_norm, dtype=dtype),
+        }
+        if cfg.post_norm:
+            p["ln1_post"] = L.rmsnorm_init(cfg.d_model)
+            p["ln2_post"] = L.rmsnorm_init(cfg.d_model)
+        if cfg.is_moe:
+            p["moe"] = moe_lib.moe_init(km, cfg, dtype=dtype)
+        else:
+            p["mlp"] = L.mlp_init(km, cfg.d_model, cfg.d_ff, dtype=dtype)
+        return p
+
+    layers = _stack([one_layer(keys[i]) for i in range(n_layers)])
+    params = {
+        "embed": L.dense_init(keys[-2], (cfg.vocab_size, cfg.d_model),
+                              scale=0.02, dtype=dtype),
+        "layers": layers,
+        "final_norm": L.rmsnorm_init(cfg.d_model),
+    }
+    if not cfg.tie_embeddings:
+        params["unembed"] = L.dense_init(keys[-1], (cfg.vocab_size, cfg.d_model),
+                                         scale=1.0 / math.sqrt(cfg.d_model),
+                                         dtype=dtype)
+    return params
+
+
+# ---------------------------------------------------------------------------
+# EP plumbing
+# ---------------------------------------------------------------------------
+def _moe_block(p_moe, x, cfg: ModelConfig, mesh, *, batch_axes=("data",),
+               capacity_floor=8):
+    """MoE FFN on (B, S, d).  With a mesh: expert-parallel shard_map over
+    'model' (tokens seq-split across the EP group, the two all-to-alls of
+    the paper); without: single-device reference path."""
+    B, S, d = x.shape
+    if mesh is None or "model" not in getattr(mesh, "axis_names", ()):
+        y, aux = moe_lib.moe_forward(p_moe, x.reshape(B * S, d), cfg)
+        return y.reshape(B, S, d), aux.lb_loss
+
+    from jax.sharding import PartitionSpec as P
+    ep = mesh.shape["model"]
+    dp = int(np.prod([mesh.shape[a] for a in batch_axes]))
+
+    # EP token layout: prefer splitting the sequence over the EP ("model")
+    # axis (train/prefill); for single-token decode split the batch over it;
+    # a lone long-context request (B=1, S=1) degenerates to GSPMD-only EP
+    # (weights stay expert-sharded, tokens replicated — trivial volume).
+    if S % ep == 0:
+        x_spec = P(batch_axes, "model", None)
+        t_local = (B // dp) * (S // ep)
+        lb_axes = tuple(batch_axes) + ("model",)
+    elif B % ep == 0:
+        x_spec = P("model", None, None)
+        t_local = (B // ep) * S
+        lb_axes = ("model",)
+    else:
+        y, aux = moe_lib.moe_forward(p_moe, x.reshape(B * S, d), cfg)
+        return y.reshape(B, S, d), aux.lb_loss
+    capacity = moe_lib.default_capacity(t_local, cfg, ep_degree=ep,
+                                        floor=capacity_floor)
+
+    pspec = jax.tree.map(lambda _: P(), p_moe)
+    for name in ("experts_gate", "experts_up", "experts_down"):
+        pspec[name] = P("model")
+
+    def f(pl, xl):
+        b, s, _ = xl.shape
+        y, aux = moe_lib.moe_forward(pl, xl.reshape(b * s, d), cfg,
+                                     capacity=capacity, ep_axis="model")
+        lb = jax.lax.pmean(aux.lb_loss, lb_axes)
+        return y.reshape(b, s, d), lb
+
+    y, lb = jax.shard_map(
+        f, mesh=mesh,
+        in_specs=(pspec, x_spec),
+        out_specs=(x_spec, P()),
+    )(p_moe, x)
+    # named so the save_ffn remat policy can keep MoE outputs and skip
+    # re-running the two all-to-alls in the backward pass
+    y = jax.ad_checkpoint.checkpoint_name(y, "moe_out")
+    return y, lb
+
+
+# ---------------------------------------------------------------------------
+# one transformer layer (shared by all entry points)
+# ---------------------------------------------------------------------------
+def _layer(p, x, positions, cfg: ModelConfig, *, window, kv_cache=None,
+           cache_pos=None, key_positions=None, kv_valid_len=None,
+           mesh=None, batch_axes=("data",), attn_shard=None,
+           capacity_floor=8):
+    win = jnp.where(window > 0, window, jnp.iinfo(jnp.int32).max)
+    h = L.rmsnorm(p["ln1"], x, eps=cfg.norm_eps)
+    attn_out, new_kv = L.attn_apply(
+        p["attn"], h, positions, cfg, kv_cache=kv_cache, cache_pos=cache_pos,
+        window=win, kv_valid_len=kv_valid_len,
+        head_shard=(mesh, batch_axes, attn_shard)
+        if (attn_shard and mesh is not None) else None)
+    attn_out = jax.ad_checkpoint.checkpoint_name(attn_out, "attn_out")
+    if attn_shard == "seq" and mesh is not None:
+        # keep the block output sequence-sharded so the backward dx partial
+        # sums lower to reduce-scatter instead of all-reduce
+        from jax.sharding import NamedSharding, PartitionSpec as P
+        attn_out = jax.lax.with_sharding_constraint(
+            attn_out, NamedSharding(mesh, P(batch_axes, "model", None)))
+    if cfg.post_norm:
+        attn_out = L.rmsnorm(p["ln1_post"], attn_out, eps=cfg.norm_eps)
+    x = x + attn_out
+    h = L.rmsnorm(p["ln2"], x, eps=cfg.norm_eps)
+    if cfg.is_moe:
+        ffn, lb = _moe_block(p["moe"], h, cfg, mesh, batch_axes=batch_axes,
+                             capacity_floor=capacity_floor)
+    else:
+        ffn, lb = L.mlp_apply(p["mlp"], h, act=cfg.act), jnp.zeros((), jnp.float32)
+    if cfg.post_norm:
+        ffn = L.rmsnorm(p["ln2_post"], ffn, eps=cfg.norm_eps)
+    return x + ffn, new_kv, lb
+
+
+def _embed(params, tokens, cfg: ModelConfig):
+    x = params["embed"][tokens]
+    if cfg.embed_scale:
+        x = x * jnp.asarray(math.sqrt(cfg.d_model), x.dtype)
+    return x
+
+
+def _unembed(params, x, cfg: ModelConfig):
+    w = params.get("unembed", params["embed"])
+    logits = x @ w.T
+    if cfg.final_logit_softcap:
+        c = cfg.final_logit_softcap
+        logits = c * jnp.tanh(logits / c)
+    return logits
+
+
+# ---------------------------------------------------------------------------
+# full teacher-forced forward (train / eval)
+# ---------------------------------------------------------------------------
+def forward(params, tokens, cfg: ModelConfig, *, mesh=None,
+            batch_axes=("data",), remat: bool = True,
+            long_context: bool = False, seq_shard: bool = False,
+            remat_policy: str = "full", attn_shard=None):
+    """tokens (B, S) -> logits (B, S, V).
+
+    ``seq_shard`` (perf option, Korthikanti-style sequence parallelism):
+    constrain the residual stream to be sequence-sharded over the 'model'
+    axis between layers, so GSPMD turns each per-layer Megatron activation
+    all-reduce into a reduce-scatter + all-gather pair (half the bytes,
+    and the gather overlaps the next layer's compute).
+    ``remat_policy``: 'full' (recompute everything) or 'dots' (save matmul
+    outputs — trades HBM for recompute FLOPs).
+    """
+    B, S = tokens.shape
+    x = _embed(params, tokens, cfg)
+    positions = jnp.arange(S)[None, :].repeat(B, 0)
+    windows = jnp.asarray(layer_windows(cfg, long_context=long_context))
+
+    def constrain(x):
+        if seq_shard and mesh is not None:
+            from jax.sharding import NamedSharding, PartitionSpec as P
+            x = jax.lax.with_sharding_constraint(
+                x, NamedSharding(mesh, P(batch_axes, "model", None)))
+        return x
+
+    def body(x, scanned):
+        p_l, win = scanned
+        x, _, lb = _layer(p_l, x, positions, cfg, window=win,
+                          mesh=mesh, batch_axes=batch_axes,
+                          attn_shard=attn_shard)
+        return constrain(x), lb
+
+    if remat:
+        policy = {
+            "full": None,
+            "dots": jax.checkpoint_policies.dots_with_no_batch_dims_saveable,
+            "save_ffn": jax.checkpoint_policies.save_only_these_names(
+                "moe_out", "attn_out", "ep_recv"),
+        }[remat_policy]
+        body = jax.checkpoint(body, policy=policy)
+    x, lbs = jax.lax.scan(body, constrain(x), (params["layers"], windows))
+    x = L.rmsnorm(params["final_norm"], x, eps=cfg.norm_eps)
+    return _unembed(params, x, cfg), jnp.sum(lbs)
+
+
+def loss_fn(params, batch, cfg: ModelConfig, *, mesh=None,
+            batch_axes=("data",), lb_weight: float = 0.01, **fwd_kw):
+    logits, lb = forward(params, batch["tokens"], cfg, mesh=mesh,
+                         batch_axes=batch_axes, **fwd_kw)
+    ce = L.softmax_cross_entropy(logits, batch["labels"])
+    return ce + lb_weight * lb, {"ce": ce, "lb": lb}
+
+
+# ---------------------------------------------------------------------------
+# serving: prefill + decode
+# ---------------------------------------------------------------------------
+def init_cache(cfg: ModelConfig, batch: int, max_len: int,
+               *, dtype=jnp.bfloat16) -> Dict[str, Any]:
+    kvh, dh, nl = cfg.num_kv_heads, cfg.head_dim, cfg.num_layers
+    return {
+        "k": jnp.zeros((nl, batch, max_len, kvh, dh), dtype),
+        "v": jnp.zeros((nl, batch, max_len, kvh, dh), dtype),
+        "pos": jnp.zeros((), jnp.int32),          # next write position
+    }
+
+
+def prefill(params, tokens, cfg: ModelConfig, *, mesh=None,
+            batch_axes=("data",), long_context: bool = False):
+    """tokens (B, S) -> (last-token logits (B, V), cache)."""
+    B, S = tokens.shape
+    x = _embed(params, tokens, cfg)
+    positions = jnp.arange(S)[None, :].repeat(B, 0)
+    windows = jnp.asarray(layer_windows(cfg, long_context=long_context))
+
+    def body(x, scanned):
+        p_l, win = scanned
+        x, kv, _ = _layer(p_l, x, positions, cfg, window=win,
+                          mesh=mesh, batch_axes=batch_axes)
+        return x, kv
+
+    x, (ks, vs) = jax.lax.scan(jax.checkpoint(body), x,
+                               (params["layers"], windows))
+    x = L.rmsnorm(params["final_norm"], x, eps=cfg.norm_eps)
+    logits = _unembed(params, x[:, -1:], cfg)[:, 0]
+    cache = {"k": ks, "v": vs, "pos": jnp.asarray(S, jnp.int32)}
+    return logits, cache
+
+
+def decode_step(params, token, cache, cfg: ModelConfig, *, mesh=None,
+                batch_axes=("data",), long_context: bool = False,
+                capacity_floor: int = 8):
+    """One-token decode.  token (B,) int32; cache from init_cache/prefill.
+
+    Sliding-window/ring semantics: when the cache is smaller than the
+    logical position, writes wrap (pos % cache_len) — keys are stored
+    post-RoPE at absolute positions so slot order is irrelevant; masking
+    uses per-slot positions reconstructed from the write pattern.
+    """
+    B = token.shape[0]
+    cache_len = cache["k"].shape[2]
+    pos = cache["pos"]
+    write_idx = pos % cache_len
+    x = _embed(params, token[:, None], cfg)
+    positions = jnp.full((B, 1), pos, jnp.int32)
+    windows = jnp.asarray(layer_windows(cfg, long_context=long_context))
+
+    # absolute position held in each cache slot after this step's write:
+    # slot s holds the largest p <= pos with p % cache_len == s
+    slots = jnp.arange(cache_len)
+    slot_pos = pos - ((pos - slots) % cache_len)
+    slot_valid = slot_pos >= 0
+
+    def body(x, scanned):
+        p_l, win, ck, cv = scanned
+        win_eff = jnp.where(win > 0, win, jnp.iinfo(jnp.int32).max)
+        h = L.rmsnorm(p_l["ln1"], x, eps=cfg.norm_eps)
+        H, KVH, Dh = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+        q = (h @ p_l["attn"]["wq"]).reshape(B, 1, H, Dh)
+        k = (h @ p_l["attn"]["wk"]).reshape(B, 1, KVH, Dh)
+        v = (h @ p_l["attn"]["wv"]).reshape(B, 1, KVH, Dh)
+        if "q_norm" in p_l["attn"]:
+            q = L.rmsnorm(p_l["attn"]["q_norm"], q)
+            k = L.rmsnorm(p_l["attn"]["k_norm"], k)
+        q = L.rope(q, positions, theta=cfg.rope_theta)
+        k = L.rope(k, positions, theta=cfg.rope_theta)
+        ck = jax.lax.dynamic_update_slice(ck, k.astype(ck.dtype),
+                                          (0, write_idx, 0, 0))
+        cv = jax.lax.dynamic_update_slice(cv, v.astype(cv.dtype),
+                                          (0, write_idx, 0, 0))
+        out = _decode_attention(q, ck, cv, slot_pos=slot_pos,
+                                slot_valid=slot_valid, q_pos=pos,
+                                window=win_eff,
+                                softcap=cfg.attn_logit_softcap)
+        attn_out = out.reshape(B, 1, H * Dh) @ p_l["attn"]["wo"]
+        if cfg.post_norm:
+            attn_out = L.rmsnorm(p_l["ln1_post"], attn_out, eps=cfg.norm_eps)
+        x = x + attn_out
+        h2 = L.rmsnorm(p_l["ln2"], x, eps=cfg.norm_eps)
+        if cfg.is_moe:
+            ffn, _ = _moe_block(p_l["moe"], h2, cfg, mesh,
+                                batch_axes=batch_axes,
+                                capacity_floor=capacity_floor)
+        else:
+            ffn = L.mlp_apply(p_l["mlp"], h2, act=cfg.act)
+        if cfg.post_norm:
+            ffn = L.rmsnorm(p_l["ln2_post"], ffn, eps=cfg.norm_eps)
+        return x + ffn, (ck, cv)
+
+    x, (ks, vs) = jax.lax.scan(body, x,
+                               (params["layers"], windows,
+                                cache["k"], cache["v"]))
+    x = L.rmsnorm(params["final_norm"], x, eps=cfg.norm_eps)
+    logits = _unembed(params, x, cfg)[:, 0]
+    new_cache = {"k": ks, "v": vs, "pos": pos + 1}
+    return logits, new_cache
+
+
+def _decode_attention(q, k_cache, v_cache, *, slot_pos, slot_valid, q_pos,
+                      window, softcap):
+    """q (B,1,H,Dh) vs ring cache (B,Sc,KVH,Dh) with explicit slot positions."""
+    B, _, H, Dh = q.shape
+    KVH = k_cache.shape[2]
+    G = H // KVH
+    qg = q.reshape(B, KVH, G, Dh).astype(jnp.float32) / math.sqrt(Dh)
+    s = jnp.einsum("bhgd,bkhd->bhgk", qg, k_cache.astype(jnp.float32))
+    if softcap is not None:
+        s = softcap * jnp.tanh(s / softcap)
+    ok = slot_valid & (slot_pos <= q_pos) & ((q_pos - slot_pos) < window)
+    s = jnp.where(ok[None, None, None, :], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bhgk,bkhd->bhgd", p, v_cache.astype(jnp.float32))
+    return out.reshape(B, 1, H, Dh).astype(q.dtype)

@@ -1,0 +1,172 @@
+"""DiT-MoE: Diffusion Transformer with Mixture-of-Experts FFNs.
+
+Faithful to DiT-MoE (Fei et al., arXiv:2407.11633) as used by the paper:
+adaLN-zero DiT blocks, MoE FFN with top-k routed experts + shared experts,
+class-conditional with a null class for CFG.  The paper's configurations:
+XL = 28 layers / 8 experts (+2 shared), G = 40 layers / 16 experts (+2
+shared), top-2 routing.
+
+The forward pass takes per-MoE-layer staleness state (repro.core.staleness)
+so one implementation serves every schedule: synchronous EP, displaced EP,
+interweaved, and full DICE.  DistriFusion (displaced patch parallelism) is
+selected via ``patch_parallel_ndev`` and threads attention-KV states
+instead.
+"""
+from __future__ import annotations
+
+import math
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.common.config import ModelConfig
+from repro.core import staleness as stale_lib
+from repro.core.patch_parallel import PatchParallelState, displaced_patch_attention
+from repro.core.schedules import DiceConfig, Schedule
+from repro.core import moe as moe_lib
+from repro.models import layers as L
+
+
+# ---------------------------------------------------------------------------
+# embeddings
+# ---------------------------------------------------------------------------
+def timestep_embedding(t, dim: int = 256):
+    """Sinusoidal embedding of continuous t in [0, 1]. t: (B,)."""
+    half = dim // 2
+    freqs = jnp.exp(-math.log(10000.0) * jnp.arange(half) / half)
+    ang = t[:, None] * 1000.0 * freqs[None]
+    return jnp.concatenate([jnp.cos(ang), jnp.sin(ang)], axis=-1)
+
+
+# ---------------------------------------------------------------------------
+# init
+# ---------------------------------------------------------------------------
+def init_dit(key, cfg: ModelConfig, *, dtype=jnp.float32) -> Dict[str, Any]:
+    d, c_in = cfg.d_model, cfg.in_channels
+    keys = jax.random.split(key, cfg.num_layers + 6)
+    params: Dict[str, Any] = {
+        "patch_embed": L.dense_init(keys[0], (c_in, d), dtype=dtype),
+        "pos_embed": 0.02 * jax.random.normal(keys[1], (cfg.patch_tokens, d)).astype(dtype),
+        "t_mlp1": L.dense_init(keys[2], (256, d), dtype=dtype),
+        "t_mlp2": L.dense_init(keys[3], (d, d), dtype=dtype),
+        # +1 null class for classifier-free guidance
+        "class_embed": 0.02 * jax.random.normal(
+            keys[4], (cfg.num_classes + 1, d)).astype(dtype),
+        "final_mod": jnp.zeros((d, 2 * d), dtype),
+        "final_out": jnp.zeros((d, c_in), dtype),   # zero-init output layer
+        "final_norm": L.rmsnorm_init(d),
+    }
+    blocks = []
+    for i in range(cfg.num_layers):
+        kb = jax.random.split(keys[5 + i], 3)
+        blocks.append({
+            "ln1": L.rmsnorm_init(d),
+            "ln2": L.rmsnorm_init(d),
+            "attn": L.attn_init(kb[0], d, cfg.num_heads, cfg.num_kv_heads,
+                                cfg.head_dim, dtype=dtype),
+            "moe": moe_lib.moe_init(kb[1], cfg, dtype=dtype),
+            "adaln": jnp.zeros((d, 6 * d), dtype),  # adaLN-zero: zero-init
+        })
+    params["blocks"] = blocks                       # python list: per-layer state
+    return params
+
+
+# ---------------------------------------------------------------------------
+# forward
+# ---------------------------------------------------------------------------
+def _modulate(x, shift, scale):
+    return x * (1.0 + scale[:, None, :]) + shift[:, None, :]
+
+
+def dit_forward(params, x, t, y, cfg: ModelConfig, dcfg: DiceConfig,
+                states: Dict[int, stale_lib.MoELayerState], *,
+                step_idx: int,
+                patch_states: Optional[Dict[int, PatchParallelState]] = None,
+                patch_parallel_ndev: int = 0,
+                ep_axis: Optional[str] = None,
+                key=None,
+                use_pallas: bool = False):
+    """Velocity prediction.
+
+    x: (B, T, C_in) latents; t: (B,) times; y: (B,) class ids
+    (cfg.num_classes = null/uncond).  Returns (v, new_states,
+    new_patch_states, aux dict).
+    """
+    B, T, _ = x.shape
+    d = cfg.d_model
+    h = x @ params["patch_embed"] + params["pos_embed"][None]
+    temb = timestep_embedding(t) @ params["t_mlp1"]
+    temb = jax.nn.silu(temb) @ params["t_mlp2"]
+    c = temb + params["class_embed"][y]             # (B, d)
+    positions = jnp.arange(T)[None, :].repeat(B, 0)
+
+    new_states: Dict[int, stale_lib.MoELayerState] = {}
+    new_patch: Dict[int, PatchParallelState] = {}
+    total_lb = 0.0
+    total_dispatch_bytes = 0.0
+    dropped = 0.0
+
+    for i, blk in enumerate(params["blocks"]):
+        mod = jax.nn.silu(c) @ blk["adaln"]         # (B, 6d)
+        s1, sc1, g1, s2, sc2, g2 = jnp.split(mod, 6, axis=-1)
+
+        hn = _modulate(L.rmsnorm(blk["ln1"], h, eps=cfg.norm_eps), s1, sc1)
+        if patch_parallel_ndev:
+            q = (hn @ blk["attn"]["wq"]).reshape(B, T, cfg.num_heads, cfg.head_dim)
+            k = (hn @ blk["attn"]["wk"]).reshape(B, T, cfg.num_kv_heads, cfg.head_dim)
+            v = (hn @ blk["attn"]["wv"]).reshape(B, T, cfg.num_kv_heads, cfg.head_dim)
+            pstate = patch_states.get(i, PatchParallelState()) if patch_states else PatchParallelState()
+            attn, pnew = displaced_patch_attention(
+                q, k, v, pstate, n_dev=patch_parallel_ndev,
+                warmup=step_idx < dcfg.warmup_steps)
+            attn = attn.reshape(B, T, -1) @ blk["attn"]["wo"]
+            new_patch[i] = pnew
+        else:
+            attn, _ = L.attn_apply(blk["attn"], hn, positions, cfg,
+                                   causal=False)
+        h = h + g1[:, None, :] * attn
+
+        hn = _modulate(L.rmsnorm(blk["ln2"], h, eps=cfg.norm_eps), s2, sc2)
+        if patch_parallel_ndev:
+            # DistriFusion replicates the model: MoE runs locally + fresh.
+            flat = hn.reshape(B * T, d)
+            moe_out, aux = moe_lib.moe_forward(blk["moe"], flat, cfg,
+                                               use_pallas=use_pallas)
+            new_st = stale_lib.MoELayerState()
+        else:
+            flat = hn.reshape(B * T, d)
+            moe_out, new_st, aux = stale_lib.moe_step(
+                blk["moe"], flat, cfg, dcfg, states[i],
+                moe_layer_idx=i, num_moe_layers=cfg.num_layers,
+                step_idx=step_idx, key=key, ep_axis=ep_axis,
+                use_pallas=use_pallas)
+        new_states[i] = new_st
+        total_lb += aux.lb_loss
+        total_dispatch_bytes += aux.dispatch_bytes
+        dropped += aux.dropped_frac
+        h = h + g2[:, None, :] * moe_out.reshape(B, T, d).astype(h.dtype)
+
+    fmod = jax.nn.silu(c) @ params["final_mod"]
+    fs, fsc = jnp.split(fmod, 2, axis=-1)
+    h = _modulate(L.rmsnorm(params["final_norm"], h, eps=cfg.norm_eps), fs, fsc)
+    v = h @ params["final_out"]
+    aux_out = {
+        "lb_loss": total_lb / cfg.num_layers,
+        "dispatch_bytes": total_dispatch_bytes,
+        "dropped_frac": dropped / cfg.num_layers,
+        "buffer_bytes": stale_lib.state_bytes(new_states)
+        + sum(p.bytes() for p in new_patch.values()),
+    }
+    return v, new_states, new_patch, aux_out
+
+
+# ---------------------------------------------------------------------------
+# training-mode forward (synchronous, differentiable)
+# ---------------------------------------------------------------------------
+def dit_train_forward(params, x, t, y, cfg: ModelConfig, *, key=None):
+    dcfg = DiceConfig.sync_ep()
+    states = stale_lib.init_layer_states(cfg.num_layers)
+    v, _, _, aux = dit_forward(params, x, t, y, cfg, dcfg, states,
+                               step_idx=0, key=key)
+    return v, aux

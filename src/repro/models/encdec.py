@@ -1,0 +1,209 @@
+"""SeamlessM4T-v2-large-style encoder-decoder backbone (arXiv:2308.11596).
+
+Per the brief the audio frontend (mel-spectrogram + conv feature extractor)
+is a STUB: ``audio_frames`` (B, num_audio_frames, d_model) arrive
+precomputed.  We implement the transformer: a bidirectional encoder over
+frames and a causal text decoder with cross-attention to the encoder
+memory.  Serving: ``prefill`` encodes once + runs the decoder prompt;
+``decode_step`` attends to the cached encoder memory (cross K/V cached).
+"""
+from __future__ import annotations
+
+import math
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro.common.config import ModelConfig
+from repro.models import layers as L
+from repro.models import dense
+
+
+def init_encdec(key, cfg: ModelConfig, *, dtype=jnp.bfloat16) -> Dict[str, Any]:
+    ke, kd, kx, ku, kv = jax.random.split(key, 5)
+
+    def enc_layer(k):
+        ka, km = jax.random.split(k)
+        return {
+            "ln1": L.rmsnorm_init(cfg.d_model),
+            "ln2": L.rmsnorm_init(cfg.d_model),
+            "attn": L.attn_init(ka, cfg.d_model, cfg.num_heads,
+                                cfg.num_kv_heads, cfg.head_dim, dtype=dtype),
+            "mlp": L.mlp_init(km, cfg.d_model, cfg.d_ff, dtype=dtype),
+        }
+
+    def dec_layer(k):
+        ka, kc, km = jax.random.split(k, 3)
+        return {
+            "ln1": L.rmsnorm_init(cfg.d_model),
+            "ln_x": L.rmsnorm_init(cfg.d_model),
+            "ln2": L.rmsnorm_init(cfg.d_model),
+            "attn": L.attn_init(ka, cfg.d_model, cfg.num_heads,
+                                cfg.num_kv_heads, cfg.head_dim, dtype=dtype),
+            "xattn": L.attn_init(kc, cfg.d_model, cfg.num_heads,
+                                 cfg.num_kv_heads, cfg.head_dim, dtype=dtype),
+            "mlp": L.mlp_init(km, cfg.d_model, cfg.d_ff, dtype=dtype),
+        }
+
+    enc = jax.tree.map(lambda *xs: jnp.stack(xs),
+                       *[enc_layer(k) for k in jax.random.split(ke, cfg.encoder_layers)])
+    dec = jax.tree.map(lambda *xs: jnp.stack(xs),
+                       *[dec_layer(k) for k in jax.random.split(kd, cfg.num_layers)])
+    return {
+        "enc_layers": enc,
+        "enc_norm": L.rmsnorm_init(cfg.d_model),
+        "dec_layers": dec,
+        "embed": L.dense_init(ku, (cfg.vocab_size, cfg.d_model),
+                              scale=0.02, dtype=dtype),
+        "final_norm": L.rmsnorm_init(cfg.d_model),
+        "unembed": L.dense_init(kv, (cfg.vocab_size, cfg.d_model),
+                                scale=1.0 / math.sqrt(cfg.d_model), dtype=dtype),
+    }
+
+
+# ---------------------------------------------------------------------------
+# encoder
+# ---------------------------------------------------------------------------
+def encode(params, audio_frames, cfg: ModelConfig):
+    """audio_frames (B, Tf, d) -> encoder memory (B, Tf, d)."""
+    B, Tf, _ = audio_frames.shape
+    x = audio_frames.astype(params["embed"].dtype)
+    positions = jnp.arange(Tf)[None, :].repeat(B, 0)
+
+    def body(x, p_l):
+        h = L.rmsnorm(p_l["ln1"], x, eps=cfg.norm_eps)
+        a, _ = L.attn_apply(p_l["attn"], h, positions, cfg, causal=False)
+        x = x + a
+        h = L.rmsnorm(p_l["ln2"], x, eps=cfg.norm_eps)
+        return x + L.mlp_apply(p_l["mlp"], h, act=cfg.act), None
+
+    x, _ = jax.lax.scan(jax.checkpoint(body), x, params["enc_layers"])
+    return L.rmsnorm(params["enc_norm"], x, eps=cfg.norm_eps)
+
+
+def _memory_kv(params, memory, cfg: ModelConfig):
+    """Per-decoder-layer cross K/V over the encoder memory (computed once)."""
+    B, Tf, _ = memory.shape
+    KVH, Dh = cfg.num_kv_heads, cfg.head_dim
+
+    def one(p_l):
+        k = (memory @ p_l["xattn"]["wk"]).reshape(B, Tf, KVH, Dh)
+        v = (memory @ p_l["xattn"]["wv"]).reshape(B, Tf, KVH, Dh)
+        return k, v
+
+    return jax.vmap(one)(params["dec_layers"])
+
+
+# ---------------------------------------------------------------------------
+# decoder
+# ---------------------------------------------------------------------------
+def _dec_layer(p_l, x, positions, mem_kv, cfg: ModelConfig, *, kv_cache=None,
+               cache_pos=None, kv_valid_len=None, window=None):
+    B, S, _ = x.shape
+    H, Dh = cfg.num_heads, cfg.head_dim
+    h = L.rmsnorm(p_l["ln1"], x, eps=cfg.norm_eps)
+    a, new_kv = L.attn_apply(p_l["attn"], h, positions, cfg,
+                             kv_cache=kv_cache, cache_pos=cache_pos,
+                             kv_valid_len=kv_valid_len, window=window)
+    x = x + a
+    h = L.rmsnorm(p_l["ln_x"], x, eps=cfg.norm_eps)
+    q = (h @ p_l["xattn"]["wq"]).reshape(B, S, H, Dh)
+    xa = L.attention(q, mem_kv[0], mem_kv[1], causal=False)
+    x = x + xa.reshape(B, S, H * Dh) @ p_l["xattn"]["wo"]
+    h = L.rmsnorm(p_l["ln2"], x, eps=cfg.norm_eps)
+    return x + L.mlp_apply(p_l["mlp"], h, act=cfg.act), new_kv
+
+
+def forward(params, tokens, audio_frames, cfg: ModelConfig, **_):
+    """Teacher-forced decoder logits given audio frames."""
+    B, S = tokens.shape
+    memory = encode(params, audio_frames, cfg)
+    mem_k, mem_v = _memory_kv(params, memory, cfg)
+    x = params["embed"][tokens]
+    positions = jnp.arange(S)[None, :].repeat(B, 0)
+
+    def body(x, scanned):
+        p_l, mk, mv = scanned
+        x, _ = _dec_layer(p_l, x, positions, (mk, mv), cfg)
+        return x, None
+
+    x, _ = jax.lax.scan(jax.checkpoint(body), x,
+                        (params["dec_layers"], mem_k, mem_v))
+    x = L.rmsnorm(params["final_norm"], x, eps=cfg.norm_eps)
+    return x @ params["unembed"].T, jnp.zeros((), jnp.float32)
+
+
+def loss_fn(params, batch, cfg: ModelConfig, **kw):
+    logits, _ = forward(params, batch["tokens"], batch["audio_frames"], cfg)
+    ce = L.softmax_cross_entropy(logits, batch["labels"])
+    return ce, {"ce": ce}
+
+
+def prefill(params, tokens, audio_frames, cfg: ModelConfig, **_):
+    """Encode audio + run decoder prompt; returns (logits, cache)."""
+    B, S = tokens.shape
+    memory = encode(params, audio_frames, cfg)
+    mem_k, mem_v = _memory_kv(params, memory, cfg)
+    x = params["embed"][tokens]
+    positions = jnp.arange(S)[None, :].repeat(B, 0)
+
+    def body(x, scanned):
+        p_l, mk, mv = scanned
+        x, kv = _dec_layer(p_l, x, positions, (mk, mv), cfg)
+        return x, kv
+
+    x, (ks, vs) = jax.lax.scan(jax.checkpoint(body), x,
+                               (params["dec_layers"], mem_k, mem_v))
+    x = L.rmsnorm(params["final_norm"], x, eps=cfg.norm_eps)
+    logits = (x[:, -1:] @ params["unembed"].T)[:, 0]
+    cache = {"k": ks, "v": vs, "mem_k": mem_k, "mem_v": mem_v,
+             "pos": jnp.asarray(S, jnp.int32)}
+    return logits, cache
+
+
+def decode_step(params, token, cache, cfg: ModelConfig, *, window=None, **_):
+    """One decoder token against cached self KV + encoder memory KV."""
+    B = token.shape[0]
+    cache_len = cache["k"].shape[2]
+    pos = cache["pos"]
+    write_idx = pos % cache_len
+    x = params["embed"][token[:, None]]
+    positions = jnp.full((B, 1), pos, jnp.int32)
+    slots = jnp.arange(cache_len)
+    slot_pos = pos - ((pos - slots) % cache_len)
+    valid = slot_pos >= 0
+    win = jnp.asarray(window or jnp.iinfo(jnp.int32).max)
+    H, KVH, Dh = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+
+    def body(x, scanned):
+        p_l, ck, cv, mk, mv = scanned
+        h = L.rmsnorm(p_l["ln1"], x, eps=cfg.norm_eps)
+        q = (h @ p_l["attn"]["wq"]).reshape(B, 1, H, Dh)
+        k = (h @ p_l["attn"]["wk"]).reshape(B, 1, KVH, Dh)
+        v = (h @ p_l["attn"]["wv"]).reshape(B, 1, KVH, Dh)
+        q = L.rope(q, positions, theta=cfg.rope_theta)
+        k = L.rope(k, positions, theta=cfg.rope_theta)
+        ck = jax.lax.dynamic_update_slice(ck, k.astype(ck.dtype),
+                                          (0, write_idx, 0, 0))
+        cv = jax.lax.dynamic_update_slice(cv, v.astype(cv.dtype),
+                                          (0, write_idx, 0, 0))
+        out = dense._decode_attention(q, ck, cv, slot_pos=slot_pos,
+                                      slot_valid=valid, q_pos=pos, window=win,
+                                      softcap=None)
+        x = x + out.reshape(B, 1, H * Dh) @ p_l["attn"]["wo"]
+        h = L.rmsnorm(p_l["ln_x"], x, eps=cfg.norm_eps)
+        qx = (h @ p_l["xattn"]["wq"]).reshape(B, 1, H, Dh)
+        xa = L.attention(qx, mk, mv, causal=False)
+        x = x + xa.reshape(B, 1, H * Dh) @ p_l["xattn"]["wo"]
+        h = L.rmsnorm(p_l["ln2"], x, eps=cfg.norm_eps)
+        x = x + L.mlp_apply(p_l["mlp"], h, act=cfg.act)
+        return x, (ck, cv)
+
+    x, (ks, vs) = jax.lax.scan(body, x,
+                               (params["dec_layers"], cache["k"], cache["v"],
+                                cache["mem_k"], cache["mem_v"]))
+    x = L.rmsnorm(params["final_norm"], x, eps=cfg.norm_eps)
+    logits = (x @ params["unembed"].T)[:, 0]
+    new_cache = dict(cache, k=ks, v=vs, pos=pos + 1)
+    return logits, new_cache

@@ -1,0 +1,270 @@
+"""Shared neural-net layers (pure JAX, functional params-as-pytrees).
+
+Every layer is an ``init_*(key, ...) -> params`` / ``apply(params, x, ...)``
+pair.  Attention supports the variants needed by the assigned architecture
+pool: GQA, RoPE, qk-norm (qwen3), attention-logit softcap (gemma2), sliding
+windows (gemma2 local layers, long-context decode variants), and a blocked
+online-softmax path so 32k prefill never materialises an S x S score tensor.
+"""
+from __future__ import annotations
+
+import math
+from functools import partial
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+DEFAULT_BLOCK_KV = 2048
+_DENSE_SCORE_LIMIT = 2 ** 22        # Sq*Sk above this -> blocked attention
+
+
+# ---------------------------------------------------------------------------
+# init helpers
+# ---------------------------------------------------------------------------
+def dense_init(key, shape, *, scale: Optional[float] = None, dtype=jnp.float32):
+    # fan-in is the contracted dim: second-to-last (leading dims are stacking,
+    # e.g. (num_experts, d_in, d_out) or (num_layers, d_in, d_out)).
+    fan_in = shape[-2] if len(shape) >= 2 else shape[-1]
+    scale = scale if scale is not None else 1.0 / math.sqrt(fan_in)
+    return (jax.random.normal(key, shape) * scale).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# norms
+# ---------------------------------------------------------------------------
+def rmsnorm_init(d: int):
+    return {"scale": jnp.zeros((d,), jnp.float32)}
+
+
+def rmsnorm(params, x, *, eps: float = 1e-6):
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x32), axis=-1, keepdims=True)
+    y = x32 * jax.lax.rsqrt(var + eps) * (1.0 + params["scale"])
+    return y.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# RoPE
+# ---------------------------------------------------------------------------
+def rope(x, positions, *, theta: float = 10000.0):
+    """x: (..., S, H, Dh); positions: broadcastable to (..., S)."""
+    dh = x.shape[-1]
+    half = dh // 2
+    freq = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    ang = positions[..., None].astype(jnp.float32) * freq      # (..., S, half)
+    cos, sin = jnp.cos(ang)[..., None, :], jnp.sin(ang)[..., None, :]
+    x1, x2 = x[..., :half], x[..., half:]
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# attention
+# ---------------------------------------------------------------------------
+def _softcap(scores, cap):
+    if cap is None:
+        return scores
+    return cap * jnp.tanh(scores / cap)
+
+
+def attention(q, k, v, *, causal: bool = False,
+              window=None, softcap: Optional[float] = None,
+              q_offset=0, kv_valid_len=None,
+              block_kv: int = DEFAULT_BLOCK_KV):
+    """Grouped-query attention.
+
+    q: (B, Sq, H, Dh);  k, v: (B, Sk, KVH, Dh).  ``window`` (may be a traced
+    per-layer scalar) keeps key j visible to query i iff i - j < window.
+    ``kv_valid_len`` masks a partially-filled KV cache.  Dispatches to a
+    blocked online-softmax path when Sq*Sk is large.
+    """
+    B, Sq, H, Dh = q.shape
+    Sk, KVH = k.shape[1], k.shape[2]
+    if Sq * Sk > _DENSE_SCORE_LIMIT:
+        return _blocked_attention(q, k, v, causal=causal, window=window,
+                                  softcap=softcap, q_offset=q_offset,
+                                  kv_valid_len=kv_valid_len, block_kv=block_kv)
+    G = H // KVH
+    qg = q.reshape(B, Sq, KVH, G, Dh)
+    scale = 1.0 / math.sqrt(Dh)
+    scores = jnp.einsum("bqhgd,bkhd->bhgqk", qg.astype(jnp.float32),
+                        k.astype(jnp.float32)) * scale
+    scores = _softcap(scores, softcap)
+    pq = q_offset + jnp.arange(Sq)
+    pk = jnp.arange(Sk)
+    mask = jnp.ones((Sq, Sk), bool)
+    if causal:
+        mask &= pq[:, None] >= pk[None, :]
+    if window is not None:
+        mask &= (pq[:, None] - pk[None, :]) < window
+    if kv_valid_len is not None:
+        mask &= pk[None, :] < kv_valid_len
+    scores = jnp.where(mask[None, None, None], scores, -1e30)
+    probs = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bhgqk,bkhd->bqhgd", probs, v.astype(jnp.float32))
+    return out.reshape(B, Sq, H, Dh).astype(q.dtype)
+
+
+def _blocked_attention(q, k, v, *, causal, window, softcap, q_offset,
+                       kv_valid_len, block_kv):
+    """Online-softmax over KV blocks (pure JAX flash-attention analogue)."""
+    B, Sq, H, Dh = q.shape
+    Sk, KVH = k.shape[1], k.shape[2]
+    G = H // KVH
+    nblk = -(-Sk // block_kv)
+    pad = nblk * block_kv - Sk
+    if pad:
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    kb = k.reshape(B, nblk, block_kv, KVH, Dh)
+    vb = v.reshape(B, nblk, block_kv, KVH, Dh)
+    # keep operands in model dtype (bf16 on TPU) and accumulate in f32 on
+    # the MXU — halves the bytes any sharding boundary has to move
+    qg = q.reshape(B, Sq, KVH, G, Dh) * jnp.asarray(1.0 / math.sqrt(Dh),
+                                                    q.dtype)
+    pq = q_offset + jnp.arange(Sq)
+    valid = Sk if kv_valid_len is None else kv_valid_len
+
+    def body(carry, blk):
+        m, l, acc = carry
+        kj, vj, j = blk
+        pk = j * block_kv + jnp.arange(block_kv)
+        s = jnp.einsum("bqhgd,bkhd->bhgqk", qg, kj,
+                       preferred_element_type=jnp.float32)
+        s = _softcap(s, softcap)
+        msk = pk[None, :] < valid
+        if causal:
+            msk &= pq[:, None] >= pk[None, :]
+        if window is not None:
+            msk &= (pq[:, None] - pk[None, :]) < window
+        s = jnp.where(msk[None, None, None], s, -1e30)
+        m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+        p = jnp.exp(s - m_new[..., None])
+        corr = jnp.exp(m - m_new)
+        l_new = l * corr + jnp.sum(p, axis=-1)
+        pv = jnp.einsum("bhgqk,bkhd->bhgqd", p.astype(vj.dtype), vj,
+                        preferred_element_type=jnp.float32)
+        acc_new = acc * corr[..., None] + pv
+        return (m_new, l_new, acc_new), None
+
+    m0 = jnp.full((B, KVH, G, Sq), -jnp.inf, jnp.float32)
+    l0 = jnp.zeros((B, KVH, G, Sq), jnp.float32)
+    a0 = jnp.zeros((B, KVH, G, Sq, Dh), jnp.float32)
+    kb_t = jnp.moveaxis(kb, 1, 0)
+    vb_t = jnp.moveaxis(vb, 1, 0)
+    (m, l, acc), _ = jax.lax.scan(body, (m0, l0, a0),
+                                  (kb_t, vb_t, jnp.arange(nblk)))
+    out = acc / jnp.maximum(l, 1e-30)[..., None]                # (B,KVH,G,Sq,Dh)
+    out = jnp.moveaxis(out, 3, 1).reshape(B, Sq, H, Dh)
+    return out.astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# attention block params
+# ---------------------------------------------------------------------------
+def attn_init(key, d_model: int, num_heads: int, num_kv_heads: int,
+              head_dim: int, *, qk_norm: bool = False, dtype=jnp.bfloat16):
+    ks = jax.random.split(key, 4)
+    p = {
+        "wq": dense_init(ks[0], (d_model, num_heads * head_dim), dtype=dtype),
+        "wk": dense_init(ks[1], (d_model, num_kv_heads * head_dim), dtype=dtype),
+        "wv": dense_init(ks[2], (d_model, num_kv_heads * head_dim), dtype=dtype),
+        "wo": dense_init(ks[3], (num_heads * head_dim, d_model), dtype=dtype),
+    }
+    if qk_norm:
+        p["q_norm"] = rmsnorm_init(head_dim)
+        p["k_norm"] = rmsnorm_init(head_dim)
+    return p
+
+
+def attn_apply(p, x, positions, cfg, *, kv_cache=None, cache_pos=None,
+               window=None, kv_valid_len=None, causal=True,
+               head_shard=None):
+    """Returns (out, new_kv) — new_kv is (k, v) of this call (post-RoPE).
+
+    ``head_shard``: optional (mesh, batch_axes) — pin q to head-sharded and
+    k/v to replicated layouts (Megatron attention pattern) so GSPMD never
+    reshards score blocks inside the blocked-attention loop.
+    """
+    B, S, _ = x.shape
+    H, KVH, Dh = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    q = (x @ p["wq"]).reshape(B, S, H, Dh)
+    k = (x @ p["wk"]).reshape(B, S, KVH, Dh)
+    v = (x @ p["wv"]).reshape(B, S, KVH, Dh)
+    if head_shard is not None:
+        mesh, ba, mode = head_shard
+        from jax.sharding import NamedSharding, PartitionSpec as P
+        ep = mesh.shape["model"]
+        if mode == "heads":
+            # Megatron layout: q head-sharded, k/v replicated
+            qspec = P(ba, None, "model" if H % ep == 0 else None, None)
+            kspec = P(ba, None, "model" if KVH % ep == 0 else None, None)
+        else:
+            # sequence layout (ring-attention style): q stays seq-sharded,
+            # k/v replicated — scores are computed fully locally
+            qspec = P(ba, "model" if S % ep == 0 else None, None, None)
+            kspec = P(ba, None, None, None)
+        q = jax.lax.with_sharding_constraint(q, NamedSharding(mesh, qspec))
+        k = jax.lax.with_sharding_constraint(k, NamedSharding(mesh, kspec))
+        v = jax.lax.with_sharding_constraint(v, NamedSharding(mesh, kspec))
+    if "q_norm" in p:
+        q = rmsnorm(p["q_norm"], q)
+        k = rmsnorm(p["k_norm"], k)
+    q = rope(q, positions, theta=cfg.rope_theta)
+    k = rope(k, positions, theta=cfg.rope_theta)
+    if kv_cache is not None:
+        ck, cv = kv_cache
+        ck = jax.lax.dynamic_update_slice(ck, k.astype(ck.dtype),
+                                          (0, cache_pos, 0, 0))
+        cv = jax.lax.dynamic_update_slice(cv, v.astype(cv.dtype),
+                                          (0, cache_pos, 0, 0))
+        k_use, v_use, new_kv = ck, cv, (ck, cv)
+        q_off = cache_pos
+    else:
+        k_use, v_use, new_kv = k, v, (k, v)
+        q_off = 0
+    out = attention(q, k_use, v_use, causal=causal, window=window,
+                    softcap=cfg.attn_logit_softcap, q_offset=q_off,
+                    kv_valid_len=kv_valid_len)
+    return out.reshape(B, S, H * Dh) @ p["wo"], new_kv
+
+
+# ---------------------------------------------------------------------------
+# gated MLP
+# ---------------------------------------------------------------------------
+def mlp_init(key, d_model: int, d_ff: int, *, dtype=jnp.bfloat16):
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {
+        "w_gate": dense_init(k1, (d_model, d_ff), dtype=dtype),
+        "w_up": dense_init(k2, (d_model, d_ff), dtype=dtype),
+        "w_down": dense_init(k3, (d_ff, d_model), dtype=dtype),
+    }
+
+
+def mlp_apply(p, x, *, act: str = "silu", hidden_shard=None):
+    """hidden_shard: optional (mesh, batch_axes) — pin the gated hidden to
+    d_ff-sharded over 'model' (Megatron layout: weights stay resident,
+    activations move)."""
+    fn = jax.nn.silu if act == "silu" else partial(jax.nn.gelu, approximate=True)
+    h = fn(x @ p["w_gate"]) * (x @ p["w_up"])
+    if hidden_shard is not None:
+        mesh, ba = hidden_shard
+        from jax.sharding import NamedSharding, PartitionSpec as P
+        if p["w_gate"].shape[-1] % mesh.shape["model"] == 0:
+            h = jax.lax.with_sharding_constraint(
+                h, NamedSharding(mesh, P(ba, None, "model")))
+    return h @ p["w_down"]
+
+
+# ---------------------------------------------------------------------------
+# losses
+# ---------------------------------------------------------------------------
+def softmax_cross_entropy(logits, labels, *, softcap: Optional[float] = None):
+    """Mean token cross-entropy, computed in f32."""
+    logits = logits.astype(jnp.float32)
+    if softcap is not None:
+        logits = softcap * jnp.tanh(logits / softcap)
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    return jnp.mean(lse - gold)

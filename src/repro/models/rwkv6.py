@@ -1,0 +1,245 @@
+"""RWKV-6 "Finch" (Peng et al., arXiv:2404.05892) — attention-free RNN LM.
+
+Data-dependent per-channel decay (the Finch novelty), token-shift mixing
+with LoRA-produced interpolation weights, bonus term u for the current
+token, and the RWKV squared-ReLU channel-mix FFN.
+
+Time mixing recurrence per head (d_k x d_v state S):
+    S_t   = diag(w_t) S_{t-1} + k_t^T v_t
+    out_t = r_t (S_{t-1} + diag(u) k_t^T v_t)
+with w_t = exp(-exp(decay_t)) computed from the shifted input.
+
+Layout: train/prefill run a chunked scan-of-scans (outer remat'd scan over
+chunks, inner scan over positions) — sequential in time, O(1) in sequence
+memory per step; decode carries (S, x_prev) state, O(1) per token — this is
+why rwkv6 runs long_500k natively.
+"""
+from __future__ import annotations
+
+import math
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.common.config import ModelConfig
+from repro.models import layers as L
+
+HEAD_DK = 64     # rwkv6 head size
+
+
+def _heads(cfg: ModelConfig) -> int:
+    return cfg.d_model // HEAD_DK
+
+
+# ---------------------------------------------------------------------------
+# init
+# ---------------------------------------------------------------------------
+def init_rwkv6(key, cfg: ModelConfig, *, dtype=jnp.bfloat16) -> Dict[str, Any]:
+    d, H = cfg.d_model, _heads(cfg)
+    n = cfg.num_layers
+    keys = jax.random.split(key, n + 2)
+
+    def one_layer(k):
+        ks = jax.random.split(k, 10)
+        lora = 64
+        return {
+            "ln1": L.rmsnorm_init(d),
+            "ln2": L.rmsnorm_init(d),
+            # token-shift mix coefficients (static part) for r,k,v,w,g
+            "mix": 0.5 * jnp.ones((5, d), dtype),
+            # data-dependent mix LoRA
+            "mix_lora_a": L.dense_init(ks[0], (d, 32), dtype=dtype),
+            "mix_lora_b": L.dense_init(ks[1], (32, 5 * d), scale=0.01, dtype=dtype),
+            "wr": L.dense_init(ks[2], (d, d), dtype=dtype),
+            "wk": L.dense_init(ks[3], (d, d), dtype=dtype),
+            "wv": L.dense_init(ks[4], (d, d), dtype=dtype),
+            "wg": L.dense_init(ks[5], (d, d), dtype=dtype),
+            "wo": L.dense_init(ks[6], (d, d), dtype=dtype),
+            # data-dependent decay LoRA (Finch): w_t from shifted input
+            "decay_base": jnp.full((d,), -6.0, dtype),      # slow decay init
+            "decay_lora_a": L.dense_init(ks[7], (d, lora), dtype=dtype),
+            "decay_lora_b": L.dense_init(ks[8], (lora, d), scale=0.01, dtype=dtype),
+            "bonus_u": 0.5 * jnp.ones((H, HEAD_DK), dtype),
+            "ln_x": L.rmsnorm_init(d),                       # group-norm stand-in
+            # channel mix (squared relu)
+            "cm_mix": 0.5 * jnp.ones((2, d), dtype),
+            "cm_k": L.dense_init(ks[9], (d, cfg.d_ff), dtype=dtype),
+            "cm_v": L.dense_init(jax.random.fold_in(k, 99), (cfg.d_ff, d), dtype=dtype),
+            "cm_r": L.dense_init(jax.random.fold_in(k, 98), (d, d), dtype=dtype),
+        }
+
+    layers = jax.tree.map(lambda *xs: jnp.stack(xs),
+                          *[one_layer(keys[i]) for i in range(n)])
+    return {
+        "embed": L.dense_init(keys[-2], (cfg.vocab_size, d), scale=0.02, dtype=dtype),
+        "layers": layers,
+        "final_norm": L.rmsnorm_init(d),
+        "unembed": L.dense_init(keys[-1], (cfg.vocab_size, d),
+                                scale=1.0 / math.sqrt(d), dtype=dtype),
+    }
+
+
+# ---------------------------------------------------------------------------
+# time mixing
+# ---------------------------------------------------------------------------
+def _mix_inputs(p, x, x_prev):
+    """Token-shift interpolation with data-dependent LoRA weights.
+
+    x, x_prev: (B, T, d) and the shifted-by-one sequence.  Returns the five
+    mixed streams (r, k, v, w, g inputs)."""
+    B, T, d = x.shape
+    base = p["mix"]                                         # (5, d)
+    dd = jnp.tanh(x @ p["mix_lora_a"]) @ p["mix_lora_b"]    # (B,T,5d)
+    dd = dd.reshape(B, T, 5, d)
+    mix = jnp.clip(base[None, None] + dd, 0.0, 1.0)
+    return x[:, :, None, :] * mix + x_prev[:, :, None, :] * (1.0 - mix)
+
+
+def _rkvwg(p, x, x_prev, cfg):
+    B, T, d = x.shape
+    H = _heads(cfg)
+    m = _mix_inputs(p, x, x_prev)                           # (B,T,5,d)
+    r = (m[:, :, 0] @ p["wr"]).reshape(B, T, H, HEAD_DK)
+    k = (m[:, :, 1] @ p["wk"]).reshape(B, T, H, HEAD_DK)
+    v = (m[:, :, 2] @ p["wv"]).reshape(B, T, H, HEAD_DK)
+    dec_in = m[:, :, 3]
+    decay = (p["decay_base"][None, None]
+             + jnp.tanh(dec_in @ p["decay_lora_a"]) @ p["decay_lora_b"])
+    logw = -jnp.exp(decay.astype(jnp.float32))              # (B,T,d) <= 0
+    logw = logw.reshape(B, T, H, HEAD_DK)
+    g = jax.nn.silu(m[:, :, 4] @ p["wg"])
+    return r, k, v, logw, g
+
+
+def _time_mix_scan(p, x, x_first, S0, cfg, *, chunk: int = 128,
+                   use_pallas: bool = False):
+    """Sequential RWKV6 recurrence over (B, T, d).
+
+    x_first: (B, d) token-shift input for position 0 (zeros at seq start,
+    the previous token's activations when continuing from state).
+    S0: (B, H, DK, DK) state.  Returns (out, S_T, x_last).
+
+    ``use_pallas``: route the recurrence through the VMEM-resident Pallas
+    kernel (kernels/rwkv6_scan.py) — the TPU path; the jnp scan below is
+    the CPU/reference path."""
+    B, T, d = x.shape
+    H = _heads(cfg)
+    x_prev = jnp.concatenate([x_first[:, None], x[:, :-1]], axis=1)
+    r, k, v, logw, g = _rkvwg(p, x, x_prev, cfg)
+    u = p["bonus_u"].astype(jnp.float32)
+
+    if use_pallas:
+        from repro.kernels.ops import rwkv6_scan
+        to_bhtd = lambda a: jnp.moveaxis(a, 2, 1)      # (B,T,H,DK)->(B,H,T,DK)
+        out, S = rwkv6_scan(to_bhtd(r), to_bhtd(k), to_bhtd(v),
+                            to_bhtd(logw), p["bonus_u"],
+                            S0.astype(jnp.float32))
+        out = jnp.moveaxis(out, 1, 2).reshape(B, T, H * HEAD_DK)
+        out = L.rmsnorm(p["ln_x"], out.astype(x.dtype))
+        out = (out * g) @ p["wo"]
+        return out, S, x[:, -1]
+
+    chunk = min(chunk, T)                    # decode: T=1 -> O(1) update
+    nchunk = -(-T // chunk)
+    pad = nchunk * chunk - T
+    if pad:
+        z = lambda a: jnp.pad(a, ((0, 0), (0, pad)) + ((0, 0),) * (a.ndim - 2))
+        r, k, v, logw = z(r), z(k), z(v), z(logw)
+
+    def chunk_body(S, inp):
+        rc, kc, vc, lwc = inp                               # (B, chunk, H, DK)
+
+        def step(S, t_in):
+            rt, kt, vt, lwt = t_in                          # (B,H,DK)
+            rt = rt.astype(jnp.float32)
+            kt = kt.astype(jnp.float32)
+            vt = vt.astype(jnp.float32)
+            w = jnp.exp(lwt)                                # (B,H,DK)
+            kv = kt[..., :, None] * vt[..., None, :]        # (B,H,DK,DK)
+            out = jnp.einsum("bhk,bhkv->bhv", rt, S + u[None, :, :, None] * kv)
+            S = w[..., :, None] * S + kv
+            return S, out
+
+        S, outs = jax.lax.scan(step, S,
+                               tuple(jnp.moveaxis(a, 1, 0) for a in (rc, kc, vc, lwc)))
+        return S, jnp.moveaxis(outs, 0, 1)                  # (B, chunk, H, DK)
+
+    to_chunks = lambda a: jnp.moveaxis(
+        a.reshape(B, nchunk, chunk, H, HEAD_DK), 1, 0)
+    S, outs = jax.lax.scan(jax.checkpoint(chunk_body), S0.astype(jnp.float32),
+                           tuple(to_chunks(a) for a in (r, k, v, logw)))
+    out = jnp.moveaxis(outs, 0, 1).reshape(B, nchunk * chunk, H * HEAD_DK)[:, :T]
+    out = L.rmsnorm(p["ln_x"], out.astype(x.dtype))
+    out = (out * g) @ p["wo"]
+    return out, S, x[:, -1]
+
+
+def _channel_mix(p, x, x_first):
+    x_prev = jnp.concatenate([x_first[:, None], x[:, :-1]], axis=1)
+    mk = p["cm_mix"][0]
+    mr = p["cm_mix"][1]
+    xk = x * mk + x_prev * (1 - mk)
+    xr = x * mr + x_prev * (1 - mr)
+    h = jnp.square(jax.nn.relu(xk @ p["cm_k"]))
+    return jax.nn.sigmoid(xr @ p["cm_r"]) * (h @ p["cm_v"]), x[:, -1]
+
+
+# ---------------------------------------------------------------------------
+# model entry points
+# ---------------------------------------------------------------------------
+def init_state(cfg: ModelConfig, batch: int) -> Dict[str, Any]:
+    H = _heads(cfg)
+    n = cfg.num_layers
+    return {
+        "S": jnp.zeros((n, batch, H, HEAD_DK, HEAD_DK), jnp.float32),
+        "tm_x": jnp.zeros((n, batch, cfg.d_model), jnp.bfloat16),
+        "cm_x": jnp.zeros((n, batch, cfg.d_model), jnp.bfloat16),
+        "pos": jnp.zeros((), jnp.int32),
+    }
+
+
+def forward(params, tokens, cfg: ModelConfig, *, state=None, mesh=None,
+            batch_axes=("data",), use_pallas: bool = False, **_):
+    """Teacher-forced logits (B, S, V); also returns final recurrent state."""
+    B, T = tokens.shape
+    x = params["embed"][tokens]
+    if state is None:
+        state = init_state(cfg, B)
+
+    def body(x, scanned):
+        p_l, S0, tm0, cm0 = scanned
+        h = L.rmsnorm(p_l["ln1"], x, eps=cfg.norm_eps)
+        tm, S, tm_x = _time_mix_scan(p_l, h, tm0.astype(h.dtype), S0, cfg,
+                                     use_pallas=use_pallas)
+        x = x + tm
+        h = L.rmsnorm(p_l["ln2"], x, eps=cfg.norm_eps)
+        cm, cm_x = _channel_mix(p_l, h, cm0.astype(h.dtype))
+        x = x + cm
+        return x, (S, tm_x, cm_x)
+
+    x, (S, tm_x, cm_x) = jax.lax.scan(
+        body, x, (params["layers"], state["S"], state["tm_x"], state["cm_x"]))
+    x = L.rmsnorm(params["final_norm"], x, eps=cfg.norm_eps)
+    logits = x @ params["unembed"].T
+    new_state = {"S": S, "tm_x": tm_x.astype(jnp.bfloat16),
+                 "cm_x": cm_x.astype(jnp.bfloat16),
+                 "pos": state["pos"] + T}
+    return logits, new_state
+
+
+def loss_fn(params, batch, cfg: ModelConfig, **kw):
+    logits, _ = forward(params, batch["tokens"], cfg, **kw)
+    ce = L.softmax_cross_entropy(logits, batch["labels"])
+    return ce, {"ce": ce}
+
+
+def prefill(params, tokens, cfg: ModelConfig, **kw):
+    logits, state = forward(params, tokens, cfg, **kw)
+    return logits[:, -1], state
+
+
+def decode_step(params, token, state, cfg: ModelConfig, **kw):
+    """O(1) per-token decode from recurrent state."""
+    logits, new_state = forward(params, token[:, None], cfg, state=state, **kw)
+    return logits[:, 0], new_state

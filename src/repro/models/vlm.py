@@ -1,0 +1,277 @@
+"""Llama-3.2-Vision-style VLM backbone (hf:meta-llama/Llama-3.2-11B-Vision).
+
+Language decoder with gated cross-attention layers inserted every
+``cross_attn_every`` layers (the published 11B: 32 self-attn + 8 cross-attn
+= 40).  Per the brief, the vision tower is a STUB: ``image_embeds``
+(B, num_image_tokens, d_model) arrive precomputed (input_specs supplies
+ShapeDtypeStructs); this module implements the transformer that consumes
+them.  Cross-attention K/V depend only on the image, so serving computes
+them once at prefill and caches them.
+"""
+from __future__ import annotations
+
+import math
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro.common.config import ModelConfig
+from repro.models import layers as L
+from repro.models import dense
+
+
+def _n_cross(cfg: ModelConfig) -> int:
+    return cfg.num_layers // cfg.cross_attn_every
+
+
+def _n_self(cfg: ModelConfig) -> int:
+    return cfg.num_layers - _n_cross(cfg)
+
+
+def init_vlm(key, cfg: ModelConfig, *, dtype=jnp.bfloat16) -> Dict[str, Any]:
+    kd, kx = jax.random.split(key)
+    self_cfg = cfg.replace(num_layers=_n_self(cfg))
+    params = dense.init_lm(kd, self_cfg, dtype=dtype)
+    ks = jax.random.split(kx, _n_cross(cfg))
+
+    def one_cross(k):
+        ka, km = jax.random.split(k)
+        return {
+            "ln1": L.rmsnorm_init(cfg.d_model),
+            "ln2": L.rmsnorm_init(cfg.d_model),
+            "attn": L.attn_init(ka, cfg.d_model, cfg.num_heads,
+                                cfg.num_kv_heads, cfg.head_dim, dtype=dtype),
+            "mlp": L.mlp_init(km, cfg.d_model, cfg.d_ff, dtype=dtype),
+            "gate_attn": jnp.zeros((), jnp.float32),       # tanh-gated, zero-init
+            "gate_mlp": jnp.zeros((), jnp.float32),
+        }
+
+    params["cross"] = jax.tree.map(lambda *xs: jnp.stack(xs),
+                                   *[one_cross(k) for k in ks])
+    return params
+
+
+def _cross_block(p, x, img_kv, cfg: ModelConfig):
+    """Gated cross-attention + MLP.  img_kv: precomputed (k, v) over image
+    tokens, (B, Ti, KVH, Dh)."""
+    B, S, _ = x.shape
+    H, KVH, Dh = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    h = L.rmsnorm(p["ln1"], x, eps=cfg.norm_eps)
+    q = (h @ p["attn"]["wq"]).reshape(B, S, H, Dh)
+    k, v = img_kv
+    out = L.attention(q, k, v, causal=False)
+    out = out.reshape(B, S, H * Dh) @ p["attn"]["wo"]
+    x = x + (jnp.tanh(p["gate_attn"]) * out).astype(x.dtype)
+    h = L.rmsnorm(p["ln2"], x, eps=cfg.norm_eps)
+    x = x + (jnp.tanh(p["gate_mlp"])
+             * L.mlp_apply(p["mlp"], h, act=cfg.act)).astype(x.dtype)
+    return x
+
+
+def _image_kv(params, image_embeds, cfg: ModelConfig):
+    """Per-cross-layer image K/V (stacked leading n_cross dim)."""
+    B, Ti, _ = image_embeds.shape
+    KVH, Dh = cfg.num_kv_heads, cfg.head_dim
+
+    def one(p):
+        k = (image_embeds @ p["attn"]["wk"]).reshape(B, Ti, KVH, Dh)
+        v = (image_embeds @ p["attn"]["wv"]).reshape(B, Ti, KVH, Dh)
+        return k, v
+
+    return jax.vmap(one)(params["cross"])          # (nc, B, Ti, KVH, Dh) x2
+
+
+def forward(params, tokens, image_embeds, cfg: ModelConfig, *, mesh=None,
+            batch_axes=("data",), long_context: bool = False):
+    """Teacher-forced logits with interleaved cross-attention."""
+    B, S = tokens.shape
+    x = dense._embed(params, tokens, cfg)
+    positions = jnp.arange(S)[None, :].repeat(B, 0)
+    img_k, img_v = _image_kv(params, image_embeds, cfg)
+    windows = jnp.asarray(dense.layer_windows(
+        cfg.replace(num_layers=_n_self(cfg)), long_context=long_context))
+    every = cfg.cross_attn_every - 1               # self layers per cross layer
+    n_cross = _n_cross(cfg)
+
+    # superblock s: `every` self-attn layers then one cross block
+    self_layers = params["layers"]
+
+    def superblock(x, s):
+        def self_body(x, scanned):
+            p_l, win = scanned
+            x, _, _ = dense._layer(p_l, x, positions, cfg, window=win,
+                                   mesh=mesh, batch_axes=batch_axes)
+            return x, None
+
+        sl = jax.tree.map(lambda a: jax.lax.dynamic_slice_in_dim(
+            a, s * every, every, axis=0), self_layers)
+        w = jax.lax.dynamic_slice_in_dim(windows, s * every, every)
+        x, _ = jax.lax.scan(jax.checkpoint(self_body), x, (sl, w))
+        pc = jax.tree.map(lambda a: a[s], params["cross"])
+        x = _cross_block(pc, x, (img_k[s], img_v[s]), cfg)
+        return x, None
+
+    x, _ = jax.lax.scan(superblock, x, jnp.arange(n_cross))
+    # trailing self layers (if num_layers not divisible)
+    rem = _n_self(cfg) - n_cross * every
+    if rem:
+        def self_body(x, scanned):
+            p_l, win = scanned
+            x, _, _ = dense._layer(p_l, x, positions, cfg, window=win,
+                                   mesh=mesh, batch_axes=batch_axes)
+            return x, None
+        sl = jax.tree.map(lambda a: a[-rem:], self_layers)
+        x, _ = jax.lax.scan(jax.checkpoint(self_body), x, (sl, windows[-rem:]))
+    x = L.rmsnorm(params["final_norm"], x, eps=cfg.norm_eps)
+    return dense._unembed(params, x, cfg), jnp.zeros((), jnp.float32)
+
+
+def loss_fn(params, batch, cfg: ModelConfig, **kw):
+    logits, _ = forward(params, batch["tokens"], batch["image_embeds"],
+                        cfg, **kw)
+    ce = L.softmax_cross_entropy(logits, batch["labels"])
+    return ce, {"ce": ce}
+
+
+# ---------------------------------------------------------------------------
+# serving: the self-attn KV cache rides on dense.py; image KV cached once
+# ---------------------------------------------------------------------------
+def _grouped(cfg: ModelConfig, tree):
+    """(n_self, ...) stacked self layers -> ((n_cross, every, ...), (rem, ...))."""
+    every = cfg.cross_attn_every - 1
+    n_cross = _n_cross(cfg)
+    n_main = n_cross * every
+    main = jax.tree.map(
+        lambda a: a[:n_main].reshape((n_cross, every) + a.shape[1:]), tree)
+    trail = jax.tree.map(lambda a: a[n_main:], tree)
+    return main, trail
+
+
+def prefill(params, tokens, image_embeds, cfg: ModelConfig, *, mesh=None,
+            batch_axes=("data",), long_context: bool = False):
+    B, S = tokens.shape
+    x = dense._embed(params, tokens, cfg)
+    positions = jnp.arange(S)[None, :].repeat(B, 0)
+    img_k, img_v = _image_kv(params, image_embeds, cfg)
+    self_cfg = cfg.replace(num_layers=_n_self(cfg))
+    windows = jnp.asarray(dense.layer_windows(self_cfg,
+                                              long_context=long_context))
+    layers_main, layers_tr = _grouped(cfg, params["layers"])
+    win_main, win_tr = _grouped(cfg, windows)
+    every = cfg.cross_attn_every - 1
+    n_main = _n_cross(cfg) * every
+
+    def self_scan(x, pl_stack, win_stack):
+        def body(x, xs):
+            p_l, win = xs
+            x, kv, _ = dense._layer(p_l, x, positions, cfg, window=win,
+                                    mesh=mesh, batch_axes=batch_axes)
+            return x, kv
+        return jax.lax.scan(jax.checkpoint(body), x, (pl_stack, win_stack))
+
+    def superblock(x, xs):
+        pl_g, win_g, pc, ik, iv = xs
+        x, kv = self_scan(x, pl_g, win_g)
+        x = _cross_block(pc, x, (ik, iv), cfg)
+        return x, kv
+
+    x, (ks, vs) = jax.lax.scan(
+        superblock, x,
+        (layers_main, win_main, params["cross"], img_k, img_v))
+    ks = ks.reshape((n_main,) + ks.shape[2:])
+    vs = vs.reshape((n_main,) + vs.shape[2:])
+    rem = _n_self(cfg) - n_main
+    if rem:
+        x, (ks_t, vs_t) = self_scan(x, layers_tr, win_tr)
+        ks = jnp.concatenate([ks, ks_t], 0)
+        vs = jnp.concatenate([vs, vs_t], 0)
+    x = L.rmsnorm(params["final_norm"], x, eps=cfg.norm_eps)
+    logits = dense._unembed(params, x[:, -1:], cfg)[:, 0]
+    cache = {"k": ks, "v": vs, "img_k": img_k, "img_v": img_v,
+             "pos": jnp.asarray(S, jnp.int32)}
+    return logits, cache
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int, *,
+               dtype=jnp.bfloat16):
+    c = dense.init_cache(cfg.replace(num_layers=_n_self(cfg)), batch,
+                         max_len, dtype=dtype)
+    Ti = cfg.num_image_tokens
+    nc = _n_cross(cfg)
+    c["img_k"] = jnp.zeros((nc, batch, Ti, cfg.num_kv_heads, cfg.head_dim), dtype)
+    c["img_v"] = jnp.zeros_like(c["img_k"])
+    return c
+
+
+def decode_step(params, token, cache, cfg: ModelConfig, *, mesh=None,
+                batch_axes=("data",), long_context: bool = False):
+    """One-token decode; image K/V served from cache."""
+    B = token.shape[0]
+    cache_len = cache["k"].shape[2]
+    pos = cache["pos"]
+    write_idx = pos % cache_len
+    x = dense._embed(params, token[:, None], cfg)
+    positions = jnp.full((B, 1), pos, jnp.int32)
+    self_cfg = cfg.replace(num_layers=_n_self(cfg))
+    windows = jnp.asarray(dense.layer_windows(self_cfg,
+                                              long_context=long_context))
+    slots = jnp.arange(cache_len)
+    slot_pos = pos - ((pos - slots) % cache_len)
+    valid = slot_pos >= 0
+    every = cfg.cross_attn_every - 1
+    n_main = _n_cross(cfg) * every
+    H, KVH, Dh = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+
+    def self_step(x, p_l, window, kc, vc):
+        win = jnp.where(window > 0, window, jnp.iinfo(jnp.int32).max)
+        h = L.rmsnorm(p_l["ln1"], x, eps=cfg.norm_eps)
+        q = (h @ p_l["attn"]["wq"]).reshape(B, 1, H, Dh)
+        k = (h @ p_l["attn"]["wk"]).reshape(B, 1, KVH, Dh)
+        v = (h @ p_l["attn"]["wv"]).reshape(B, 1, KVH, Dh)
+        q = L.rope(q, positions, theta=cfg.rope_theta)
+        k = L.rope(k, positions, theta=cfg.rope_theta)
+        ck = jax.lax.dynamic_update_slice(kc, k.astype(kc.dtype),
+                                          (0, write_idx, 0, 0))
+        cv = jax.lax.dynamic_update_slice(vc, v.astype(vc.dtype),
+                                          (0, write_idx, 0, 0))
+        out = dense._decode_attention(q, ck, cv, slot_pos=slot_pos,
+                                      slot_valid=valid, q_pos=pos, window=win,
+                                      softcap=None)
+        x = x + out.reshape(B, 1, H * Dh) @ p_l["attn"]["wo"]
+        h = L.rmsnorm(p_l["ln2"], x, eps=cfg.norm_eps)
+        x = x + L.mlp_apply(p_l["mlp"], h, act=cfg.act)
+        return x, ck, cv
+
+    def self_scan(x, pl_stack, win_stack, kc_stack, vc_stack):
+        def body(x, xs):
+            p_l, win, kc, vc = xs
+            x, ck, cv = self_step(x, p_l, win, kc, vc)
+            return x, (ck, cv)
+        return jax.lax.scan(body, x, (pl_stack, win_stack, kc_stack, vc_stack))
+
+    layers_main, layers_tr = _grouped(cfg, params["layers"])
+    win_main, win_tr = _grouped(cfg, windows)
+    kc_main, kc_tr = _grouped(cfg, cache["k"])
+    vc_main, vc_tr = _grouped(cfg, cache["v"])
+
+    def superblock(x, xs):
+        pl_g, win_g, kc_g, vc_g, pc, ik, iv = xs
+        x, (ck, cv) = self_scan(x, pl_g, win_g, kc_g, vc_g)
+        x = _cross_block(pc, x, (ik, iv), cfg)
+        return x, (ck, cv)
+
+    x, (ks, vs) = jax.lax.scan(
+        superblock, x,
+        (layers_main, win_main, kc_main, vc_main, params["cross"],
+         cache["img_k"], cache["img_v"]))
+    ks = ks.reshape((n_main,) + ks.shape[2:])
+    vs = vs.reshape((n_main,) + vs.shape[2:])
+    if _n_self(cfg) - n_main:
+        x, (ks_t, vs_t) = self_scan(x, layers_tr, win_tr, kc_tr, vc_tr)
+        ks = jnp.concatenate([ks, ks_t], 0)
+        vs = jnp.concatenate([vs, vs_t], 0)
+    x = L.rmsnorm(params["final_norm"], x, eps=cfg.norm_eps)
+    logits = dense._unembed(params, x, cfg)[:, 0]
+    new_cache = dict(cache, k=ks, v=vs, pos=pos + 1)
+    return logits, new_cache

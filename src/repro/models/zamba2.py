@@ -1,0 +1,368 @@
+"""Zamba2 (arXiv:2411.15242): Mamba2 backbone + shared attention blocks.
+
+The published 7B model interleaves Mamba2 SSD blocks with a *shared*
+(weight-tied) transformer block applied every ``hybrid_attn_every`` mamba
+blocks (Zamba2 re-uses the same attention weights at each insertion point,
+concatenating the original embedding — we keep the weight sharing, the
+defining trait, with a standard residual).
+
+Mamba2 SSD per head h (scalar decay a_t, state (d_state, head_dim)):
+    S_t = a_t S_{t-1} + B_t^T x_t        a_t = exp(-softplus(dt_t) * A_h)
+    y_t = C_t S_t + D_h * x_t
+B_t, C_t shared across heads (ngroups=1).  Train/prefill: remat'd chunked
+scan; decode: O(1) state update — long_500k runs natively.
+"""
+from __future__ import annotations
+
+import math
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro.common.config import ModelConfig
+from repro.models import layers as L
+
+SSM_HEAD = 64      # mamba2 head dim
+
+
+def _dims(cfg: ModelConfig):
+    inner = cfg.ssm_expand * cfg.d_model
+    heads = inner // SSM_HEAD
+    return inner, heads
+
+
+# ---------------------------------------------------------------------------
+# init
+# ---------------------------------------------------------------------------
+def _mamba_init(key, cfg: ModelConfig, dtype):
+    d, n = cfg.d_model, cfg.ssm_state
+    inner, heads = _dims(cfg)
+    ks = jax.random.split(key, 5)
+    return {
+        "ln": L.rmsnorm_init(d),
+        "w_xz": L.dense_init(ks[0], (d, 2 * inner), dtype=dtype),
+        "conv": 0.1 * jax.random.normal(ks[1], (cfg.ssm_conv, inner)).astype(dtype),
+        "w_bcdt": L.dense_init(ks[2], (inner, 2 * n + heads), dtype=dtype),
+        "A_log": jnp.zeros((heads,), jnp.float32),          # A = exp(A_log)
+        "D": jnp.ones((heads,), jnp.float32),
+        "dt_bias": jnp.full((heads,), -4.0, jnp.float32),   # slow dynamics init
+        "w_out": L.dense_init(ks[3], (inner, d), dtype=dtype),
+    }
+
+
+def init_zamba2(key, cfg: ModelConfig, *, dtype=jnp.bfloat16) -> Dict[str, Any]:
+    ks = jax.random.split(key, cfg.num_layers + 3)
+    n_mamba = num_mamba_blocks(cfg)
+    mamba = jax.tree.map(lambda *xs: jnp.stack(xs),
+                         *[_mamba_init(ks[i], cfg, dtype) for i in range(n_mamba)])
+    shared_attn = {
+        "ln1": L.rmsnorm_init(cfg.d_model),
+        "attn": L.attn_init(ks[-3], cfg.d_model, cfg.num_heads,
+                            cfg.num_kv_heads, cfg.head_dim, dtype=dtype),
+        "ln2": L.rmsnorm_init(cfg.d_model),
+        "mlp": L.mlp_init(jax.random.fold_in(ks[-3], 1), cfg.d_model,
+                          cfg.d_ff, dtype=dtype),
+    }
+    return {
+        "embed": L.dense_init(ks[-2], (cfg.vocab_size, cfg.d_model),
+                              scale=0.02, dtype=dtype),
+        "mamba": mamba,
+        "shared_attn": shared_attn,        # ONE block, reused at every insertion
+        "final_norm": L.rmsnorm_init(cfg.d_model),
+        "unembed": L.dense_init(ks[-1], (cfg.vocab_size, cfg.d_model),
+                                scale=1.0 / math.sqrt(cfg.d_model), dtype=dtype),
+    }
+
+
+def num_mamba_blocks(cfg: ModelConfig) -> int:
+    """num_layers counts all blocks; every k-th is the shared attn block."""
+    k = cfg.hybrid_attn_every
+    n_attn = cfg.num_layers // k if k else 0
+    return cfg.num_layers - n_attn
+
+
+def num_attn_blocks(cfg: ModelConfig) -> int:
+    return cfg.num_layers - num_mamba_blocks(cfg)
+
+
+# ---------------------------------------------------------------------------
+# mamba2 block
+# ---------------------------------------------------------------------------
+def _ssd_scan(xh, bt, ct, dt, A, D, S0, *, chunk: int = 128):
+    """Chunked SSD recurrence.
+
+    xh: (B,T,H,P) per-head inputs; bt, ct: (B,T,N); dt: (B,T,H) post-softplus;
+    A: (H,); S0: (B,H,N,P).  Returns (y (B,T,H,P), S_T)."""
+    B, T, H, P = xh.shape
+    N = bt.shape[-1]
+    chunk = min(chunk, T)
+    nchunk = -(-T // chunk)
+    pad = nchunk * chunk - T
+    if pad:
+        z = lambda a: jnp.pad(a, ((0, 0), (0, pad)) + ((0, 0),) * (a.ndim - 2))
+        xh, bt, ct, dt = z(xh), z(bt), z(ct), z(dt)
+
+    loga = -dt * A[None, None, :]                  # (B,T,H) log decay <= 0
+
+    def chunk_body(S, inp):
+        xc, bc, cc, lac, dtc = inp                 # (B,chunk,...)
+
+        def step(S, t_in):
+            xt, btt, ctt, lat, dtt = t_in
+            a = jnp.exp(lat)[:, :, None, None]     # (B,H,1,1)
+            upd = (dtt[:, :, None, None] * btt[:, None, :, None]
+                   * xt[:, :, None, :])            # (B,H,N,P)
+            S = a * S + upd
+            y = jnp.einsum("bn,bhnp->bhp", ctt, S)
+            return S, y
+
+        S, ys = jax.lax.scan(step, S,
+                             tuple(jnp.moveaxis(a, 1, 0)
+                                   for a in (xc, bc, cc, lac, dtc)))
+        return S, jnp.moveaxis(ys, 0, 1)
+
+    to_chunks = lambda a: jnp.moveaxis(
+        a.reshape((B, nchunk, chunk) + a.shape[2:]), 1, 0)
+    S, ys = jax.lax.scan(jax.checkpoint(chunk_body), S0.astype(jnp.float32),
+                         tuple(to_chunks(a.astype(jnp.float32))
+                               for a in (xh, bt, ct, loga, dt)))
+    y = jnp.moveaxis(ys, 0, 1).reshape(B, nchunk * chunk, H, P)[:, :T]
+    return y + D[None, None, :, None] * xh.astype(jnp.float32), S
+
+
+def _mamba_block(p, x, cfg: ModelConfig, state):
+    """x: (B,T,d).  state: {"S": (B,H,N,P), "conv": (B,ssm_conv-1,inner)}."""
+    B, T, d = x.shape
+    inner, heads = _dims(cfg)
+    n = cfg.ssm_state
+    h = L.rmsnorm(p["ln"], x, eps=cfg.norm_eps)
+    xz = h @ p["w_xz"]
+    xi, z = jnp.split(xz, 2, axis=-1)              # (B,T,inner)
+    # depthwise causal conv, width ssm_conv, carried across calls
+    ctx = jnp.concatenate([state["conv"].astype(xi.dtype), xi], axis=1)
+    w = p["conv"]                                  # (K, inner)
+    K = w.shape[0]
+    xc = sum(ctx[:, K - 1 - j: K - 1 - j + T] * w[K - 1 - j][None, None]
+             for j in range(K))
+    xc = jax.nn.silu(xc)
+    bcdt = xc @ p["w_bcdt"]
+    bt, ct, dt_raw = jnp.split(bcdt, [n, 2 * n], axis=-1)
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + p["dt_bias"][None, None])
+    A = jnp.exp(p["A_log"])
+    xh = xc.reshape(B, T, heads, SSM_HEAD)
+    y, S = _ssd_scan(xh, bt.astype(jnp.float32), ct.astype(jnp.float32),
+                     dt, A, p["D"], state["S"])
+    y = y.reshape(B, T, inner).astype(x.dtype) * jax.nn.silu(z)
+    new_state = {"S": S, "conv": ctx[:, -(K - 1):].astype(jnp.bfloat16)}
+    return x + y @ p["w_out"], new_state
+
+
+def _attn_block(p, x, positions, cfg: ModelConfig, *, kv_cache=None,
+                cache_pos=None, kv_valid_len=None, window=None):
+    h = L.rmsnorm(p["ln1"], x, eps=cfg.norm_eps)
+    attn, new_kv = L.attn_apply(p["attn"], h, positions, cfg,
+                                kv_cache=kv_cache, cache_pos=cache_pos,
+                                window=window, kv_valid_len=kv_valid_len)
+    x = x + attn
+    h = L.rmsnorm(p["ln2"], x, eps=cfg.norm_eps)
+    return x + L.mlp_apply(p["mlp"], h, act=cfg.act), new_kv
+
+
+# ---------------------------------------------------------------------------
+# superblock layout: (k-1) mamba blocks + 1 shared-attn block, repeated;
+# trailing mamba blocks if num_layers % k != 0.  The whole stack lowers as
+# scan(superblock) + scan(trailing) so 81-block configs compile in seconds.
+# ---------------------------------------------------------------------------
+def _layout(cfg: ModelConfig):
+    k = cfg.hybrid_attn_every
+    n_super = cfg.num_layers // k if k else 0
+    per = (k - 1) if k else cfg.num_layers
+    n_main = n_super * per
+    n_mamba = num_mamba_blocks(cfg)
+    return n_super, per, n_main, n_mamba - n_main
+
+
+def _split_main_trailing(cfg: ModelConfig, tree):
+    """Split stacked (n_mamba, ...) leaves into ((n_super, per, ...), (rem, ...))."""
+    n_super, per, n_main, rem = _layout(cfg)
+    main = jax.tree.map(
+        lambda a: a[:n_main].reshape((n_super, per) + a.shape[1:]), tree)
+    trail = jax.tree.map(lambda a: a[n_main:], tree)
+    return main, trail
+
+
+def _merge_main_trailing(cfg: ModelConfig, main, trail):
+    n_super, per, n_main, rem = _layout(cfg)
+    return jax.tree.map(
+        lambda m, t: jnp.concatenate(
+            [m.reshape((n_main,) + m.shape[2:]), t], axis=0), main, trail)
+
+
+# ---------------------------------------------------------------------------
+# states / entry points
+# ---------------------------------------------------------------------------
+def init_state(cfg: ModelConfig, batch: int, *, attn_cache_len: int = 0):
+    inner, heads = _dims(cfg)
+    nm, na = num_mamba_blocks(cfg), num_attn_blocks(cfg)
+    st = {
+        "S": jnp.zeros((nm, batch, heads, cfg.ssm_state, SSM_HEAD), jnp.float32),
+        "conv": jnp.zeros((nm, batch, cfg.ssm_conv - 1, inner), jnp.bfloat16),
+        "pos": jnp.zeros((), jnp.int32),
+    }
+    if attn_cache_len:
+        st["k"] = jnp.zeros((na, batch, attn_cache_len, cfg.num_kv_heads,
+                             cfg.head_dim), jnp.bfloat16)
+        st["v"] = jnp.zeros_like(st["k"])
+    return st
+
+
+def _mamba_scan(pl_stack, x, S_stack, conv_stack, cfg):
+    """Run a stacked group of mamba blocks via lax.scan."""
+    def inner(x, xs):
+        pl, S0, c0 = xs
+        x, st = _mamba_block(pl, x, cfg, {"S": S0, "conv": c0})
+        return x, (st["S"], st["conv"])
+
+    x, (S, c) = jax.lax.scan(inner, x, (pl_stack, S_stack, conv_stack))
+    return x, S, c
+
+
+def forward(params, tokens, cfg: ModelConfig, *, state=None,
+            attn_window=None, **_):
+    """Teacher-forced logits.  The shared attention block runs full
+    self-attention over the sequence (windowed for long-context)."""
+    B, T = tokens.shape
+    x = params["embed"][tokens]
+    if state is None:
+        state = init_state(cfg, B)
+    positions = jnp.arange(T)[None, :].repeat(B, 0) + state["pos"]
+    win = jnp.asarray(attn_window or jnp.iinfo(jnp.int32).max)
+
+    pl_main, pl_tr = _split_main_trailing(cfg, params["mamba"])
+    S_main, S_tr = _split_main_trailing(cfg, state["S"])
+    c_main, c_tr = _split_main_trailing(cfg, state["conv"])
+
+    def superblock(x, xs):
+        pl_g, S_g, c_g = xs
+        x, S_n, c_n = _mamba_scan(pl_g, x, S_g, c_g, cfg)
+        x, _ = _attn_block(params["shared_attn"], x, positions, cfg,
+                           window=win)
+        return x, (S_n, c_n)
+
+    n_super = _layout(cfg)[0]
+    if n_super:
+        x, (S_main, c_main) = jax.lax.scan(jax.checkpoint(superblock), x,
+                                           (pl_main, S_main, c_main))
+    if _layout(cfg)[3]:
+        x, S_tr, c_tr = _mamba_scan(pl_tr, x, S_tr, c_tr, cfg)
+    x = L.rmsnorm(params["final_norm"], x, eps=cfg.norm_eps)
+    logits = x @ params["unembed"].T
+    new_state = {"S": _merge_main_trailing(cfg, S_main, S_tr),
+                 "conv": _merge_main_trailing(cfg, c_main, c_tr),
+                 "pos": state["pos"] + T}
+    return logits, new_state
+
+
+def loss_fn(params, batch, cfg: ModelConfig, **kw):
+    logits, _ = forward(params, batch["tokens"], cfg, **kw)
+    ce = L.softmax_cross_entropy(logits, batch["labels"])
+    return ce, {"ce": ce}
+
+
+def prefill(params, tokens, cfg: ModelConfig, *, cache_len=None,
+            attn_window=None, **kw):
+    """Returns last-token logits + full serving state (SSM + attn KV)."""
+    B, T = tokens.shape
+    cache_len = cache_len or T
+    state = init_state(cfg, B, attn_cache_len=cache_len)
+    x = params["embed"][tokens]
+    positions = jnp.arange(T)[None, :].repeat(B, 0)
+    win = jnp.asarray(attn_window or jnp.iinfo(jnp.int32).max)
+
+    pl_main, pl_tr = _split_main_trailing(cfg, params["mamba"])
+    S_main, S_tr = _split_main_trailing(cfg, state["S"])
+    c_main, c_tr = _split_main_trailing(cfg, state["conv"])
+
+    def superblock(x, xs):
+        pl_g, S_g, c_g, kc, vc = xs
+        x, S_n, c_n = _mamba_scan(pl_g, x, S_g, c_g, cfg)
+        x, (nk, nv) = _attn_block(params["shared_attn"], x, positions, cfg,
+                                  kv_cache=(kc, vc), cache_pos=0,
+                                  kv_valid_len=T, window=win)
+        return x, (S_n, c_n, nk, nv)
+
+    n_super = _layout(cfg)[0]
+    ks, vs = state.get("k"), state.get("v")
+    if n_super:
+        x, (S_main, c_main, ks, vs) = jax.lax.scan(
+            jax.checkpoint(superblock), x,
+            (pl_main, S_main, c_main, state["k"], state["v"]))
+    if _layout(cfg)[3]:
+        x, S_tr, c_tr = _mamba_scan(pl_tr, x, S_tr, c_tr, cfg)
+    x = L.rmsnorm(params["final_norm"], x, eps=cfg.norm_eps)
+    logits = (x[:, -1:] @ params["unembed"].T)[:, 0]
+    new_state = {"S": _merge_main_trailing(cfg, S_main, S_tr),
+                 "conv": _merge_main_trailing(cfg, c_main, c_tr),
+                 "k": ks, "v": vs,
+                 "pos": jnp.asarray(T, jnp.int32)}
+    return logits, new_state
+
+
+def decode_step(params, token, state, cfg: ModelConfig, *, attn_window=None, **_):
+    """O(1) decode: SSM state update + (windowed, ring-buffer) attention."""
+    B = token.shape[0]
+    x = params["embed"][token[:, None]]
+    pos = state["pos"]
+    cache_len = state["k"].shape[2]
+    write_idx = pos % cache_len
+    positions = jnp.full((B, 1), pos, jnp.int32)
+    slots = jnp.arange(cache_len)
+    slot_pos = pos - ((pos - slots) % cache_len)
+    valid = slot_pos >= 0
+    win = jnp.asarray(attn_window or jnp.iinfo(jnp.int32).max)
+    from repro.models.dense import _decode_attention
+
+    pl_main, pl_tr = _split_main_trailing(cfg, params["mamba"])
+    S_main, S_tr = _split_main_trailing(cfg, state["S"])
+    c_main, c_tr = _split_main_trailing(cfg, state["conv"])
+
+    def attn_decode(x, kc, vc):
+        p = params["shared_attn"]
+        h = L.rmsnorm(p["ln1"], x, eps=cfg.norm_eps)
+        H, KVH, Dh = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+        q = (h @ p["attn"]["wq"]).reshape(B, 1, H, Dh)
+        k = (h @ p["attn"]["wk"]).reshape(B, 1, KVH, Dh)
+        v = (h @ p["attn"]["wv"]).reshape(B, 1, KVH, Dh)
+        q = L.rope(q, positions, theta=cfg.rope_theta)
+        k = L.rope(k, positions, theta=cfg.rope_theta)
+        ck = jax.lax.dynamic_update_slice(kc, k.astype(kc.dtype),
+                                          (0, write_idx, 0, 0))
+        cv = jax.lax.dynamic_update_slice(vc, v.astype(vc.dtype),
+                                          (0, write_idx, 0, 0))
+        out = _decode_attention(q, ck, cv, slot_pos=slot_pos,
+                                slot_valid=valid, q_pos=pos, window=win,
+                                softcap=None)
+        x = x + out.reshape(B, 1, H * Dh) @ p["attn"]["wo"]
+        h = L.rmsnorm(p["ln2"], x, eps=cfg.norm_eps)
+        return x + L.mlp_apply(p["mlp"], h, act=cfg.act), ck, cv
+
+    def superblock(x, xs):
+        pl_g, S_g, c_g, kc, vc = xs
+        x, S_n, c_n = _mamba_scan(pl_g, x, S_g, c_g, cfg)
+        x, ck, cv = attn_decode(x, kc, vc)
+        return x, (S_n, c_n, ck, cv)
+
+    n_super = _layout(cfg)[0]
+    ks, vs = state.get("k"), state.get("v")
+    if n_super:
+        x, (S_main, c_main, ks, vs) = jax.lax.scan(
+            superblock, x, (pl_main, S_main, c_main, state["k"], state["v"]))
+    if _layout(cfg)[3]:
+        x, S_tr, c_tr = _mamba_scan(pl_tr, x, S_tr, c_tr, cfg)
+    x = L.rmsnorm(params["final_norm"], x, eps=cfg.norm_eps)
+    logits = (x @ params["unembed"].T)[:, 0]
+    new_state = {"S": _merge_main_trailing(cfg, S_main, S_tr),
+                 "conv": _merge_main_trailing(cfg, c_main, c_tr),
+                 "k": ks, "v": vs, "pos": pos + 1}
+    return logits, new_state

@@ -1,0 +1,1 @@
+from repro.sampling.rectified_flow import rf_loss, rf_sample, rf_train_step

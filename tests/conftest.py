@@ -1,0 +1,10 @@
+"""Shared fixtures.  NOTE: no XLA_FLAGS here — tests run on the single real
+CPU device; only launch/dryrun.py forces 512 placeholder devices (and tests
+that need a few devices spawn subprocesses)."""
+import jax
+import pytest
+
+
+@pytest.fixture(scope="session")
+def rng():
+    return jax.random.PRNGKey(0)

@@ -1,0 +1,148 @@
+"""Per-kernel validation: shape/dtype sweeps, interpret-mode Pallas vs the
+pure-jnp oracle in repro.kernels.ref (assert_allclose)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.ops import expert_ffn_pallas, flash_attention_pallas
+from repro.kernels.ref import expert_ffn_ref, flash_attention_ref
+
+
+def _tol(dtype):
+    return dict(rtol=2e-2, atol=2e-2) if dtype == jnp.bfloat16 \
+        else dict(rtol=1e-5, atol=1e-5)
+
+
+@pytest.mark.parametrize("E,C,d,f", [(2, 16, 64, 128), (4, 128, 128, 512),
+                                     (1, 8, 32, 64), (8, 32, 64, 96)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("act", ["silu", "gelu"])
+def test_expert_ffn_matches_ref(E, C, d, f, dtype, act):
+    ks = jax.random.split(jax.random.PRNGKey(0), 4)
+    buf = jax.random.normal(ks[0], (E, C, d), dtype)
+    wg = (jax.random.normal(ks[1], (E, d, f)) / np.sqrt(d)).astype(dtype)
+    wu = (jax.random.normal(ks[2], (E, d, f)) / np.sqrt(d)).astype(dtype)
+    wd = (jax.random.normal(ks[3], (E, f, d)) / np.sqrt(f)).astype(dtype)
+    got = expert_ffn_pallas(buf, wg, wu, wd, act=act, interpret=True)
+    want = expert_ffn_ref(buf, wg, wu, wd, act=act)
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32), **_tol(dtype))
+
+
+@pytest.mark.parametrize("B,Sq,Sk,H,KVH,Dh", [
+    (1, 128, 128, 4, 2, 64),
+    (2, 128, 256, 8, 8, 32),
+    (1, 256, 256, 4, 1, 64),     # strong GQA (MQA)
+    (2, 64, 64, 2, 2, 128),
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_flash_attention_matches_ref(B, Sq, Sk, H, KVH, Dh, dtype):
+    ks = jax.random.split(jax.random.PRNGKey(1), 3)
+    q = jax.random.normal(ks[0], (B, Sq, H, Dh), dtype)
+    k = jax.random.normal(ks[1], (B, Sk, KVH, Dh), dtype)
+    v = jax.random.normal(ks[2], (B, Sk, KVH, Dh), dtype)
+    got = flash_attention_pallas(q, k, v, interpret=True)
+    want = flash_attention_ref(q, k, v)
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32), **_tol(dtype))
+
+
+@pytest.mark.parametrize("causal,window,softcap", [
+    (True, None, None),
+    (False, 64, None),
+    (True, 32, None),
+    (False, None, 50.0),
+    (True, 64, 30.0),            # gemma2 local layer
+])
+def test_flash_attention_variants(causal, window, softcap):
+    B, Sq, Sk, H, KVH, Dh = 2, 128, 128, 4, 2, 64
+    ks = jax.random.split(jax.random.PRNGKey(2), 3)
+    q = jax.random.normal(ks[0], (B, Sq, H, Dh), jnp.float32)
+    k = jax.random.normal(ks[1], (B, Sk, KVH, Dh), jnp.float32)
+    v = jax.random.normal(ks[2], (B, Sk, KVH, Dh), jnp.float32)
+    got = flash_attention_pallas(q, k, v, causal=causal, window=window,
+                                 softcap=softcap, interpret=True)
+    want = flash_attention_ref(q, k, v, causal=causal, window=window,
+                               softcap=softcap)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_flash_attention_odd_blocks():
+    """Sequence lengths that are not multiples of the preferred block."""
+    B, Sq, Sk, H, KVH, Dh = 1, 64, 192, 2, 2, 32
+    ks = jax.random.split(jax.random.PRNGKey(3), 3)
+    q = jax.random.normal(ks[0], (B, Sq, H, Dh), jnp.float32)
+    k = jax.random.normal(ks[1], (B, Sk, KVH, Dh), jnp.float32)
+    v = jax.random.normal(ks[2], (B, Sk, KVH, Dh), jnp.float32)
+    got = flash_attention_pallas(q, k, v, causal=True, interpret=True)
+    want = flash_attention_ref(q, k, v, causal=True)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-5, atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# rwkv6 recurrence kernel
+# ---------------------------------------------------------------------------
+from repro.kernels.ops import rwkv6_scan
+from repro.kernels.ref import rwkv6_scan_ref
+
+
+@pytest.mark.parametrize("B,H,T,DK", [(1, 2, 32, 16), (2, 4, 64, 32),
+                                      (1, 1, 128, 64)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_rwkv6_scan_matches_ref(B, H, T, DK, dtype):
+    ks = jax.random.split(jax.random.PRNGKey(5), 6)
+    r = jax.random.normal(ks[0], (B, H, T, DK), dtype)
+    k = jax.random.normal(ks[1], (B, H, T, DK), dtype)
+    v = jax.random.normal(ks[2], (B, H, T, DK), dtype)
+    logw = -jnp.exp(jax.random.normal(ks[3], (B, H, T, DK))).astype(dtype)
+    u = (0.5 * jnp.ones((H, DK))).astype(dtype)
+    s0 = jax.random.normal(ks[4], (B, H, DK, DK), jnp.float32) * 0.1
+    out, sT = rwkv6_scan(r, k, v, logw, u, s0, interpret=True)
+    want_out, want_sT = rwkv6_scan_ref(r, k, v, logw, u, s0)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want_out),
+                               **_tol(dtype))
+    np.testing.assert_allclose(np.asarray(sT), np.asarray(want_sT),
+                               **_tol(dtype))
+
+
+def test_rwkv6_scan_state_continuity():
+    """Scanning two halves with carried state == scanning the whole."""
+    B, H, T, DK = 1, 2, 64, 16
+    ks = jax.random.split(jax.random.PRNGKey(6), 5)
+    r = jax.random.normal(ks[0], (B, H, T, DK))
+    k = jax.random.normal(ks[1], (B, H, T, DK))
+    v = jax.random.normal(ks[2], (B, H, T, DK))
+    logw = -jnp.exp(jax.random.normal(ks[3], (B, H, T, DK)))
+    u = 0.5 * jnp.ones((H, DK))
+    s0 = jnp.zeros((B, H, DK, DK))
+    full, sT = rwkv6_scan(r, k, v, logw, u, s0, interpret=True)
+    h = T // 2
+    o1, s_mid = rwkv6_scan(r[:, :, :h], k[:, :, :h], v[:, :, :h],
+                           logw[:, :, :h], u, s0, interpret=True)
+    o2, s_end = rwkv6_scan(r[:, :, h:], k[:, :, h:], v[:, :, h:],
+                           logw[:, :, h:], u, s_mid, interpret=True)
+    np.testing.assert_allclose(np.asarray(jnp.concatenate([o1, o2], 2)),
+                               np.asarray(full), rtol=1e-5, atol=1e-5)
+    np.testing.assert_allclose(np.asarray(s_end), np.asarray(sT),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_rwkv6_model_pallas_path_matches_scan():
+    """Full rwkv6 model with the Pallas recurrence == the jnp scan path."""
+    from repro.common.config import ModelConfig
+    from repro.models import rwkv6
+    cfg = ModelConfig(name="t", family="ssm", num_layers=2, d_model=128,
+                      d_ff=256, vocab_size=128)
+    p = rwkv6.init_rwkv6(jax.random.PRNGKey(0), cfg)
+    toks = jax.random.randint(jax.random.PRNGKey(1), (2, 32), 0, 128)
+    ref_logits, ref_state = rwkv6.forward(p, toks, cfg)
+    pl_logits, pl_state = rwkv6.forward(p, toks, cfg, use_pallas=True)
+    np.testing.assert_allclose(np.asarray(pl_logits, np.float32),
+                               np.asarray(ref_logits, np.float32),
+                               rtol=5e-2, atol=5e-2)
+    np.testing.assert_allclose(np.asarray(pl_state["S"]),
+                               np.asarray(ref_state["S"]),
+                               rtol=1e-3, atol=1e-3)

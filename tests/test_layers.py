@@ -1,0 +1,101 @@
+"""Layer-level unit + property tests (attention variants, RoPE, losses)."""
+import math
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.models import layers as L
+
+
+def test_blocked_attention_matches_dense():
+    """The online-softmax path == dense path (forced via small block)."""
+    B, Sq, Sk, H, KVH, Dh = 2, 64, 256, 4, 2, 32
+    ks = jax.random.split(jax.random.PRNGKey(0), 3)
+    q = jax.random.normal(ks[0], (B, Sq, H, Dh), jnp.float32)
+    k = jax.random.normal(ks[1], (B, Sk, KVH, Dh), jnp.float32)
+    v = jax.random.normal(ks[2], (B, Sk, KVH, Dh), jnp.float32)
+    dense = L.attention(q, k, v, causal=True)
+    blocked = L._blocked_attention(q, k, v, causal=True, window=None,
+                                   softcap=None, q_offset=0,
+                                   kv_valid_len=None, block_kv=64)
+    np.testing.assert_allclose(np.asarray(blocked), np.asarray(dense),
+                               rtol=1e-5, atol=1e-5)
+
+
+@settings(max_examples=20, deadline=None)
+@given(sq=st.integers(1, 32), sk=st.integers(8, 64),
+       causal=st.booleans(), window=st.one_of(st.none(), st.integers(1, 32)),
+       softcap=st.one_of(st.none(), st.floats(10.0, 60.0)))
+def test_attention_properties(sq, sk, causal, window, softcap):
+    """Properties: rows are convex combinations of V; masked-out futures
+    do not influence causal outputs."""
+    B, H, KVH, Dh = 1, 2, 2, 16
+    ks = jax.random.split(jax.random.PRNGKey(42), 3)
+    q = jax.random.normal(ks[0], (B, sq, H, Dh), jnp.float32)
+    k = jax.random.normal(ks[1], (B, sk, KVH, Dh), jnp.float32)
+    v = jax.random.normal(ks[2], (B, sk, KVH, Dh), jnp.float32)
+    out = L.attention(q, k, v, causal=causal, window=window, softcap=softcap,
+                      q_offset=max(0, sk - sq) if causal else 0)
+    assert np.isfinite(np.asarray(out)).all()
+    lo, hi = np.asarray(v).min(), np.asarray(v).max()
+    assert (np.asarray(out) >= lo - 1e-4).all()
+    assert (np.asarray(out) <= hi + 1e-4).all()
+
+
+def test_causal_future_invariance():
+    """Perturbing future keys/values must not change causal outputs."""
+    B, S, H, Dh = 1, 16, 2, 16
+    ks = jax.random.split(jax.random.PRNGKey(1), 3)
+    q = jax.random.normal(ks[0], (B, S, H, Dh))
+    k = jax.random.normal(ks[1], (B, S, H, Dh))
+    v = jax.random.normal(ks[2], (B, S, H, Dh))
+    out1 = L.attention(q, k, v, causal=True)
+    k2 = k.at[:, 10:].add(100.0)
+    v2 = v.at[:, 10:].add(-50.0)
+    out2 = L.attention(q, k2, v2, causal=True)
+    np.testing.assert_allclose(np.asarray(out1[:, :10]),
+                               np.asarray(out2[:, :10]), rtol=1e-5)
+
+
+def test_rope_rotation_invariance():
+    """RoPE preserves norms and relative-position dot products."""
+    x = jax.random.normal(jax.random.PRNGKey(0), (1, 8, 2, 32))
+    pos = jnp.arange(8)[None]
+    r = L.rope(x, pos)
+    np.testing.assert_allclose(np.asarray(jnp.linalg.norm(r, axis=-1)),
+                               np.asarray(jnp.linalg.norm(x, axis=-1)),
+                               rtol=1e-5)
+    # q_i . k_j depends only on i - j
+    q = jax.random.normal(jax.random.PRNGKey(1), (1, 1, 1, 32))
+    k = jax.random.normal(jax.random.PRNGKey(2), (1, 1, 1, 32))
+    def dot_at(i, j):
+        qi = L.rope(q, jnp.array([[i]]))
+        kj = L.rope(k, jnp.array([[j]]))
+        return float(jnp.sum(qi * kj))
+    assert dot_at(3, 1) == pytest.approx(dot_at(10, 8), rel=1e-4)
+
+
+def test_rmsnorm_scale_invariance():
+    x = jax.random.normal(jax.random.PRNGKey(0), (4, 64)) * 100.0
+    p = L.rmsnorm_init(64)
+    y = L.rmsnorm(p, x)
+    rms = np.asarray(jnp.sqrt(jnp.mean(jnp.square(y), -1)))
+    np.testing.assert_allclose(rms, 1.0, rtol=1e-3)
+
+
+def test_softmax_cross_entropy_matches_manual():
+    logits = jax.random.normal(jax.random.PRNGKey(0), (4, 8, 32))
+    labels = jax.random.randint(jax.random.PRNGKey(1), (4, 8), 0, 32)
+    got = L.softmax_cross_entropy(logits, labels)
+    p = jax.nn.log_softmax(logits, -1)
+    want = -jnp.mean(jnp.take_along_axis(p, labels[..., None], -1))
+    assert float(got) == pytest.approx(float(want), rel=1e-5)
+
+
+def test_softcap_bounds_scores():
+    s = jnp.linspace(-500, 500, 101)
+    capped = L._softcap(s, 50.0)
+    assert float(jnp.max(jnp.abs(capped))) <= 50.0

@@ -1,0 +1,92 @@
+"""Cross-cutting property tests (hypothesis) on system invariants."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.common.config import ModelConfig
+from repro.core.moe import default_capacity
+from repro.core.schedules import DiceConfig, Schedule
+from repro.core.selective import sync_layer_mask, sync_overhead_fraction
+
+
+def _cfg(e, k, cf=1.25):
+    return ModelConfig(name="t", family="moe", num_layers=2, d_model=32,
+                       d_ff=32, vocab_size=32, num_experts=e,
+                       experts_per_token=k, capacity_factor=cf)
+
+
+@settings(max_examples=50, deadline=None)
+@given(t=st.integers(1, 4096), e=st.sampled_from([4, 8, 16, 64, 128]),
+       k=st.integers(1, 8))
+def test_capacity_sufficient_under_perfect_balance(t, e, k):
+    """Capacity covers a perfectly balanced assignment and is 8-aligned."""
+    k = min(k, e)
+    c = default_capacity(t, _cfg(e, k))
+    assert c % 8 == 0
+    assert c * e >= t * k            # cf >= 1: no drops when balanced
+
+
+@settings(max_examples=30, deadline=None)
+@given(t=st.integers(8, 2048), e=st.sampled_from([8, 16, 64]),
+       k=st.integers(1, 4))
+def test_capacity_monotone_in_factor(t, e, k):
+    lo = default_capacity(t, _cfg(e, k, cf=1.0))
+    hi = default_capacity(t, _cfg(e, k, cf=2.0))
+    assert hi >= lo
+
+
+@settings(max_examples=40, deadline=None)
+@given(n=st.integers(1, 96), frac=st.floats(0.0, 1.0),
+       policy=st.sampled_from(["none", "deep", "shallow"]))
+def test_sync_mask_counts(n, frac, policy):
+    m = sync_layer_mask(policy, n, fraction=frac)
+    assert m.shape == (n,)
+    if policy == "none":
+        assert not m.any()
+    else:
+        assert m.sum() == int(round(n * frac))
+    # deep puts every synced layer after every unsynced one
+    if policy == "deep" and 0 < m.sum() < n:
+        assert m.argmax() > (~m).argmax() or m[0] == False  # noqa: E712
+
+
+def test_sync_overhead_matches_mask():
+    for policy in ("none", "deep", "shallow", "staggered", "all"):
+        f = sync_overhead_fraction(policy, 28)
+        m = sync_layer_mask(policy, 28)
+        assert f == pytest.approx(m.mean())
+
+
+def test_schedule_invariants():
+    """Buffer counts and staleness are consistent across the zoo of
+    schedules: more buffers never means LESS staleness headroom, sync has
+    neither, and every factory produces its own schedule."""
+    assert Schedule.SYNC.num_buffers == 0 and Schedule.SYNC.step_staleness == 0
+    for s in Schedule:
+        assert s.step_staleness <= s.num_buffers or s == Schedule.DICE
+    factories = {
+        Schedule.SYNC: DiceConfig.sync_ep,
+        Schedule.DISPLACED: DiceConfig.displaced,
+        Schedule.INTERWEAVED: DiceConfig.interweaved,
+        Schedule.DICE: DiceConfig.dice,
+        Schedule.STAGGERED_BATCH: DiceConfig.staggered_batch,
+    }
+    for sched, fn in factories.items():
+        assert fn().schedule == sched
+
+
+@settings(max_examples=20, deadline=None)
+@given(b=st.integers(1, 4), t=st.integers(1, 32), pos=st.integers(0, 200),
+       w=st.sampled_from([4, 8, 16]))
+def test_ring_slot_position_reconstruction(b, t, pos, w):
+    """decode ring-cache invariant: slot s holds the largest p <= pos with
+    p % W == s; invalid before first wrap."""
+    slots = np.arange(w)
+    slot_pos = pos - ((pos - slots) % w)
+    assert (slot_pos <= pos).all()
+    valid = slot_pos >= 0
+    assert ((slot_pos[valid] % w) == slots[valid]).all()
+    # exactly min(pos+1, w) slots valid
+    assert valid.sum() == min(pos + 1, w)

@@ -1,0 +1,141 @@
+"""Staleness semantics — the paper's central quantities, tested exactly.
+
+The schedules must satisfy, for a layer fed inputs x(0), x(1), ... :
+  SYNC         y(s) == MoE(x(s))
+  INTERWEAVED  y(s) == MoE(x(s-1))      (1-step staleness, 1 buffer)
+  DISPLACED    y(s) == MoE(x(s-2))      (2-step staleness, 2 buffers)
+and displaced must carry ~2x the persistent buffer bytes of interweaved
+(paper Sec. 4.1: interweaved 'halves the buffer size').
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.common.config import ModelConfig
+from repro.core.moe import moe_forward, moe_init
+from repro.core.schedules import DiceConfig, Schedule
+from repro.core.staleness import MoELayerState, moe_step
+from repro.core import conditional
+
+CFG = ModelConfig(name="t", family="moe", num_layers=4, d_model=32, d_ff=64,
+                  vocab_size=64, num_heads=4, num_kv_heads=4, num_experts=4,
+                  experts_per_token=2, moe_d_ff=48, capacity_factor=4.0)
+
+
+@pytest.fixture(scope="module")
+def setup():
+    p = moe_init(jax.random.PRNGKey(0), CFG)
+    xs = [jax.random.normal(jax.random.PRNGKey(10 + s), (16, 32), jnp.float32)
+          for s in range(8)]
+    return p, xs
+
+
+def _run_schedule(p, xs, dcfg, **kw):
+    state = MoELayerState()
+    outs = []
+    for s, x in enumerate(xs):
+        y, state, _ = moe_step(p, x, CFG, dcfg, state, moe_layer_idx=0,
+                               num_moe_layers=4, step_idx=s, **kw)
+        outs.append(y)
+    return outs, state
+
+
+def _sync_out(p, x):
+    return moe_forward(p, x, CFG)[0]
+
+
+def test_sync_matches_plain_forward(setup):
+    p, xs = setup
+    outs, state = _run_schedule(p, xs, DiceConfig.sync_ep())
+    for s, x in enumerate(xs):
+        np.testing.assert_allclose(np.asarray(outs[s]),
+                                   np.asarray(_sync_out(p, x)), rtol=1e-5)
+    assert state.x_prev is None and state.h_cache is None
+
+
+def test_interweaved_one_step_staleness(setup):
+    p, xs = setup
+    dcfg = DiceConfig.interweaved()
+    outs, _ = _run_schedule(p, xs, dcfg)
+    w = dcfg.warmup_steps
+    for s in range(w, len(xs)):
+        np.testing.assert_allclose(np.asarray(outs[s]),
+                                   np.asarray(_sync_out(p, xs[s - 1])),
+                                   rtol=1e-5)
+    # warmup steps are synchronous
+    for s in range(w):
+        np.testing.assert_allclose(np.asarray(outs[s]),
+                                   np.asarray(_sync_out(p, xs[s])), rtol=1e-5)
+
+
+def test_displaced_two_step_staleness(setup):
+    p, xs = setup
+    dcfg = DiceConfig.displaced()
+    outs, _ = _run_schedule(p, xs, dcfg)
+    w = dcfg.warmup_steps
+    for s in range(w + 2, len(xs)):
+        np.testing.assert_allclose(np.asarray(outs[s]),
+                                   np.asarray(_sync_out(p, xs[s - 2])),
+                                   rtol=1e-5)
+
+
+def test_buffer_halving(setup):
+    """Paper: interweaved halves displaced's persistent buffers."""
+    p, xs = setup
+    _, st_i = _run_schedule(p, xs, DiceConfig.interweaved())
+    _, st_d = _run_schedule(p, xs, DiceConfig.displaced())
+    assert st_d.bytes() == 2 * st_i.bytes()
+    assert Schedule.DISPLACED.num_buffers == 2 * Schedule.INTERWEAVED.num_buffers
+    assert Schedule.DISPLACED.step_staleness == 2
+    assert Schedule.INTERWEAVED.step_staleness == 1
+
+
+def test_dice_selective_sync_protects_deep_layers(setup):
+    """With sync_policy='deep', the deepest layers have NO staleness."""
+    p, xs = setup
+    dcfg = DiceConfig.dice(sync_policy="deep")
+    # layer 3 of 4 is in the deep half -> synchronous
+    state = MoELayerState()
+    for s, x in enumerate(xs):
+        y, state, _ = moe_step(p, x, CFG, dcfg, state, moe_layer_idx=3,
+                               num_moe_layers=4, step_idx=s)
+        np.testing.assert_allclose(np.asarray(y),
+                                   np.asarray(_sync_out(p, x)), rtol=1e-5)
+    # layer 0 is shallow -> interweaved (stale by 1 after warmup)
+    state = MoELayerState()
+    outs = []
+    for s, x in enumerate(xs):
+        y, state, _ = moe_step(p, x, CFG, dcfg, state, moe_layer_idx=0,
+                               num_moe_layers=4, step_idx=s)
+        outs.append(y)
+    s = len(xs) - 1
+    if conditional.is_refresh_step(s, dcfg.cond_stride):
+        np.testing.assert_allclose(np.asarray(outs[s]),
+                                   np.asarray(_sync_out(p, xs[s - 1])),
+                                   rtol=1e-5)
+
+
+def test_dice_light_steps_shrink_dispatch(setup):
+    """Conditional communication: non-refresh steps dispatch ~1/K volume."""
+    p, xs = setup
+    dcfg = DiceConfig.dice(cond_stride=2)
+    state = MoELayerState()
+    bytes_by_step = []
+    for s, x in enumerate(xs):
+        y, state, aux = moe_step(p, x, CFG, dcfg, state, moe_layer_idx=0,
+                                 num_moe_layers=4, step_idx=s)
+        bytes_by_step.append(int(aux.dispatch_bytes))
+    # steps after warmup alternate refresh (full) / light (reduced)
+    w = dcfg.warmup_steps
+    full = bytes_by_step[w]          # step 2 = refresh (2 % 2 == 0)
+    light = bytes_by_step[w + 1]     # step 3 = light
+    assert light < full
+    frac = conditional.comm_volume_fraction(CFG.experts_per_token,
+                                            dcfg.cond_stride)
+    assert light / full == pytest.approx(2 * frac - 1, rel=0.3)
+
+
+def test_staleness_enum_values():
+    assert Schedule.SYNC.step_staleness == 0
+    assert Schedule.DICE.step_staleness == 1

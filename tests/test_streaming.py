@@ -1,0 +1,118 @@
+"""Serving-path equivalence: prefill+decode must reproduce teacher-forced
+logits for every family (including ring-buffer sliding-window caches)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.common.config import ModelConfig
+from repro.models import dense, encdec, rwkv6, vlm, zamba2
+
+
+def _max_err(a, b):
+    return float(jnp.max(jnp.abs(a.astype(jnp.float32) - b.astype(jnp.float32))))
+
+
+def test_dense_decode_matches_teacher_forced():
+    cfg = ModelConfig(name="t", family="dense", num_layers=2, d_model=128,
+                      d_ff=256, vocab_size=512, num_heads=4, num_kv_heads=2,
+                      qk_norm=True, post_norm=True, embed_scale=True,
+                      attn_logit_softcap=50.0, final_logit_softcap=30.0,
+                      local_global_pattern=True, sliding_window=8)
+    p = dense.init_lm(jax.random.PRNGKey(0), cfg)
+    toks = jax.random.randint(jax.random.PRNGKey(1), (2, 24), 0, 512)
+    logits, _ = dense.forward(p, toks, cfg)
+    _, cache0 = dense.prefill(p, toks[:, :16], cfg)
+    cache = dense.init_cache(cfg, 2, 32)
+    cache["k"] = cache["k"].at[:, :, :16].set(cache0["k"])
+    cache["v"] = cache["v"].at[:, :, :16].set(cache0["v"])
+    cache["pos"] = cache0["pos"]
+    errs = []
+    for t in range(16, 24):
+        lg, cache = dense.decode_step(p, toks[:, t], cache, cfg)
+        errs.append(_max_err(lg, logits[:, t]))
+    assert max(errs) < 0.05, errs
+
+
+def test_dense_ring_cache_sliding_window():
+    cfg = ModelConfig(name="t", family="dense", num_layers=2, d_model=64,
+                      d_ff=128, vocab_size=256, num_heads=4, num_kv_heads=4,
+                      local_global_pattern=True, sliding_window=8,
+                      long_context_window=8)
+    p = dense.init_lm(jax.random.PRNGKey(0), cfg)
+    toks = jax.random.randint(jax.random.PRNGKey(1), (1, 20), 0, 256)
+    logits_tf, _ = dense.forward(p, toks, cfg, long_context=True)
+    cache = dense.init_cache(cfg, 1, 8)          # ring of exactly window slots
+    outs = []
+    for t in range(20):
+        lg, cache = dense.decode_step(p, toks[:, t], cache, cfg,
+                                      long_context=True)
+        outs.append(lg)
+    assert _max_err(jnp.stack(outs, 1), logits_tf) < 0.05
+
+
+def test_rwkv6_streaming():
+    cfg = ModelConfig(name="t", family="ssm", num_layers=2, d_model=128,
+                      d_ff=256, vocab_size=256)
+    p = rwkv6.init_rwkv6(jax.random.PRNGKey(0), cfg)
+    toks = jax.random.randint(jax.random.PRNGKey(1), (2, 24), 0, 256)
+    logits, _ = rwkv6.forward(p, toks, cfg)
+    lp, st = rwkv6.prefill(p, toks[:, :16], cfg)
+    errs = [_max_err(lp, logits[:, 15])]
+    for t in range(16, 24):
+        lg, st = rwkv6.decode_step(p, toks[:, t], st, cfg)
+        errs.append(_max_err(lg, logits[:, t]))
+    assert max(errs) < 0.05, errs
+
+
+def test_zamba2_streaming():
+    cfg = ModelConfig(name="t", family="hybrid", num_layers=6, d_model=128,
+                      d_ff=256, vocab_size=256, num_heads=4, num_kv_heads=4,
+                      ssm_state=16, hybrid_attn_every=3)
+    p = zamba2.init_zamba2(jax.random.PRNGKey(0), cfg)
+    toks = jax.random.randint(jax.random.PRNGKey(1), (2, 24), 0, 256)
+    logits, _ = zamba2.forward(p, toks, cfg)
+    lp, st = zamba2.prefill(p, toks[:, :16], cfg, cache_len=32)
+    errs = [_max_err(lp, logits[:, 15])]
+    for t in range(16, 24):
+        lg, st = zamba2.decode_step(p, toks[:, t], st, cfg)
+        errs.append(_max_err(lg, logits[:, t]))
+    assert max(errs) < 0.05, errs
+
+
+def test_vlm_streaming():
+    cfg = ModelConfig(name="t", family="vlm", num_layers=5, d_model=128,
+                      d_ff=256, vocab_size=256, num_heads=4, num_kv_heads=2,
+                      num_image_tokens=8, cross_attn_every=5)
+    p = vlm.init_vlm(jax.random.PRNGKey(0), cfg)
+    toks = jax.random.randint(jax.random.PRNGKey(1), (2, 24), 0, 256)
+    img = jax.random.normal(jax.random.PRNGKey(5), (2, 8, 128), jnp.bfloat16)
+    logits, _ = vlm.forward(p, toks, img, cfg)
+    lp, c0 = vlm.prefill(p, toks[:, :16], img, cfg)
+    cache = vlm.init_cache(cfg, 2, 32)
+    cache["k"] = cache["k"].at[:, :, :16].set(c0["k"])
+    cache["v"] = cache["v"].at[:, :, :16].set(c0["v"])
+    cache["img_k"], cache["img_v"], cache["pos"] = c0["img_k"], c0["img_v"], c0["pos"]
+    errs = [_max_err(lp, logits[:, 15])]
+    for t in range(16, 24):
+        lg, cache = vlm.decode_step(p, toks[:, t], cache, cfg)
+        errs.append(_max_err(lg, logits[:, t]))
+    assert max(errs) < 0.1, errs
+
+
+def test_encdec_streaming():
+    cfg = ModelConfig(name="t", family="audio", num_layers=2,
+                      encoder_layers=2, d_model=128, d_ff=256, vocab_size=256,
+                      num_heads=4, num_kv_heads=4, num_audio_frames=12)
+    p = encdec.init_encdec(jax.random.PRNGKey(0), cfg)
+    toks = jax.random.randint(jax.random.PRNGKey(1), (2, 24), 0, 256)
+    aud = jax.random.normal(jax.random.PRNGKey(6), (2, 12, 128), jnp.bfloat16)
+    logits, _ = encdec.forward(p, toks, aud, cfg)
+    lp, cache = encdec.prefill(p, toks[:, :16], aud, cfg)
+    cache["k"] = jnp.pad(cache["k"], ((0, 0), (0, 0), (0, 16), (0, 0), (0, 0)))
+    cache["v"] = jnp.pad(cache["v"], ((0, 0), (0, 0), (0, 16), (0, 0), (0, 0)))
+    errs = [_max_err(lp, logits[:, 15])]
+    for t in range(16, 24):
+        lg, cache = encdec.decode_step(p, toks[:, t], cache, cfg)
+        errs.append(_max_err(lg, logits[:, t]))
+    assert max(errs) < 0.05, errs
