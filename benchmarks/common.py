@@ -81,7 +81,9 @@ def reference_set(cfg, n=N_SAMPLES):
 
 def sample_method(params, cfg, method: str, *, num_steps: int,
                   n=N_SAMPLES, guidance=1.5) -> Tuple[jnp.ndarray, Dict, float]:
-    """Returns (samples, stats, us_per_step) for a schedule by name."""
+    """Returns (samples, stats, us_per_step) for a schedule by name.
+    stats includes the StepPlan engine's compile accounting
+    (num_plan_variants / jit_cache_size)."""
     dcfg, ndev = SCHEDULES[method]
     classes = jnp.arange(n) % cfg.num_classes
     t0 = time.time()

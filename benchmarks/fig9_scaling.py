@@ -12,7 +12,8 @@ from __future__ import annotations
 
 from benchmarks import common
 from repro.configs.dit_moe_xl import config as xl_config
-from repro.core.schedules import DiceConfig, Schedule
+from repro.core import plan as plan_lib
+from repro.core.schedules import DiceConfig
 from repro.launch.serve import modeled_step_latency
 
 
@@ -26,9 +27,13 @@ def buffer_bytes_per_method(cfg, method: str, *, local_batch: int,
         # full-sequence K+V per layer, model replicated across devices
         return 2 * cfg.num_layers * (tokens * n_dev) * d * elem
     dcfg, _ = common.SCHEDULES[method]
-    n_buf = dcfg.schedule.num_buffers
+    # derive from the plan (works for enum and registered-string schedules)
+    n_buf = plan_lib.steady_state_plan_for(
+        dcfg, cfg.num_layers,
+        experts_per_token=cfg.experts_per_token).num_buffers
     cache = tokens * cfg.experts_per_token * d * elem \
-        if (dcfg.schedule == Schedule.DICE and dcfg.cond_comm) else 0
+        if (plan_lib.schedule_name(dcfg.schedule) == "dice"
+            and dcfg.cond_comm) else 0
     return cfg.num_layers * (n_buf * tokens * d * elem) + \
         cfg.num_layers * cache
 

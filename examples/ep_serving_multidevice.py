@@ -18,6 +18,7 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
+from repro.common import compat
 from repro.common.config import ModelConfig
 from repro.configs.dit_moe_xl import tiny
 from repro.core.schedules import DiceConfig
@@ -70,7 +71,7 @@ def sample_ep(params, cfg, dcfg, mesh, *, num_steps, classes, key):
             local(classes), jax.tree.map(local, states))
         out_spec = jax.tree.map(lambda _: P("ep"), out_shape)
 
-        x, states = jax.jit(jax.shard_map(
+        x, states = jax.jit(compat.shard_map(
             partial(step, step_idx=s), mesh=mesh,
             in_specs=(pspecs, P("ep"), P("ep"), state_spec),
             out_specs=out_spec,
@@ -80,8 +81,7 @@ def sample_ep(params, cfg, dcfg, mesh, *, num_steps, classes, key):
 
 def main():
     assert len(jax.devices()) == EP, jax.devices()
-    mesh = jax.make_mesh((EP,), ("ep",),
-                         axis_types=(jax.sharding.AxisType.Auto,))
+    mesh = compat.make_mesh((EP,), ("ep",))
     cfg = tiny().replace(num_layers=4, capacity_factor=8.0)
     params = init_dit(jax.random.PRNGKey(0), cfg)
     # adaLN-zero init gives exactly-zero velocity on an untrained model (all

@@ -8,6 +8,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs.dit_moe_xl import tiny
+from repro.core import plan as plan_lib
 from repro.core.conditional import comm_volume_fraction
 from repro.core.schedules import DiceConfig, Schedule
 from repro.metrics.fid_proxy import mse_vs_reference
@@ -46,12 +47,17 @@ def main():
             schedule=Schedule.DICE, sync_policy="none", cond_comm=True,
             cond_stride=stride)))
 
-    print(f"{'variant':26s} {'mse_vs_sync':>12s} {'comm_volume':>12s}")
+    print(f"{'variant':26s} {'mse_vs_sync':>12s} {'comm_volume':>12s} "
+          f"{'plan_variants':>13s} {'staleness':>9s}")
     for name, dcfg in rows:
-        s, _ = sample(dcfg)
+        s, st = sample(dcfg)
         vol = comm_volume_fraction(cfg.experts_per_token, dcfg.cond_stride,
                                    dcfg.cond_policy) if dcfg.cond_comm else 1.0
-        print(f"{name:26s} {mse_vs_reference(s, ref):12.6f} {vol:12.3f}")
+        stale = plan_lib.steady_state_plan_for(
+            dcfg, cfg.num_layers,
+            experts_per_token=cfg.experts_per_token).step_staleness
+        print(f"{name:26s} {mse_vs_reference(s, ref):12.6f} {vol:12.3f} "
+              f"{st['num_plan_variants']:13d} {stale:9d}")
 
 
 if __name__ == "__main__":

@@ -24,18 +24,15 @@ def is_refresh_step(step: int, stride: int) -> bool:
     return stride <= 1 or (step % stride == 0)
 
 
-def fresh_mask(step: int, num_tokens: int, k: int, *, stride: int,
-               policy: str = "low",
-               key: Optional[jax.Array] = None) -> Optional[jnp.ndarray]:
-    """(T, K) bool: which (token, rank) pairs are transmitted this step.
+def policy_mask(policy: str, num_tokens: int, k: int,
+                key: Optional[jax.Array] = None) -> jnp.ndarray:
+    """(T, K) bool: which (token, rank) pairs are transmitted on a light
+    (non-refresh) step under ``policy``.
 
     policy "low"  — deprioritise low-score (non-top-1) pairs   [paper's choice]
     policy "high" — deprioritise the top-1 pair                 [ablation]
     policy "random" — deprioritise a random half of pairs       [ablation]
-    Returns None on refresh steps (everything fresh).
     """
-    if is_refresh_step(step, stride):
-        return None
     ranks = jnp.arange(k)[None, :].repeat(num_tokens, axis=0)
     if policy == "low":
         return ranks == 0
@@ -47,15 +44,32 @@ def fresh_mask(step: int, num_tokens: int, k: int, *, stride: int,
     raise ValueError(f"unknown cond_policy: {policy}")
 
 
-def effective_k(step: int, k: int, *, stride: int, policy: str = "low") -> int:
-    """Ranks actually dispatched this step (sizes the dispatch buffer)."""
-    if is_refresh_step(step, stride):
-        return k
+def policy_effective_k(policy: str, k: int) -> int:
+    """Ranks dispatched on a light step (sizes the dispatch buffer)."""
     if policy == "low":
         return 1
     if policy == "high":
         return k - 1
-    return max(1, k // 2)          # random: expect half
+    if policy == "random":
+        return max(1, k // 2)      # expect half
+    raise ValueError(f"unknown cond_policy: {policy}")
+
+
+def fresh_mask(step: int, num_tokens: int, k: int, *, stride: int,
+               policy: str = "low",
+               key: Optional[jax.Array] = None) -> Optional[jnp.ndarray]:
+    """Step-indexed form of :func:`policy_mask`; ``None`` on refresh steps
+    (everything fresh)."""
+    if is_refresh_step(step, stride):
+        return None
+    return policy_mask(policy, num_tokens, k, key=key)
+
+
+def effective_k(step: int, k: int, *, stride: int, policy: str = "low") -> int:
+    """Ranks actually dispatched this step (sizes the dispatch buffer)."""
+    if is_refresh_step(step, stride):
+        return k
+    return policy_effective_k(policy, k)
 
 
 def comm_volume_fraction(k: int, stride: int, policy: str = "low") -> float:

@@ -30,6 +30,7 @@ import jax
 import jax.ad_checkpoint
 import jax.numpy as jnp
 
+from repro.common import compat
 from repro.common.config import ModelConfig
 from repro.models.layers import dense_init
 
@@ -210,7 +211,7 @@ def moe_forward(p, x, cfg: ModelConfig, *,
     if ep_axis is None:
         buf_out = expert_ffn(p, buf, act=cfg.act, use_pallas=use_pallas)
     else:
-        n = jax.lax.axis_size(ep_axis)
+        n = compat.axis_size(ep_axis)
         e_loc = E // n
         # ---- dispatch all-to-all (collective #1) -------------------------
         # NOTE: the CPU backend's float-normalization pass upcasts bf16

@@ -1,0 +1,342 @@
+"""StepPlan engine: compile-once schedule planning (DESIGN.md Sec. 2).
+
+The paper's contribution is *when* each MoE layer communicates.  Rather
+than re-deciding that inside the traced step function (and re-jitting per
+``step_idx``), the decision is made **once, ahead of time**: a registered
+planner maps ``(DiceConfig, num_moe_layers, step_idx)`` to a ``StepPlan``
+— a hashable tuple of per-layer :class:`LayerAction`\\ s.  Because only a
+handful of distinct plans exist for a whole sampling run (warmup-sync,
+refresh, light, ...), the sampler jits **one step function per plan
+variant** instead of one per step, and the plan itself is the static
+argument that keys the jit cache.
+
+Adding a schedule is a single registered function::
+
+    @register_schedule("scmoe_shortcut")
+    def _plan_scmoe(dcfg, num_moe_layers, step_idx, k):
+        ...
+        return StepPlan(schedule="scmoe_shortcut", is_warmup=..., actions=...)
+
+then ``DiceConfig(schedule="scmoe_shortcut")`` works everywhere — the
+sampler, the serving engine, and the benchmarks all go through the
+registry; nothing else needs to change.
+
+The ``Schedule`` enum's ``step_staleness`` / ``num_buffers`` lookup tables
+are gone: both are *derived properties of the plan* (see
+:meth:`StepPlan.step_staleness` / :meth:`StepPlan.num_buffers`), computed
+from the buffer read/write ops each action declares.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Callable, Dict, List, Optional, Tuple
+
+from repro.core import conditional
+from repro.core.selective import sync_layer_mask
+
+
+# ---------------------------------------------------------------------------
+# the plan IR
+# ---------------------------------------------------------------------------
+@dataclass(frozen=True)
+class LayerAction:
+    """What one MoE layer does this step.  Hashable; fully static.
+
+    mode
+        "sync"         run MoE(x(s)), consume it immediately
+        "displaced"    run MoE(x_prev buffer), consume y_buf  (staleness 2)
+        "interweaved"  run MoE(x(s)), consume y_buf           (staleness 1)
+        "staggered"    two half-batch MoE calls, consume y_buf (staleness 1)
+    store_y / store_x
+        buffer *write* ops: persist the combined output / the dispatched
+        tokens into the layer state for a later step.
+    mask_policy
+        Conditional-Communication mask for this step: ``None`` transmits
+        every (token, rank) pair fresh; otherwise one of
+        "low" | "high" | "random" (paper Table 4).
+    effective_k
+        ranks actually dispatched (sizes the capacity buffer); ``None``
+        means the model's full experts_per_token.
+    want_cache
+        maintain the per-(token, rank) expert-output cache h_cache.
+    """
+    mode: str = "sync"
+    store_y: bool = False
+    store_x: bool = False
+    mask_policy: Optional[str] = None
+    effective_k: Optional[int] = None
+    want_cache: bool = False
+
+    def __post_init__(self):
+        if self.mode not in ("sync", "displaced", "interweaved", "staggered"):
+            raise ValueError(f"unknown LayerAction mode: {self.mode}")
+
+    # -- buffer read/write accounting (drives the derived properties) -------
+    @property
+    def reads_y_buf(self) -> bool:
+        return self.mode in ("displaced", "interweaved", "staggered")
+
+    @property
+    def reads_x_prev(self) -> bool:
+        return self.mode == "displaced"
+
+    @property
+    def writes_y_buf(self) -> bool:
+        return self.store_y or self.mode != "sync"
+
+    @property
+    def writes_x_prev(self) -> bool:
+        return self.store_x or self.mode in ("displaced", "staggered")
+
+    @property
+    def num_buffers(self) -> int:
+        """Persistent (T, d)-sized buffers this action keeps alive."""
+        return int(self.writes_y_buf) + int(self.writes_x_prev)
+
+    @property
+    def staleness(self) -> int:
+        """Step-distance between the consumed output's input and now."""
+        return {"sync": 0, "interweaved": 1, "staggered": 1,
+                "displaced": 2}[self.mode]
+
+
+@dataclass(frozen=True)
+class StepPlan:
+    """Per-layer actions for one diffusion step.  Hashable -> usable as a
+    ``jax.jit`` static argument; equal plans share one compiled executable."""
+    schedule: str
+    is_warmup: bool
+    actions: Tuple[LayerAction, ...]
+
+    @property
+    def num_layers(self) -> int:
+        return len(self.actions)
+
+    @property
+    def step_staleness(self) -> int:
+        """Worst-case staleness any layer consumes this step (paper Sec. 1)."""
+        return max((a.staleness for a in self.actions), default=0)
+
+    @property
+    def num_buffers(self) -> int:
+        """Max persistent per-layer buffers (the paper's memory claim)."""
+        return max((a.num_buffers for a in self.actions), default=0)
+
+    @property
+    def num_sync_layers(self) -> int:
+        return sum(a.mode == "sync" for a in self.actions)
+
+
+@dataclass(frozen=True)
+class SchedulePlan:
+    """All steps of a sampling run, pre-bucketed into plan variants."""
+    steps: Tuple[StepPlan, ...]
+    variants: Tuple[StepPlan, ...]          # unique plans, first-seen order
+    variant_of_step: Tuple[int, ...]        # step -> index into variants
+
+    @property
+    def num_steps(self) -> int:
+        return len(self.steps)
+
+    @property
+    def num_variants(self) -> int:
+        return len(self.variants)
+
+    def steps_of_variant(self, v: int) -> List[int]:
+        return [s for s, i in enumerate(self.variant_of_step) if i == v]
+
+
+# ---------------------------------------------------------------------------
+# schedule registry
+# ---------------------------------------------------------------------------
+# planner(dcfg, num_moe_layers, step_idx, experts_per_token) -> StepPlan
+Planner = Callable[..., StepPlan]
+
+_REGISTRY: Dict[str, Planner] = {}
+
+
+def schedule_name(schedule) -> str:
+    """Accept a Schedule enum member or a plain registered name."""
+    return getattr(schedule, "value", str(schedule))
+
+
+def register_schedule(name: str, planner_fn: Optional[Planner] = None):
+    """Register ``planner_fn`` under ``name``.  Usable as a decorator::
+
+        @register_schedule("my_sched")
+        def _plan(dcfg, num_moe_layers, step_idx, k): ...
+    """
+    def _register(fn: Planner) -> Planner:
+        _REGISTRY[name] = fn
+        return fn
+    if planner_fn is not None:
+        return _register(planner_fn)
+    return _register
+
+
+def get_planner(schedule) -> Planner:
+    name = schedule_name(schedule)
+    try:
+        return _REGISTRY[name]
+    except KeyError:
+        raise KeyError(
+            f"no planner registered for schedule {name!r}; known: "
+            f"{sorted(_REGISTRY)}") from None
+
+
+def registered_schedules() -> List[str]:
+    return sorted(_REGISTRY)
+
+
+# ---------------------------------------------------------------------------
+# the compiler
+# ---------------------------------------------------------------------------
+def plan_for_step(dcfg, num_moe_layers: int, step_idx: int, *,
+                  experts_per_token: int) -> StepPlan:
+    """One step's plan via the registered planner for ``dcfg.schedule``."""
+    planner = get_planner(dcfg.schedule)
+    return planner(dcfg, num_moe_layers, step_idx, experts_per_token)
+
+
+def compile_step_plans(dcfg, num_moe_layers: int, num_steps: int, *,
+                       experts_per_token: int) -> SchedulePlan:
+    """Precompute every step's plan and bucket steps by static shape.
+
+    ``SchedulePlan.num_variants`` is the number of distinct compiled step
+    functions a sampler needs — e.g. DICE (stride=2, warmup=2) yields 3:
+    warmup-sync, refresh, light.
+    """
+    steps = tuple(plan_for_step(dcfg, num_moe_layers, s,
+                                experts_per_token=experts_per_token)
+                  for s in range(num_steps))
+    variants: List[StepPlan] = []
+    index: Dict[StepPlan, int] = {}
+    variant_of_step = []
+    for p in steps:
+        if p not in index:
+            index[p] = len(variants)
+            variants.append(p)
+        variant_of_step.append(index[p])
+    return SchedulePlan(steps=steps, variants=tuple(variants),
+                        variant_of_step=tuple(variant_of_step))
+
+
+# ---------------------------------------------------------------------------
+# built-in planners (the paper's schedules, Fig. 2 + supplement Sec. 8)
+# ---------------------------------------------------------------------------
+def _uniform(action: LayerAction, n: int) -> Tuple[LayerAction, ...]:
+    return (action,) * n
+
+
+def _plan_sync(dcfg, num_moe_layers, step_idx, k) -> StepPlan:
+    """Baseline EP: blocking dispatch+combine, no persistent buffers.
+    ``is_warmup`` still tracks the config (the patch-parallel attention
+    path warms up independently of the MoE schedule)."""
+    return StepPlan(schedule="sync", is_warmup=step_idx < dcfg.warmup_steps,
+                    actions=_uniform(LayerAction(mode="sync"), num_moe_layers))
+
+
+def _plan_displaced(dcfg, num_moe_layers, step_idx, k) -> StepPlan:
+    """DistriFusion-style: both collectives deferred, 2-step staleness."""
+    if step_idx < dcfg.warmup_steps:
+        a = LayerAction(mode="sync", store_y=True, store_x=True)
+        return StepPlan(schedule="displaced", is_warmup=True,
+                        actions=_uniform(a, num_moe_layers))
+    return StepPlan(schedule="displaced", is_warmup=False,
+                    actions=_uniform(LayerAction(mode="displaced"),
+                                     num_moe_layers))
+
+
+def _plan_interweaved(dcfg, num_moe_layers, step_idx, k) -> StepPlan:
+    """Dispatch in-step, combine deferred: 1-step staleness, 1 buffer."""
+    if step_idx < dcfg.warmup_steps:
+        a = LayerAction(mode="sync", store_y=True)
+        return StepPlan(schedule="interweaved", is_warmup=True,
+                        actions=_uniform(a, num_moe_layers))
+    return StepPlan(schedule="interweaved", is_warmup=False,
+                    actions=_uniform(LayerAction(mode="interweaved"),
+                                     num_moe_layers))
+
+
+def _plan_staggered_batch(dcfg, num_moe_layers, step_idx, k) -> StepPlan:
+    """Supplement Sec. 8: the rejected alternative — 1-step staleness but
+    2 persistent buffers and halved effective GEMM batch."""
+    if step_idx < dcfg.warmup_steps:
+        # store_x already during warmup: steady-state staggered writes the
+        # dispatch buffer every step (it is write-only bookkeeping, never
+        # read), and keeping the state pytree structure constant lets all
+        # warmup + steady steps share the planned state layout.
+        a = LayerAction(mode="sync", store_y=True, store_x=True)
+        return StepPlan(schedule="staggered_batch", is_warmup=True,
+                        actions=_uniform(a, num_moe_layers))
+    return StepPlan(schedule="staggered_batch", is_warmup=False,
+                    actions=_uniform(LayerAction(mode="staggered"),
+                                     num_moe_layers))
+
+
+def _plan_dice(dcfg, num_moe_layers, step_idx, k) -> StepPlan:
+    """Interweaved + selective sync (deep layers) + conditional comm."""
+    warmup = step_idx < dcfg.warmup_steps
+    sync_mask = sync_layer_mask(dcfg.sync_policy, num_moe_layers,
+                                fraction=dcfg.sync_fraction)
+    want_cache = bool(dcfg.cond_comm)
+    refresh = conditional.is_refresh_step(step_idx, dcfg.cond_stride)
+    actions = []
+    for i in range(num_moe_layers):
+        if warmup or bool(sync_mask[i]):
+            actions.append(LayerAction(mode="sync", store_y=True,
+                                       want_cache=want_cache))
+        elif dcfg.cond_comm:
+            actions.append(LayerAction(
+                mode="interweaved",
+                mask_policy=None if refresh else dcfg.cond_policy,
+                effective_k=k if refresh
+                else conditional.policy_effective_k(dcfg.cond_policy, k),
+                want_cache=True))
+        else:
+            actions.append(LayerAction(mode="interweaved"))
+    return StepPlan(schedule="dice", is_warmup=warmup,
+                    actions=tuple(actions))
+
+
+register_schedule("sync", _plan_sync)
+register_schedule("displaced", _plan_displaced)
+register_schedule("interweaved", _plan_interweaved)
+register_schedule("staggered_batch", _plan_staggered_batch)
+register_schedule("dice", _plan_dice)
+
+
+# ---------------------------------------------------------------------------
+# steady-state probe (backs the Schedule enum's derived properties)
+# ---------------------------------------------------------------------------
+def steady_state_plan(schedule, *, num_moe_layers: int = 2,
+                      experts_per_token: int = 2) -> StepPlan:
+    """A representative post-warmup refresh-step plan for ``schedule`` with
+    its default DiceConfig — the source of truth for the schedule-level
+    ``step_staleness`` / ``num_buffers`` quantities the paper tabulates."""
+    from repro.core.schedules import DiceConfig, Schedule
+    name = schedule_name(schedule)
+    factories = {
+        "sync": DiceConfig.sync_ep,
+        "displaced": DiceConfig.displaced,
+        "interweaved": DiceConfig.interweaved,
+        "dice": DiceConfig.dice,
+        "staggered_batch": DiceConfig.staggered_batch,
+    }
+    if name in factories:
+        dcfg = factories[name]()
+    else:                       # registered third-party schedule
+        dcfg = DiceConfig(schedule=name)  # type: ignore[arg-type]
+    return steady_state_plan_for(dcfg, num_moe_layers,
+                                 experts_per_token=experts_per_token)
+
+
+def steady_state_plan_for(dcfg, num_moe_layers: int, *,
+                          experts_per_token: int) -> StepPlan:
+    """The plan of the first post-warmup refresh step under ``dcfg`` — what
+    the latency model treats as the schedule's characteristic step."""
+    step = dcfg.warmup_steps
+    while not conditional.is_refresh_step(step, dcfg.cond_stride):
+        step += 1
+    return plan_for_step(dcfg, num_moe_layers, step,
+                         experts_per_token=experts_per_token)

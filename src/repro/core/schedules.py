@@ -7,11 +7,18 @@ input activations were produced and the step whose output consumes them.
   DISPLACED    staleness 2   both collectives deferred     (DistriFusion-style)
   INTERWEAVED  staleness 1   dispatch in-step, combine deferred (ours, free)
   DICE         staleness 1   + selective sync + conditional communication
+
+These quantities are no longer hand-maintained tables: both enum
+properties are *derived* from the schedule's steady-state StepPlan
+(repro.core.plan), so a registered planner is the single source of truth.
+``DiceConfig.schedule`` also accepts a plain registered-schedule name
+(string) so new schedules plug in without touching this enum.
 """
 from __future__ import annotations
 
 import enum
 from dataclasses import dataclass
+from typing import Union
 
 
 class Schedule(enum.Enum):
@@ -26,19 +33,22 @@ class Schedule(enum.Enum):
 
     @property
     def step_staleness(self) -> int:
-        return {"sync": 0, "displaced": 2, "interweaved": 1, "dice": 1,
-                "staggered_batch": 1}[self.value]
+        """Worst-case staleness at steady state (derived from the plan)."""
+        from repro.core.plan import steady_state_plan
+        return steady_state_plan(self).step_staleness
 
     @property
     def num_buffers(self) -> int:
-        """Persistent per-layer buffers (paper: interweaved halves memory)."""
-        return {"sync": 0, "displaced": 2, "interweaved": 1, "dice": 1,
-                "staggered_batch": 2}[self.value]
+        """Persistent per-layer buffers (paper: interweaved halves memory);
+        derived from the steady-state plan's buffer write ops."""
+        from repro.core.plan import steady_state_plan
+        return steady_state_plan(self).num_buffers
 
 
 @dataclass(frozen=True)
 class DiceConfig:
-    schedule: Schedule = Schedule.DICE
+    # a Schedule member, or the registered name of a third-party planner
+    schedule: Union[Schedule, str] = Schedule.DICE
     # -- layer level: selective synchronization ------------------------------
     sync_policy: str = "deep"        # none | deep | shallow | staggered
     sync_fraction: float = 0.5       # fraction of layers protected

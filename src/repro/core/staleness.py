@@ -11,23 +11,28 @@ through the sampling loop (DESIGN.md Sec. 2):
   DICE         interweaved + deep layers sync + conditional-communication
                cache of per-(token, rank) expert outputs
 
+The *decision* of which mode each layer runs in lives in the StepPlan
+engine (repro.core.plan): a registered planner emits a per-step, per-layer
+:class:`~repro.core.plan.LayerAction`, and :func:`apply_layer_action` here
+is the sole executor.  ``moe_step`` remains as the step-indexed
+convenience wrapper (it plans one step on the fly).
+
 The buffer counts reproduce the paper's memory claim (interweaved halves
 displaced's persistent buffers); ``state_bytes`` makes it measurable.
 """
 from __future__ import annotations
 
-from dataclasses import dataclass, replace
+from dataclasses import dataclass
 from typing import Dict, Optional
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro.common.config import ModelConfig
 from repro.core import conditional
 from repro.core.moe import MoEAux, default_capacity, moe_forward
+from repro.core.plan import LayerAction, plan_for_step
 from repro.core.schedules import DiceConfig, Schedule
-from repro.core.selective import sync_layer_mask
 
 
 @dataclass
@@ -53,57 +58,71 @@ def init_layer_states(num_moe_layers: int) -> Dict[int, MoELayerState]:
     return {i: MoELayerState() for i in range(num_moe_layers)}
 
 
+def init_planned_states(splan, *, num_tokens: int, d_model: int, k: int,
+                        dtype=jnp.float32) -> Dict[int, MoELayerState]:
+    """Pre-allocate exactly the buffers a SchedulePlan will ever write.
+
+    Zero-filled buffers are never *read* before a warmup step overwrites
+    them; allocating them up front keeps the state pytree structure
+    constant across the whole run, so the jitted step function compiles
+    exactly once per plan variant (no extra cache entry when the first
+    warmup step would otherwise change the pytree signature).
+    """
+    states = {}
+    num_layers = splan.steps[0].num_layers if splan.steps else 0
+    for i in range(num_layers):
+        acts = [p.actions[i] for p in splan.variants]
+        states[i] = MoELayerState(
+            y_buf=jnp.zeros((num_tokens, d_model), dtype)
+            if any(a.writes_y_buf for a in acts) else None,
+            x_prev=jnp.zeros((num_tokens, d_model), dtype)
+            if any(a.writes_x_prev for a in acts) else None,
+            h_cache=jnp.zeros((num_tokens, k, d_model), dtype)
+            if any(a.want_cache for a in acts) else None)
+    return states
+
+
 def state_bytes(states: Dict[int, MoELayerState]) -> int:
     return sum(s.bytes() for s in states.values())
 
 
-def moe_step(p, x, cfg: ModelConfig, dcfg: DiceConfig,
-             state: MoELayerState, *,
-             moe_layer_idx: int, num_moe_layers: int, step_idx: int,
-             key=None, ep_axis: Optional[str] = None,
-             use_pallas: bool = False):
-    """One MoE layer under a staleness schedule.
+def apply_layer_action(p, x, cfg: ModelConfig, action: LayerAction,
+                       state: MoELayerState, *,
+                       key=None, ep_axis: Optional[str] = None,
+                       use_pallas: bool = False):
+    """Execute one MoE layer under a planned :class:`LayerAction`.
 
-    x: (T, d) flat tokens.  ``step_idx`` counts diffusion-loop iterations
-    (0-based); the first ``dcfg.warmup_steps`` run synchronously (paper:
-    "N synchronized steps post cold start").  Returns (y, new_state, aux).
+    x: (T, d) flat tokens.  All schedule decisions (mode, mask, capacity,
+    buffer writes) are already baked into ``action`` — this function is
+    pure dataflow and traces identically for equal actions, which is what
+    lets the sampler share one compiled executable per plan variant.
+    Returns (y, new_state, aux).
     """
-    sched = dcfg.schedule
-    warmup = step_idx < dcfg.warmup_steps
-    sync_mask = sync_layer_mask(dcfg.sync_policy, num_moe_layers,
-                                fraction=dcfg.sync_fraction)
-    layer_sync = bool(sync_mask[moe_layer_idx]) and sched == Schedule.DICE
-
-    run_sync = (sched == Schedule.SYNC) or warmup or layer_sync
-
-    # ---- conditional communication mask / capacity --------------------------
     mask = None
     capacity = None
-    if (sched == Schedule.DICE and dcfg.cond_comm and not run_sync):
+    if action.mask_policy is not None:
         k = cfg.experts_per_token
-        mask = conditional.fresh_mask(step_idx, x.shape[0], k,
-                                      stride=dcfg.cond_stride,
-                                      policy=dcfg.cond_policy, key=key)
-        k_eff = conditional.effective_k(step_idx, k, stride=dcfg.cond_stride,
-                                        policy=dcfg.cond_policy)
-        capacity = default_capacity(x.shape[0], cfg, k=k_eff)
+        mask = conditional.policy_mask(action.mask_policy, x.shape[0], k,
+                                       key=key)
+    if action.effective_k is not None:
+        capacity = default_capacity(x.shape[0], cfg, k=action.effective_k)
 
-    want_cache = sched == Schedule.DICE and dcfg.cond_comm
+    want_cache = action.want_cache
 
     def run(inp, m=None, cache=None):
         return moe_forward(p, inp, cfg, capacity=capacity, fresh_mask=m,
                            h_cache=cache, ep_axis=ep_axis, key=key,
                            use_pallas=use_pallas, want_pair_vals=want_cache)
 
-    if run_sync:
+    if action.mode == "sync":
         y, aux = run(x)
         new = MoELayerState(
-            y_buf=y if sched.num_buffers >= 1 else None,
-            x_prev=x if sched == Schedule.DISPLACED else None,
+            y_buf=y if action.store_y else None,
+            x_prev=x if action.store_x else None,
             h_cache=aux.pair_vals if want_cache else None)
         return y, new, aux
 
-    if sched == Schedule.DISPLACED:
+    if action.mode == "displaced":
         # experts process tokens dispatched at s-1; their combine lands at s+1,
         # so the output consumed *now* is the buffered result of x(s-2).
         y_new, aux = run(state.x_prev)
@@ -111,7 +130,7 @@ def moe_step(p, x, cfg: ModelConfig, dcfg: DiceConfig,
         new = MoELayerState(y_buf=y_new, x_prev=x, h_cache=None)
         return out, new, aux
 
-    if sched == Schedule.STAGGERED_BATCH:
+    if action.mode == "staggered":
         # supplement Sec. 8: sub-batches interleave so each half overlaps the
         # other's communication — 1-step staleness like interweaved, but BOTH
         # the dispatched tokens and the combined results persist (2 buffers,
@@ -129,7 +148,7 @@ def moe_step(p, x, cfg: ModelConfig, dcfg: DiceConfig,
                      pair_vals=None, scores=None)
         return out, new, aux
 
-    # INTERWEAVED / DICE: dispatch of x(s) completes within step s (overlapped
+    # "interweaved": dispatch of x(s) completes within step s (overlapped
     # with the previous layer's expert compute); only the combine is deferred,
     # so the output consumed now is the buffered result of x(s-1).
     y_new, aux = run(x, mask, state.h_cache if want_cache else None)
@@ -139,6 +158,25 @@ def moe_step(p, x, cfg: ModelConfig, dcfg: DiceConfig,
         h_cache=conditional.update_cache(state.h_cache, aux.pair_vals, mask)
         if want_cache else None)
     return out, new, aux
+
+
+def moe_step(p, x, cfg: ModelConfig, dcfg: DiceConfig,
+             state: MoELayerState, *,
+             moe_layer_idx: int, num_moe_layers: int, step_idx: int,
+             key=None, ep_axis: Optional[str] = None,
+             use_pallas: bool = False):
+    """One MoE layer under a staleness schedule (step-indexed wrapper).
+
+    Plans ``step_idx`` through the schedule registry and executes this
+    layer's action.  The sampler avoids the per-step planning by compiling
+    a SchedulePlan once (repro.core.plan.compile_step_plans) and calling
+    :func:`apply_layer_action` via the plan-parameterised model forward.
+    Returns (y, new_state, aux).
+    """
+    plan = plan_for_step(dcfg, num_moe_layers, step_idx,
+                         experts_per_token=cfg.experts_per_token)
+    return apply_layer_action(p, x, cfg, plan.actions[moe_layer_idx], state,
+                              key=key, ep_axis=ep_axis, use_pallas=use_pallas)
 
 
 def staleness_of(schedule: Schedule) -> int:

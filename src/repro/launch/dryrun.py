@@ -30,6 +30,7 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import NamedSharding, PartitionSpec as P
 
+from repro.common import compat
 from repro.common.config import HW, INPUT_SHAPES, ModelConfig, ShapeConfig
 from repro.common.sharding import opt_state_spec, tree_param_specs
 from repro.configs import ASSIGNED_ARCHS, get_config
@@ -165,6 +166,7 @@ def tree_shardings(mesh, tree, spec_fn):
 # and "model", experts over "model", staleness buffers threaded as state.
 # ---------------------------------------------------------------------------
 def make_dit_step(cfg: ModelConfig, mesh, *, global_batch: int = 4096):
+    from repro.core import plan as plan_lib
     from repro.core.schedules import DiceConfig
     from repro.core import staleness as stale_lib
     from repro.models.dit_moe import dit_forward, init_dit
@@ -172,6 +174,9 @@ def make_dit_step(cfg: ModelConfig, mesh, *, global_batch: int = 4096):
     ba = batch_axes(mesh)
     tok_spec = P(tuple(ba) + ("model",))
     dcfg = DiceConfig.interweaved()
+    # steady-state plan (compiled once, outside the traced step function)
+    plan = plan_lib.steady_state_plan_for(
+        dcfg, cfg.num_layers, experts_per_token=cfg.experts_per_token)
     B, T, C, d = global_batch, cfg.patch_tokens, cfg.in_channels, cfg.d_model
     n_dev = int(np.prod(list(mesh.shape.values())))
     assert B % n_dev == 0
@@ -207,10 +212,10 @@ def make_dit_step(cfg: ModelConfig, mesh, *, global_batch: int = 4096):
         def f(p_l, x_l, cls_l, st_l):
             t = jnp.full((x_l.shape[0],), 0.5)
             v, ns_, _, _ = dit_forward(p_l, x_l, t, cls_l, cfg, dcfg, st_l,
-                                       step_idx=5, ep_axis="model")
+                                       plan=plan, ep_axis="model")
             return x_l + (1.0 / 50) * v, ns_
 
-        return jax.shard_map(
+        return compat.shard_map(
             f, mesh=mesh,
             in_specs=(pspecs, P(tuple(ba) + ("model",), None, None),
                       P(tuple(ba) + ("model",)), state_specs),

@@ -9,16 +9,14 @@ from __future__ import annotations
 
 import jax
 
-
-def _auto(n: int):
-    return (jax.sharding.AxisType.Auto,) * n
+from repro.common.compat import make_mesh
 
 
 def make_production_mesh(*, multi_pod: bool = False) -> jax.sharding.Mesh:
     """16x16 single-pod (256 chips) or 2x16x16 two-pod (512 chips) mesh."""
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(shape, axes, axis_types=_auto(len(shape)))
+    return make_mesh(shape, axes)
 
 
 def make_local_mesh(data: int = 1, model: int = 1) -> jax.sharding.Mesh:
@@ -26,8 +24,7 @@ def make_local_mesh(data: int = 1, model: int = 1) -> jax.sharding.Mesh:
     n = len(jax.devices())
     if data * model > n:
         data, model = 1, min(model, n)
-    return jax.make_mesh((data, model), ("data", "model"),
-                         axis_types=_auto(2))
+    return make_mesh((data, model), ("data", "model"))
 
 
 def batch_axes(mesh: jax.sharding.Mesh):

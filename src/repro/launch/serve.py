@@ -24,8 +24,8 @@ import numpy as np
 from repro.checkpoint import load_checkpoint
 from repro.common.config import HW, ModelConfig
 from repro.configs.dit_moe_xl import config as xl_config, tiny
-from repro.core.schedules import DiceConfig, Schedule
-from repro.core.selective import sync_overhead_fraction
+from repro.core import plan as plan_lib
+from repro.core.schedules import DiceConfig
 from repro.core.conditional import comm_volume_fraction
 from repro.models.dit_moe import init_dit
 from repro.sampling.rectified_flow import rf_sample
@@ -72,6 +72,10 @@ def modeled_step_latency(cfg: ModelConfig, dcfg: DiceConfig, *,
     communication share and with it the achievable overlap gain.
     """
     hw = hw or PAPER_HW
+    # steady-state StepPlan: the single source of truth for which layers
+    # block (replaces the per-schedule if/elif that used to live here)
+    steady = plan_lib.steady_state_plan_for(dcfg, cfg.num_layers,
+                                            experts_per_token=cfg.experts_per_token)
     tokens = local_batch * cfg.patch_tokens
     d = cfg.d_model
     # per-layer compute (attention + routed experts + shared experts), bf16
@@ -91,17 +95,14 @@ def modeled_step_latency(cfg: ModelConfig, dcfg: DiceConfig, *,
     t_comm_full = a2a_full / hw["link_bw"]
     t_comm_async = a2a_async / hw["link_bw"]
 
-    if dcfg.schedule == Schedule.STAGGERED_BATCH:
+    if plan_lib.schedule_name(dcfg.schedule) == "staggered_batch":
         # supplement Sec. 8: two half-batches -> each expert GEMM runs at
         # lower utilization (saturating efficiency curve)
         def eff(b):
             return b / (b + 4)
         t_comp = t_comp * eff(local_batch) / eff(max(1, local_batch // 2))
 
-    sync_frac = 1.0 if dcfg.schedule == Schedule.SYNC else \
-        sync_overhead_fraction(dcfg.sync_policy, cfg.num_layers,
-                               fraction=dcfg.sync_fraction) \
-        if dcfg.schedule == Schedule.DICE else 0.0
+    sync_frac = steady.num_sync_layers / max(1, steady.num_layers)
     # synchronous layers: compute + blocking full-volume comm;
     # async layers: overlap, possibly reduced volume
     t_layer_sync = t_comp + t_comm_full
@@ -118,12 +119,24 @@ def modeled_step_latency(cfg: ModelConfig, dcfg: DiceConfig, *,
 # engine
 # ---------------------------------------------------------------------------
 class DiceServer:
+    """``n_dev`` is the serving mesh size; it feeds both the per-device
+    local batch and the all-to-all fan-out of the latency model."""
+
     def __init__(self, cfg: ModelConfig, dcfg: DiceConfig, *,
-                 params=None, seed: int = 0):
+                 params=None, seed: int = 0, n_dev: int = 8):
+        if n_dev < 1:
+            raise ValueError(f"n_dev must be >= 1, got {n_dev}")
         self.cfg = cfg
         self.dcfg = dcfg
+        self.n_dev = n_dev
         self.params = params if params is not None else init_dit(
             jax.random.PRNGKey(seed), cfg)
+
+    def plan(self, num_steps: int) -> plan_lib.SchedulePlan:
+        """The compile-once schedule plan a ``generate`` call will run."""
+        return plan_lib.compile_step_plans(
+            self.dcfg, self.cfg.num_layers, num_steps,
+            experts_per_token=self.cfg.experts_per_token)
 
     def generate(self, requests: List[Request], *, num_steps: int = 20,
                  guidance: float = 1.5, key=None):
@@ -134,8 +147,9 @@ class DiceServer:
                                    num_steps=num_steps, classes=classes,
                                    key=key, guidance=guidance)
         wall = time.time() - t0
-        lat = modeled_step_latency(self.cfg, self.dcfg,
-                                   local_batch=max(1, len(requests) // 8))
+        lat = modeled_step_latency(
+            self.cfg, self.dcfg, n_dev=self.n_dev,
+            local_batch=max(1, len(requests) // self.n_dev))
         return samples, {
             "wall_s_cpu": wall,
             "modeled_step_s_tpu8": lat["t_step_s"],
@@ -144,6 +158,8 @@ class DiceServer:
             "buffer_bytes": stats["buffer_bytes"][-1] if stats["buffer_bytes"]
             else 0,
             "dispatch_bytes_per_step": stats["dispatch_bytes"],
+            "num_plan_variants": stats["num_plan_variants"],
+            "jit_cache_size": stats["jit_cache_size"],
         }
 
 
@@ -158,12 +174,15 @@ def serve_queue(server: "DiceServer", requests: List[Request], *,
     null class and trimmed).  Returns {rid: sample} plus aggregate stats."""
     key = key if key is not None else jax.random.PRNGKey(0)
     out: dict = {}
-    stats_acc = {"batches": 0, "padded": 0}
+    stats_acc = {"batches": 0, "padded": 0, "modeled_step_s_tpu8": 0.0,
+                 "modeled_total_s_tpu8": 0.0}
     queue = list(requests)
     while queue:
         batch, queue = queue[:max_batch], queue[max_batch:]
         pad = max_batch - len(batch)
-        padded = batch + [Request(class_id=server.cfg.num_classes - 1,
+        # cfg.num_classes IS the null/uncond class id (class_embed carries
+        # num_classes + 1 rows)
+        padded = batch + [Request(class_id=server.cfg.num_classes,
                                   rid=-1)] * pad
         key, k = jax.random.split(key)
         samples, stats = server.generate(padded, num_steps=num_steps,
@@ -172,7 +191,11 @@ def serve_queue(server: "DiceServer", requests: List[Request], *,
             out[r.rid] = samples[i]
         stats_acc["batches"] += 1
         stats_acc["padded"] += pad
-        stats_acc["modeled_step_s_tpu8"] = stats["modeled_step_s_tpu8"]
+        # aggregate across batches (total = sum; step = running mean)
+        stats_acc["modeled_total_s_tpu8"] += stats["modeled_total_s_tpu8"]
+        stats_acc["modeled_step_s_tpu8"] += (
+            stats["modeled_step_s_tpu8"]
+            - stats_acc["modeled_step_s_tpu8"]) / stats_acc["batches"]
     return out, stats_acc
 
 
@@ -186,6 +209,8 @@ def main():
     ap.add_argument("--no-tiny", dest="tiny", action="store_false")
     ap.add_argument("--ckpt", default=None)
     ap.add_argument("--guidance", type=float, default=1.5)
+    ap.add_argument("--n-dev", type=int, default=8,
+                    help="serving mesh size for the latency model")
     args = ap.parse_args()
 
     cfg = tiny() if args.tiny else xl_config()
@@ -194,11 +219,16 @@ def main():
     if args.ckpt:
         params = load_checkpoint(args.ckpt,
                                  init_dit(jax.random.PRNGKey(0), cfg))
-    server = DiceServer(cfg, dcfg, params=params)
+    server = DiceServer(cfg, dcfg, params=params, n_dev=args.n_dev)
     reqs = [Request(class_id=i % cfg.num_classes, rid=i)
             for i in range(args.requests)]
+    splan = server.plan(args.steps)
     print(f"serving {len(reqs)} requests, schedule={args.schedule}, "
-          f"{args.steps} steps, model={cfg.name}")
+          f"{args.steps} steps, model={cfg.name}, n_dev={args.n_dev}")
+    print(f"step plan: {splan.num_variants} compiled variants for "
+          f"{splan.num_steps} steps "
+          f"({[len(splan.steps_of_variant(v)) for v in range(splan.num_variants)]} "
+          f"steps each)")
     samples, stats = server.generate(reqs, num_steps=args.steps,
                                      guidance=args.guidance)
     print(f"samples: {samples.shape}, "

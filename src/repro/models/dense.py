@@ -24,6 +24,7 @@ import jax.ad_checkpoint
 import jax.numpy as jnp
 import numpy as np
 
+from repro.common import compat
 from repro.common.config import ModelConfig
 from repro.core import moe as moe_lib
 from repro.models import layers as L
@@ -132,7 +133,7 @@ def _moe_block(p_moe, x, cfg: ModelConfig, mesh, *, batch_axes=("data",),
         lb = jax.lax.pmean(aux.lb_loss, lb_axes)
         return y.reshape(b, s, d), lb
 
-    y, lb = jax.shard_map(
+    y, lb = compat.shard_map(
         f, mesh=mesh,
         in_specs=(pspec, x_spec),
         out_specs=(x_spec, P()),

@@ -21,6 +21,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.common.config import ModelConfig
+from repro.core import plan as plan_lib
 from repro.core import staleness as stale_lib
 from repro.core.patch_parallel import PatchParallelState, displaced_patch_attention
 from repro.core.schedules import DiceConfig, Schedule
@@ -81,7 +82,8 @@ def _modulate(x, shift, scale):
 
 def dit_forward(params, x, t, y, cfg: ModelConfig, dcfg: DiceConfig,
                 states: Dict[int, stale_lib.MoELayerState], *,
-                step_idx: int,
+                step_idx: Optional[int] = None,
+                plan: Optional[plan_lib.StepPlan] = None,
                 patch_states: Optional[Dict[int, PatchParallelState]] = None,
                 patch_parallel_ndev: int = 0,
                 ep_axis: Optional[str] = None,
@@ -90,9 +92,17 @@ def dit_forward(params, x, t, y, cfg: ModelConfig, dcfg: DiceConfig,
     """Velocity prediction.
 
     x: (B, T, C_in) latents; t: (B,) times; y: (B,) class ids
-    (cfg.num_classes = null/uncond).  Returns (v, new_states,
-    new_patch_states, aux dict).
+    (cfg.num_classes = null/uncond).  The schedule enters via ``plan`` (a
+    precompiled :class:`repro.core.plan.StepPlan`, hashable, jit-static);
+    callers that still think in step indices may pass ``step_idx`` instead
+    and the plan is derived on the fly through the schedule registry.
+    Returns (v, new_states, new_patch_states, aux dict).
     """
+    if plan is None:
+        if step_idx is None:
+            raise TypeError("dit_forward needs either plan= or step_idx=")
+        plan = plan_lib.plan_for_step(dcfg, cfg.num_layers, step_idx,
+                                      experts_per_token=cfg.experts_per_token)
     B, T, _ = x.shape
     d = cfg.d_model
     h = x @ params["patch_embed"] + params["pos_embed"][None]
@@ -119,7 +129,7 @@ def dit_forward(params, x, t, y, cfg: ModelConfig, dcfg: DiceConfig,
             pstate = patch_states.get(i, PatchParallelState()) if patch_states else PatchParallelState()
             attn, pnew = displaced_patch_attention(
                 q, k, v, pstate, n_dev=patch_parallel_ndev,
-                warmup=step_idx < dcfg.warmup_steps)
+                warmup=plan.is_warmup)
             attn = attn.reshape(B, T, -1) @ blk["attn"]["wo"]
             new_patch[i] = pnew
         else:
@@ -136,11 +146,9 @@ def dit_forward(params, x, t, y, cfg: ModelConfig, dcfg: DiceConfig,
             new_st = stale_lib.MoELayerState()
         else:
             flat = hn.reshape(B * T, d)
-            moe_out, new_st, aux = stale_lib.moe_step(
-                blk["moe"], flat, cfg, dcfg, states[i],
-                moe_layer_idx=i, num_moe_layers=cfg.num_layers,
-                step_idx=step_idx, key=key, ep_axis=ep_axis,
-                use_pallas=use_pallas)
+            moe_out, new_st, aux = stale_lib.apply_layer_action(
+                blk["moe"], flat, cfg, plan.actions[i], states[i],
+                key=key, ep_axis=ep_axis, use_pallas=use_pallas)
         new_states[i] = new_st
         total_lb += aux.lb_loss
         total_dispatch_bytes += aux.dispatch_bytes

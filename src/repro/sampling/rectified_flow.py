@@ -4,10 +4,13 @@ x_t = t * x1 + (1 - t) * x0 with x0 ~ N(0, I); the model predicts the
 velocity v = x1 - x0.  Sampling = Euler integration from t=0 to t=1 —
 the paper evaluates 10/20/50 steps with a few synchronized warmup steps.
 
-The sampler drives the DICE staleness machinery: it is a *python* loop
-over steps (each step jit-compiled) so that Conditional Communication's
-light steps may use a genuinely smaller dispatch buffer — matching the
-two-compiled-variant serving design (DESIGN.md Sec. 2).
+The sampler drives the DICE staleness machinery through the StepPlan
+engine (DESIGN.md Sec. 2): ``compile_step_plans`` buckets the run's steps
+into a small set of plan variants (warmup-sync / refresh / light for
+DICE), and the python loop calls ONE jitted step function whose static
+argument is the hashable StepPlan — so the jit cache holds one executable
+per *variant*, not per step index, while Conditional Communication's
+light steps still get a genuinely smaller dispatch buffer.
 """
 from __future__ import annotations
 
@@ -18,8 +21,9 @@ import jax
 import jax.numpy as jnp
 
 from repro.common.config import ModelConfig
+from repro.core import plan as plan_lib
 from repro.core import staleness as stale_lib
-from repro.core.schedules import DiceConfig, Schedule
+from repro.core.schedules import DiceConfig
 from repro.models.dit_moe import dit_forward, dit_train_forward
 from repro.optim.adamw import adamw_update, clip_by_global_norm, cosine_schedule
 
@@ -56,6 +60,41 @@ def rf_train_step(params, opt_state, batch, key, cfg: ModelConfig):
 # ---------------------------------------------------------------------------
 # sampling under a parallelism schedule
 # ---------------------------------------------------------------------------
+def make_sample_step(params, cfg: ModelConfig, dcfg: DiceConfig, classes, *,
+                     dt: float, guidance: float = 1.5,
+                     patch_parallel_ndev: int = 0,
+                     ep_axis: Optional[str] = None):
+    """One jitted Euler step, parameterised by a static StepPlan.
+
+    The returned function's jit cache is keyed by the (hashable) plan:
+    equal plans — however many step indices map to them — share a single
+    compiled executable.  ``t`` is a traced argument, so the step index
+    never enters the trace.
+    """
+    B = classes.shape[0]
+    null = jnp.full((B,), cfg.num_classes, jnp.int32)
+
+    @partial(jax.jit, static_argnames=("plan",))
+    def one_step(x, states, states_u, patch_states, patch_states_u, t, key,
+                 *, plan):
+        v_c, ns, nps, aux = dit_forward(
+            params, x, t, classes, cfg, dcfg, states, plan=plan,
+            patch_states=patch_states or None,
+            patch_parallel_ndev=patch_parallel_ndev, ep_axis=ep_axis, key=key)
+        if guidance != 1.0:
+            v_u, nsu, npsu, _ = dit_forward(
+                params, x, t, null, cfg, dcfg, states_u, plan=plan,
+                patch_states=patch_states_u or None,
+                patch_parallel_ndev=patch_parallel_ndev, ep_axis=ep_axis,
+                key=key)
+            v = v_u + guidance * (v_c - v_u)
+        else:
+            v, nsu, npsu = v_c, states_u, patch_states_u
+        return x + dt * v, ns, nsu, nps, npsu, aux
+
+    return one_step
+
+
 def rf_sample(params, cfg: ModelConfig, dcfg: DiceConfig, *,
               num_steps: int, classes, key,
               guidance: float = 1.5,
@@ -66,42 +105,45 @@ def rf_sample(params, cfg: ModelConfig, dcfg: DiceConfig, *,
 
     Returns (samples, stats) where stats records per-step all-to-all
     payload bytes and persistent buffer bytes — the quantities behind the
-    paper's speedup/memory claims.
+    paper's speedup/memory claims — plus the compile accounting of the
+    StepPlan engine: ``num_plan_variants`` (distinct static step shapes)
+    and ``jit_cache_size`` (actual compiled entries of the step function
+    — equal to the variant count thanks to plan-aware state init, and
+    O(1) in ``num_steps`` vs. the seed's one-compile-per-step).
     """
     B = classes.shape[0]
     x = jax.random.normal(key, (B, cfg.patch_tokens, cfg.in_channels))
     dt = 1.0 / num_steps
-    states = stale_lib.init_layer_states(cfg.num_layers)
-    states_u = stale_lib.init_layer_states(cfg.num_layers)
+    splan = plan_lib.compile_step_plans(
+        dcfg, cfg.num_layers, num_steps,
+        experts_per_token=cfg.experts_per_token)
+    # plan-aware init: allocate exactly the buffers the run will write, so
+    # the state pytree signature is constant and the jit cache holds
+    # exactly one entry per plan variant
+    planned_init = partial(stale_lib.init_planned_states, splan,
+                           num_tokens=B * cfg.patch_tokens,
+                           d_model=cfg.d_model, k=cfg.experts_per_token,
+                           dtype=x.dtype)
+    states = planned_init()
+    states_u = planned_init()
     patch_states: Dict = {}
     patch_states_u: Dict = {}
-    null = jnp.full((B,), cfg.num_classes, jnp.int32)
     stats = {"dispatch_bytes": [], "buffer_bytes": []}
 
-    @partial(jax.jit, static_argnames=("step_idx",))
-    def one_step(x, states, states_u, patch_states, patch_states_u, key,
-                 *, step_idx):
-        t = jnp.full((B,), step_idx * dt)
-        v_c, ns, nps, aux = dit_forward(
-            params, x, t, classes, cfg, dcfg, states, step_idx=step_idx,
-            patch_states=patch_states or None,
-            patch_parallel_ndev=patch_parallel_ndev, ep_axis=ep_axis, key=key)
-        if guidance != 1.0:
-            v_u, nsu, npsu, _ = dit_forward(
-                params, x, t, null, cfg, dcfg, states_u, step_idx=step_idx,
-                patch_states=patch_states_u or None,
-                patch_parallel_ndev=patch_parallel_ndev, ep_axis=ep_axis,
-                key=key)
-            v = v_u + guidance * (v_c - v_u)
-        else:
-            v, nsu, npsu = v_c, states_u, patch_states_u
-        return x + dt * v, ns, nsu, nps, npsu, aux
+    one_step = make_sample_step(params, cfg, dcfg, classes, dt=dt,
+                                guidance=guidance,
+                                patch_parallel_ndev=patch_parallel_ndev,
+                                ep_axis=ep_axis)
 
     for s in range(num_steps):
         key, k = jax.random.split(key)
+        t = jnp.full((B,), s * dt)
         x, states, states_u, patch_states, patch_states_u, aux = one_step(
-            x, states, states_u, patch_states, patch_states_u, k, step_idx=s)
+            x, states, states_u, patch_states, patch_states_u, t, k,
+            plan=splan.steps[s])
         if collect_stats:
             stats["dispatch_bytes"].append(float(aux["dispatch_bytes"]))
             stats["buffer_bytes"].append(float(aux["buffer_bytes"]))
+    stats["num_plan_variants"] = splan.num_variants
+    stats["jit_cache_size"] = int(one_step._cache_size())
     return x, stats

@@ -11,8 +11,8 @@ def test_ep_decode_batch_over_model():
         os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
         import jax, jax.numpy as jnp
         from repro.common.config import ModelConfig
+        from repro.common.compat import make_mesh
         from repro.models import dense
-        from repro.launch.mesh import _auto
 
         cfg = ModelConfig(name="t", family="moe", num_layers=2, d_model=64,
                           d_ff=64, vocab_size=256, num_heads=4, num_kv_heads=4,
@@ -25,7 +25,7 @@ def test_ep_decode_batch_over_model():
         logits_ref, _ = dense.forward(p, toks, cfg)
 
         # EP decode: mesh (2 data, 4 model); B=16 % 4 == 0 -> batch-over-model
-        mesh = jax.make_mesh((2, 4), ("data", "model"), axis_types=_auto(2))
+        mesh = make_mesh((2, 4), ("data", "model"))
         cache = dense.init_cache(cfg, 16, 8)
         outs = []
         for t in range(8):

@@ -7,6 +7,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
+
+pytest.importorskip("hypothesis")  # property tests need the dev extra
 from hypothesis import given, settings, strategies as st
 
 from repro.common.config import ModelConfig
@@ -128,15 +130,16 @@ def test_expert_parallel_matches_single_device():
         p = moe_init(jax.random.PRNGKey(0), cfg)
         x = jax.random.normal(jax.random.PRNGKey(1), (64, 64), jnp.float32)
         y_ref, _ = moe_forward(p, x, cfg, capacity=128)
-        mesh = jax.make_mesh((4,), ("model",),
-                             axis_types=(jax.sharding.AxisType.Auto,))
+        from repro.common.compat import make_mesh
+        mesh = make_mesh((4,), ("model",))
         ps = jax.tree.map(lambda a: P(), p)
         for n in ("experts_gate", "experts_up", "experts_down"):
             ps[n] = P("model")
         f = lambda pl_, xl: moe_forward(pl_, xl, cfg, capacity=32,
                                         ep_axis="model")[0]
-        y = jax.jit(jax.shard_map(f, mesh=mesh, in_specs=(ps, P("model")),
-                                  out_specs=P("model")))(p, x)
+        from repro.common.compat import shard_map
+        y = jax.jit(shard_map(f, mesh=mesh, in_specs=(ps, P("model")),
+                              out_specs=P("model")))(p, x)
         err = float(jnp.max(jnp.abs(y - y_ref)))
         assert err < 1e-3, err
         print("EP-OK", err)
