@@ -13,7 +13,8 @@ import sys
 import time
 
 TABLES = ["table1_quality", "table23_fewer_steps", "table4_ablation",
-          "table5_comm_fraction", "fig9_scaling", "fig10_tradeoff"]
+          "table5_comm_fraction", "fig9_scaling", "fig10_tradeoff",
+          "serve_throughput"]
 
 
 def main() -> None:
@@ -25,6 +26,7 @@ def main() -> None:
     if args.fast:
         os.environ.setdefault("BENCH_TRAIN_STEPS", "60")
         os.environ.setdefault("BENCH_SAMPLES", "32")
+        os.environ.setdefault("BENCH_SMOKE", "1")
     mods = args.only.split(",") if args.only else TABLES
     print("name,us_per_call,derived")
     for name in mods:

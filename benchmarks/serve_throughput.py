@@ -1,0 +1,167 @@
+"""Continuous-batching throughput vs the FIFO baseline (DESIGN.md Sec. 9).
+
+A Poisson request stream is drained twice through a ``max_batch``-slot
+server:
+
+  * **fifo** — :func:`repro.launch.serve.serve_queue` semantics: a batch
+    launches with whatever requests have arrived (padded with the null
+    class) and every slot is held for the full ``num_steps``;
+  * **continuous** — :func:`repro.launch.serve.serve_continuous`: slots
+    complete independently and freed slots are recycled at plan-variant-
+    aligned boundaries, with slot-level staleness-state resets.
+
+Reported per engine: padded-slot step-executions (the wasted null-class
+compute the paper's heavy-traffic scenario cares about), modeled slot
+occupancy, makespan in steps, and modeled requests/s on the paper's
+8-device hardware point.  The continuous engine must execute strictly
+fewer padded slots than FIFO and keep its jit cache at the plan-variant
+count (acceptance criteria, ISSUE 2).
+
+  PYTHONPATH=src python benchmarks/serve_throughput.py --smoke
+"""
+from __future__ import annotations
+
+import argparse
+import os
+from typing import List, Tuple
+
+import jax
+import numpy as np
+
+from benchmarks import common
+from repro.configs.dit_moe_xl import tiny
+from repro.core.schedules import DiceConfig
+from repro.launch.serve import (DiceServer, Request, SCHEDULES,
+                                modeled_step_latency, serve_continuous,
+                                serve_queue)
+
+
+def poisson_arrivals(n: int, rate_per_step: float, seed: int) -> List[float]:
+    """Arrival tick of each request: cumulative Exp(1/rate) inter-arrivals."""
+    rng = np.random.default_rng(seed)
+    gaps = rng.exponential(1.0 / max(rate_per_step, 1e-9), size=n)
+    return np.cumsum(gaps).tolist()
+
+
+def fifo_schedule(arrivals: List[float], *, max_batch: int,
+                  num_steps: int) -> Tuple[int, float, int]:
+    """Model of serve_queue under an arrival process: a batch launches as
+    soon as the server is free and at least one request has arrived,
+    taking min(queued, max_batch) and padding the rest.  Returns
+    (padded_slot_steps, makespan_steps, num_batches)."""
+    arrivals = sorted(arrivals)
+    t, i, padded, batches = 0.0, 0, 0, 0
+    n = len(arrivals)
+    while i < n:
+        if arrivals[i] > t:
+            t = arrivals[i]                 # idle until the next arrival
+        take = sum(1 for a in arrivals[i:i + max_batch] if a <= t)
+        i += take
+        padded += (max_batch - take) * num_steps
+        batches += 1
+        t += num_steps
+    return padded, t, batches
+
+
+def run(*, schedule: str = "dice", requests: int = 32, max_batch: int = 8,
+        num_steps: int = 8, rate: float = 0.5, seed: int = 0,
+        smoke: bool = False) -> dict:
+    if os.environ.get("BENCH_SMOKE") == "1" and not smoke:
+        # benchmarks.run --fast sets BENCH_SMOKE: shrink like the other tables
+        smoke = True
+        requests, num_steps, max_batch = (min(requests, 12),
+                                          min(num_steps, 4),
+                                          min(max_batch, 4))
+    cfg = tiny()
+    if smoke:
+        cfg = cfg.replace(name="dit-moe-serve-smoke", num_layers=4,
+                          d_model=48, d_ff=192, num_heads=4, num_kv_heads=4,
+                          head_dim=12, moe_d_ff=48, patch_tokens=16,
+                          capacity_factor=4.0)
+    dcfg = SCHEDULES[schedule]()
+    server = DiceServer(cfg, dcfg, seed=0)
+    reqs = [Request(class_id=i % cfg.num_classes, rid=i)
+            for i in range(requests)]
+    arrivals = poisson_arrivals(requests, rate, seed)
+
+    # ---- continuous engine (actually executed) ---------------------------
+    out, cstats = serve_continuous(server, reqs, max_batch=max_batch,
+                                   num_steps=num_steps,
+                                   arrival_steps=arrivals,
+                                   key=jax.random.PRNGKey(seed))
+    assert sorted(out) == [r.rid for r in reqs], "requests lost"
+    assert all(np.isfinite(v).all() for v in out.values())
+
+    # ---- FIFO baseline: arrival-aware occupancy model + an executed
+    # serve_queue pass for the aggregate byte/compile stats ----------------
+    fifo_padded, fifo_makespan, fifo_batches = fifo_schedule(
+        arrivals, max_batch=max_batch, num_steps=num_steps)
+    _, fstats = serve_queue(server, reqs, max_batch=max_batch,
+                            num_steps=num_steps,
+                            key=jax.random.PRNGKey(seed))
+
+    t_step = modeled_step_latency(cfg, dcfg, n_dev=server.n_dev,
+                                  local_batch=max(1, max_batch
+                                                  // server.n_dev))["t_step_s"]
+    fifo_slot_steps = fifo_batches * max_batch * num_steps
+    res = {
+        "schedule": schedule,
+        "requests": requests,
+        "fifo_padded_slot_steps": fifo_padded,
+        "cont_padded_slot_steps": cstats["padded_slot_steps"],
+        "fifo_occupancy": 1.0 - fifo_padded / max(1, fifo_slot_steps),
+        "cont_occupancy": cstats["slot_occupancy"],
+        "fifo_makespan_steps": fifo_makespan,
+        "cont_makespan_steps": cstats["makespan_steps"],
+        "fifo_req_per_s": requests / (fifo_makespan * t_step),
+        "cont_req_per_s": requests / (cstats["makespan_steps"] * t_step),
+        "cont_recycled_admissions": cstats["recycled_admissions"],
+        "num_plan_variants": cstats["num_plan_variants"],
+        "jit_cache_size": cstats["jit_cache_size"],
+        "fifo_dispatch_bytes_total": fstats["dispatch_bytes_total"],
+        "fifo_a2a_bytes_per_layer": fstats["a2a_bytes_per_layer"],
+        "fifo_buffer_bytes": fstats["buffer_bytes"],
+    }
+    common.csv_row(
+        f"serve_throughput/{schedule}/b{max_batch}",
+        res["cont_req_per_s"],
+        f"fifo_req_per_s={res['fifo_req_per_s']:.4g} "
+        f"cont_padded={res['cont_padded_slot_steps']} "
+        f"fifo_padded={res['fifo_padded_slot_steps']} "
+        f"occupancy={res['cont_occupancy']:.3f}")
+    return res
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--schedule", choices=list(SCHEDULES), default="dice")
+    ap.add_argument("--requests", type=int, default=32)
+    ap.add_argument("--max-batch", type=int, default=8)
+    ap.add_argument("--steps", type=int, default=8)
+    ap.add_argument("--rate", type=float, default=0.5,
+                    help="Poisson arrival rate, requests per diffusion step")
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI-sized model and workload")
+    args = ap.parse_args()
+    if args.smoke:
+        args.requests = min(args.requests, 12)
+        args.steps = min(args.steps, 4)
+        args.max_batch = min(args.max_batch, 4)
+
+    res = run(schedule=args.schedule, requests=args.requests,
+              max_batch=args.max_batch, num_steps=args.steps,
+              rate=args.rate, seed=args.seed, smoke=args.smoke)
+    for k, v in res.items():
+        print(f"  {k:28s} {v:.6g}" if isinstance(v, float)
+              else f"  {k:28s} {v}")
+    assert res["cont_padded_slot_steps"] < res["fifo_padded_slot_steps"], (
+        "continuous batching must strictly reduce padded-slot executions")
+    assert res["jit_cache_size"] == res["num_plan_variants"], (
+        "slot recycling must not grow the jit cache beyond the plan "
+        "variants")
+    print("OK: continuous < fifo padded-slot steps, jit cache == variants")
+
+
+if __name__ == "__main__":
+    main()

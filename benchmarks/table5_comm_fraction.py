@@ -25,7 +25,7 @@ class HwPoint:
     link_bw: float     # bytes/s effective per device
 
 
-from repro.launch.serve import PAPER_HW, TPU_HW
+from repro.launch.serve import PAPER_HW, TPU_HW, layer_compute_flops
 
 HWS = [
     HwPoint("rtx4090_pcie", PAPER_HW["flops"], PAPER_HW["link_bw"]),
@@ -36,10 +36,9 @@ HWS = [
 def comm_fraction(cfg, *, local_batch, n_dev, hw: HwPoint) -> float:
     tokens = local_batch * cfg.patch_tokens
     d = cfg.d_model
-    attn = 4 * tokens * d * d + 2 * tokens ** 2 * d
-    moe = 6 * tokens * d * cfg.expert_d_ff * (cfg.experts_per_token
-                                              + cfg.num_shared_experts)
-    t_comp = (attn + moe) / hw.flops
+    # per-layer compute from the serving latency model's single source of
+    # truth (QKV+O projections are 8*T*d^2 and QK^T+AV are 4*T^2*d)
+    t_comp = layer_compute_flops(cfg, tokens) / hw.flops
     cap = tokens * cfg.experts_per_token * cfg.capacity_factor
     a2a = 2 * cap * d * 2 * (n_dev - 1) / n_dev
     t_comm = a2a / hw.link_bw

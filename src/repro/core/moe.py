@@ -126,9 +126,13 @@ def combine(buf_out, plan: DispatchPlan, scores, T: int, *,
             fresh_mask: Optional[jnp.ndarray] = None):
     """Score-weighted un-permute.  buf_out: (E, C, d).
 
-    Returns (y, pair_vals) where pair_vals (T, K, d) are the per-pair expert
-    outputs actually used (fresh or cached) — the Conditional Communication
-    cache for the next step.
+    Returns (y, pair_vals, pair_keep) where pair_vals (T, K, d) are the
+    per-pair expert outputs actually used (fresh or cached) — the
+    Conditional Communication cache for the next step — and pair_keep
+    (T, K) marks the pairs that actually made it through dispatch
+    (unsorted order).  A pair that was transmitted fresh but overflowed
+    capacity gathers zeros; pair_keep lets callers avoid treating those
+    zeros as valid expert output (e.g. storing them into h_cache).
     """
     E, C, d = buf_out.shape
     flat = buf_out.reshape(E * C, d)
@@ -136,12 +140,13 @@ def combine(buf_out, plan: DispatchPlan, scores, T: int, *,
     gathered = gathered * plan.keep[:, None].astype(flat.dtype)
     K = scores.shape[-1]
     pair_vals = gathered[plan.inv_order].reshape(T, K, d)
+    pair_keep = plan.keep[plan.inv_order].reshape(T, K)
     if h_cache is not None and fresh_mask is not None:
         pair_vals = jnp.where(fresh_mask[..., None], pair_vals,
                               h_cache.astype(pair_vals.dtype))
     y = jnp.einsum("tk,tkd->td", scores.astype(jnp.float32),
                    pair_vals.astype(jnp.float32))
-    return y, pair_vals
+    return y, pair_vals, pair_keep
 
 
 # ---------------------------------------------------------------------------
@@ -180,10 +185,11 @@ def load_balance_loss(probs, idx, E: int):
 # ---------------------------------------------------------------------------
 class MoEAux(NamedTuple):
     lb_loss: jnp.ndarray
-    dropped_frac: jnp.ndarray
+    dropped_frac: jnp.ndarray      # capacity drops over DISPATCHED pairs only
     dispatch_bytes: jnp.ndarray    # per-device all-to-all payload (one way)
     pair_vals: Optional[jnp.ndarray]
     scores: Optional[jnp.ndarray]
+    pair_keep: Optional[jnp.ndarray] = None   # (T, K) survived dispatch
 
 
 def moe_forward(p, x, cfg: ModelConfig, *,
@@ -232,16 +238,24 @@ def moe_forward(p, x, cfg: ModelConfig, *,
                                concat_axis=0, tiled=True)
         buf_out = b.reshape(E, capacity, d)
 
-    y, pair_vals = combine(buf_out, plan, scores, T,
-                           h_cache=h_cache, fresh_mask=fresh_mask)
+    y, pair_vals, pair_keep = combine(buf_out, plan, scores, T,
+                                      h_cache=h_cache, fresh_mask=fresh_mask)
     if cfg.num_shared_experts:
         y = y + shared_expert(p, x, act=cfg.act).astype(y.dtype)
 
+    # capacity-drop rate over pairs that were actually dispatched: pairs a
+    # conditional-communication mask routed to the virtual expert E are not
+    # drops, they are deliberately-cached pairs (Sec. 4.3)
+    dispatched = plan.counts.sum().astype(jnp.float32)
+    kept = plan.keep.sum().astype(jnp.float32)
+    dropped_frac = jnp.where(dispatched > 0,
+                             1.0 - kept / jnp.maximum(dispatched, 1.0), 0.0)
     aux = MoEAux(
         lb_loss=load_balance_loss(probs, idx, E),
-        dropped_frac=1.0 - jnp.mean(plan.keep.astype(jnp.float32)),
+        dropped_frac=dropped_frac,
         dispatch_bytes=jnp.asarray(E * capacity * d * jnp.dtype(x.dtype).itemsize),
         pair_vals=pair_vals if (want_pair_vals or fresh_mask is not None) else None,
         scores=scores if (want_pair_vals or fresh_mask is not None) else None,
+        pair_keep=pair_keep if (want_pair_vals or fresh_mask is not None) else None,
     )
     return y.astype(x.dtype), aux

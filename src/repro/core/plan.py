@@ -340,3 +340,56 @@ def steady_state_plan_for(dcfg, num_moe_layers: int, *,
         step += 1
     return plan_for_step(dcfg, num_moe_layers, step,
                          experts_per_token=experts_per_token)
+
+
+# ---------------------------------------------------------------------------
+# continuous batching: per-slot warmup support (DESIGN.md Sec. 9)
+# ---------------------------------------------------------------------------
+def steady_period(dcfg, num_moe_layers: int, *, experts_per_token: int,
+                  max_period: int = 8) -> int:
+    """Period of the post-warmup plan sequence (1 for sync / displaced /
+    interweaved; ``cond_stride`` for DICE's refresh/light alternation).
+
+    The continuous-batching engine admits requests only at global ticks
+    ``g % steady_period == 0`` ("plan-variant-aligned step boundaries"), so
+    every established slot — whatever tick it was admitted at — is at the
+    same point of the steady-state plan cycle and the whole batch shares
+    one StepPlan per tick.
+    """
+    w = dcfg.warmup_steps
+    probe = [plan_for_step(dcfg, num_moe_layers, w + i,
+                           experts_per_token=experts_per_token)
+             for i in range(2 * max_period)]
+    for p in range(1, max_period + 1):
+        if all(probe[i] == probe[i + p] for i in range(len(probe) - p)):
+            return p
+    raise ValueError(
+        f"schedule {schedule_name(dcfg.schedule)!r} has no steady-state "
+        f"period <= {max_period}; continuous batching cannot align "
+        f"admissions")
+
+
+def slotted_merge_plan(dcfg, num_moe_layers: int, *,
+                       experts_per_token: int) -> StepPlan:
+    """The plan a mixed warmup/steady tick executes under per-slot select.
+
+    A recycled slot must replay the schedule's warmup prefix (sync-mode
+    steps with full dispatch) while established slots continue in steady
+    state.  Rather than compiling a new hybrid variant per mixture, the
+    engine runs the schedule's *steady-state full-dispatch plan* — the
+    refresh variant, which already exists in the SchedulePlan — and
+    resolves the per-slot difference with TRACED masks:
+
+      * ``slot_fresh`` (tokens,): warmup-slot tokens consume the freshly
+        combined output (sync semantics) instead of ``y_buf``;
+      * ``consume_mask`` (tokens, K): warmup-slot rows are all-fresh while
+        established rows follow their local step's conditional-
+        communication mask (all-fresh on refresh phase, policy mask on
+        light phase).
+
+    Because the masks are traced, every warmup mixture shares ONE compiled
+    entry keyed by (this plan, slotted=True) — the jit cache still holds
+    exactly ``SchedulePlan.num_variants`` entries.
+    """
+    return steady_state_plan_for(dcfg, num_moe_layers,
+                                 experts_per_token=experts_per_token)

@@ -12,7 +12,19 @@ import numpy as np
 
 def sync_layer_mask(policy: str, num_layers: int, *,
                     fraction: float = 0.5) -> np.ndarray:
-    """Boolean (num_layers,): True = run this MoE layer synchronously."""
+    """Boolean (num_layers,): True = run this MoE layer synchronously.
+
+    Every policy protects ``round(num_layers * fraction)`` layers:
+      none      — no layer
+      deep      — the deepest k layers
+      shallow   — the shallowest k layers
+      staggered — every-other layers (odd offsets 1, 3, 5, ...), taking the
+                  DEEPEST k of that alternating set (deeper layers are the
+                  staleness-vulnerable ones, Sec. 4.2); if the budget
+                  exceeds the alternating set, the deepest remaining
+                  even-offset layers fill the difference
+      all       — every layer (``fraction`` ignored)
+    """
     mask = np.zeros(num_layers, dtype=bool)
     k = int(round(num_layers * fraction))
     if policy == "none":
@@ -22,8 +34,13 @@ def sync_layer_mask(policy: str, num_layers: int, *,
     elif policy == "shallow":
         mask[:k] = True
     elif policy == "staggered":
-        mask[1::2] = True
-        mask[:] = mask if mask.sum() == k else mask  # staggered = every other
+        cand = list(range(1, num_layers, 2))
+        if k <= len(cand):
+            chosen = cand[len(cand) - k:]
+        else:
+            rest = [i for i in range(num_layers) if i not in cand]
+            chosen = cand + rest[len(rest) - (k - len(cand)):]
+        mask[chosen] = True
     elif policy == "all":
         mask[:] = True
     else:

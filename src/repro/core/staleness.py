@@ -86,17 +86,63 @@ def state_bytes(states: Dict[int, MoELayerState]) -> int:
     return sum(s.bytes() for s in states.values())
 
 
+def reset_slots(states: Dict[int, MoELayerState], slot_mask, *,
+                tokens_per_slot: int) -> Dict[int, MoELayerState]:
+    """Zero the staleness rows of recycled batch slots.
+
+    ``slot_mask`` is a (B,) bool array marking slots being handed to a new
+    request; each slot owns ``tokens_per_slot`` consecutive token rows of
+    every buffer.  Zeroing y_buf / x_prev / h_cache rows guarantees no
+    activation from a completed request leaks into its successor's sample
+    — a recycled slot starts from exactly the all-zeros planned-init state
+    a fresh batch would have (DESIGN.md Sec. 9).
+    """
+    tok = jnp.repeat(jnp.asarray(slot_mask, bool), tokens_per_slot)
+
+    def _zero(buf):
+        if buf is None:
+            return None
+        m = tok.reshape((-1,) + (1,) * (buf.ndim - 1))
+        return jnp.where(m, jnp.zeros_like(buf), buf)
+
+    return {i: MoELayerState(y_buf=_zero(s.y_buf), x_prev=_zero(s.x_prev),
+                             h_cache=_zero(s.h_cache))
+            for i, s in states.items()}
+
+
+def _cache_update_mask(mask, pair_keep):
+    """Pairs whose cache entry may take the freshly combined value: they
+    must have been transmitted fresh (mask) AND survived capacity (keep) —
+    a capacity-overflowed pair gathers zeros, and storing those would
+    poison h_cache for every later light step."""
+    if pair_keep is None:
+        return mask
+    if mask is None:
+        return pair_keep
+    return mask & pair_keep
+
+
 def apply_layer_action(p, x, cfg: ModelConfig, action: LayerAction,
                        state: MoELayerState, *,
                        key=None, ep_axis: Optional[str] = None,
-                       use_pallas: bool = False):
+                       use_pallas: bool = False,
+                       slot_fresh=None, consume_mask=None):
     """Execute one MoE layer under a planned :class:`LayerAction`.
 
     x: (T, d) flat tokens.  All schedule decisions (mode, mask, capacity,
     buffer writes) are already baked into ``action`` — this function is
     pure dataflow and traces identically for equal actions, which is what
     lets the sampler share one compiled executable per plan variant.
-    Returns (y, new_state, aux).
+
+    ``slot_fresh`` / ``consume_mask`` implement the continuous-batching
+    engine's per-slot warmup replay (DESIGN.md Sec. 9).  Both are TRACED:
+    ``slot_fresh`` (T,) marks tokens of slots replaying the warmup prefix
+    — their non-sync actions consume the freshly combined output (sync
+    semantics) instead of the staleness buffer — and ``consume_mask``
+    (T, K) carries the per-slot conditional-communication mask (all-fresh
+    rows for warmup slots, the local step's policy mask for established
+    slots).  ``None`` for both (the default) is the ordinary uniform-batch
+    path.  Returns (y, new_state, aux).
     """
     mask = None
     capacity = None
@@ -104,6 +150,11 @@ def apply_layer_action(p, x, cfg: ModelConfig, action: LayerAction,
         k = cfg.experts_per_token
         mask = conditional.policy_mask(action.mask_policy, x.shape[0], k,
                                        key=key)
+    if slot_fresh is not None and consume_mask is not None \
+            and action.want_cache and action.mode != "sync":
+        # slotted execution: the per-slot composed mask replaces the
+        # uniform policy mask (the merged plan dispatches at full capacity)
+        mask = consume_mask
     if action.effective_k is not None:
         capacity = default_capacity(x.shape[0], cfg, k=action.effective_k)
 
@@ -114,19 +165,30 @@ def apply_layer_action(p, x, cfg: ModelConfig, action: LayerAction,
                            h_cache=cache, ep_axis=ep_axis, key=key,
                            use_pallas=use_pallas, want_pair_vals=want_cache)
 
+    def select_out(y_new, y_buf):
+        """Consumed output: warmup-slot tokens take the fresh combine."""
+        if slot_fresh is None:
+            return y_buf
+        return jnp.where(slot_fresh[:, None], y_new, y_buf)
+
     if action.mode == "sync":
         y, aux = run(x)
         new = MoELayerState(
             y_buf=y if action.store_y else None,
             x_prev=x if action.store_x else None,
-            h_cache=aux.pair_vals if want_cache else None)
+            h_cache=conditional.update_cache(state.h_cache, aux.pair_vals,
+                                             _cache_update_mask(None, aux.pair_keep))
+            if want_cache else None)
         return y, new, aux
 
     if action.mode == "displaced":
         # experts process tokens dispatched at s-1; their combine lands at s+1,
         # so the output consumed *now* is the buffered result of x(s-2).
-        y_new, aux = run(state.x_prev)
-        out = state.y_buf
+        # Warmup slots run sync: their experts see x(s), and they consume it.
+        inp = state.x_prev if slot_fresh is None else \
+            jnp.where(slot_fresh[:, None], x, state.x_prev)
+        y_new, aux = run(inp)
+        out = select_out(y_new, state.y_buf)
         new = MoELayerState(y_buf=y_new, x_prev=x, h_cache=None)
         return out, new, aux
 
@@ -140,22 +202,23 @@ def apply_layer_action(p, x, cfg: ModelConfig, action: LayerAction,
         y0, aux0 = run(x[:half])
         y1, aux1 = run(x[half:])
         y_new = jnp.concatenate([y0, y1], axis=0)
-        out = state.y_buf
+        out = select_out(y_new, state.y_buf)
         new = MoELayerState(y_buf=y_new, x_prev=x, h_cache=None)
         aux = MoEAux(lb_loss=(aux0.lb_loss + aux1.lb_loss) / 2,
                      dropped_frac=(aux0.dropped_frac + aux1.dropped_frac) / 2,
                      dispatch_bytes=aux0.dispatch_bytes + aux1.dispatch_bytes,
-                     pair_vals=None, scores=None)
+                     pair_vals=None, scores=None, pair_keep=None)
         return out, new, aux
 
     # "interweaved": dispatch of x(s) completes within step s (overlapped
     # with the previous layer's expert compute); only the combine is deferred,
     # so the output consumed now is the buffered result of x(s-1).
     y_new, aux = run(x, mask, state.h_cache if want_cache else None)
-    out = state.y_buf
+    out = select_out(y_new, state.y_buf)
     new = MoELayerState(
         y_buf=y_new, x_prev=None,
-        h_cache=conditional.update_cache(state.h_cache, aux.pair_vals, mask)
+        h_cache=conditional.update_cache(state.h_cache, aux.pair_vals,
+                                         _cache_update_mask(mask, aux.pair_keep))
         if want_cache else None)
     return out, new, aux
 

@@ -1,11 +1,15 @@
 """DICE serving engine — the paper-kind end-to-end driver.
 
-Serves class-conditional DiT-MoE generation requests in batches under a
-selectable parallelism schedule (the paper's baselines and DICE itself).
-Besides the samples it reports the quantities behind the paper's claims:
-per-step all-to-all payload, persistent staleness-buffer bytes, and the
-modeled step latency on the target TPU mesh (computed from the roofline
-terms, since this container has no TPU).
+Serves class-conditional DiT-MoE generation requests under a selectable
+parallelism schedule (the paper's baselines and DICE itself), in two
+modes: rigid FIFO batches (:func:`serve_queue`) and continuous batching
+(:func:`serve_continuous`, DESIGN.md Sec. 9) where each batch slot steps
+and completes independently and freed slots are recycled mid-flight with
+slot-level staleness-state resets.  Besides the samples it reports the
+quantities behind the paper's claims: per-step all-to-all payload,
+persistent staleness-buffer bytes, and the modeled step latency on the
+target TPU mesh (computed from the roofline terms, since this container
+has no TPU).
 
   PYTHONPATH=src python -m repro.launch.serve --schedule dice \
       --requests 16 --steps 20
@@ -15,6 +19,7 @@ from __future__ import annotations
 import argparse
 import time
 from dataclasses import dataclass
+from functools import partial
 from typing import List, Optional
 
 import jax
@@ -24,11 +29,13 @@ import numpy as np
 from repro.checkpoint import load_checkpoint
 from repro.common.config import HW, ModelConfig
 from repro.configs.dit_moe_xl import config as xl_config, tiny
+from repro.core import conditional
 from repro.core import plan as plan_lib
+from repro.core import staleness as stale_lib
 from repro.core.schedules import DiceConfig
 from repro.core.conditional import comm_volume_fraction
 from repro.models.dit_moe import init_dit
-from repro.sampling.rectified_flow import rf_sample
+from repro.sampling.rectified_flow import make_rf_step, rf_sample
 
 
 @dataclass
@@ -61,6 +68,21 @@ PAPER_HW = {"flops": 37e12, "link_bw": 0.9e9}
 TPU_HW = {"flops": HW.peak_flops_bf16, "link_bw": HW.ici_bw * 4}
 
 
+def layer_compute_flops(cfg: ModelConfig, tokens: int) -> float:
+    """Per-MoE-layer forward flops (attention + routed + shared experts).
+
+    Attention: QKV + output projections are four d x d matmuls per token
+    (8*T*d^2 multiply-adds-counted-as-2), and the QK^T + AV score terms
+    are 4*T^2*d.  The routed/shared expert FFNs are three d x d_ff matmuls
+    per dispatched token (gated SwiGLU).
+    """
+    d = cfg.d_model
+    attn_flops = 8 * tokens * d * d + 4 * tokens ** 2 * d
+    moe_flops = 6 * tokens * d * cfg.expert_d_ff * (
+        cfg.experts_per_token + cfg.num_shared_experts)
+    return attn_flops + moe_flops
+
+
 def modeled_step_latency(cfg: ModelConfig, dcfg: DiceConfig, *,
                          local_batch: int, n_dev: int = 8,
                          hw: Optional[dict] = None) -> dict:
@@ -78,11 +100,7 @@ def modeled_step_latency(cfg: ModelConfig, dcfg: DiceConfig, *,
                                             experts_per_token=cfg.experts_per_token)
     tokens = local_batch * cfg.patch_tokens
     d = cfg.d_model
-    # per-layer compute (attention + routed experts + shared experts), bf16
-    attn_flops = 4 * tokens * d * d + 2 * tokens ** 2 * d
-    moe_flops = 6 * tokens * d * cfg.expert_d_ff * (
-        cfg.experts_per_token + cfg.num_shared_experts)
-    t_comp = (attn_flops + moe_flops) / hw["flops"]
+    t_comp = layer_compute_flops(cfg, tokens) / hw["flops"]
     # per-layer all-to-all: dispatch + combine of the capacity buffer
     cap_tokens = tokens * cfg.experts_per_token * cfg.capacity_factor
     a2a_full = 2 * cap_tokens * d * 2 * (n_dev - 1) / n_dev
@@ -175,7 +193,14 @@ def serve_queue(server: "DiceServer", requests: List[Request], *,
     key = key if key is not None else jax.random.PRNGKey(0)
     out: dict = {}
     stats_acc = {"batches": 0, "padded": 0, "modeled_step_s_tpu8": 0.0,
-                 "modeled_total_s_tpu8": 0.0}
+                 "modeled_total_s_tpu8": 0.0,
+                 # flows (dispatch bytes) sum across batches; sizes
+                 # (per-layer a2a payload, persistent buffer footprint) and
+                 # jit-cache stats take the max — every batch has the same
+                 # compiled shape, so max is the actual per-batch value
+                 "a2a_bytes_per_layer": 0.0, "buffer_bytes": 0,
+                 "dispatch_bytes_total": 0.0,
+                 "num_plan_variants": 0, "jit_cache_size": 0}
     queue = list(requests)
     while queue:
         batch, queue = queue[:max_batch], queue[max_batch:]
@@ -196,7 +221,221 @@ def serve_queue(server: "DiceServer", requests: List[Request], *,
         stats_acc["modeled_step_s_tpu8"] += (
             stats["modeled_step_s_tpu8"]
             - stats_acc["modeled_step_s_tpu8"]) / stats_acc["batches"]
+        stats_acc["a2a_bytes_per_layer"] = max(
+            stats_acc["a2a_bytes_per_layer"],
+            float(stats["a2a_bytes_per_layer"]))
+        stats_acc["buffer_bytes"] = max(stats_acc["buffer_bytes"],
+                                        int(stats["buffer_bytes"]))
+        stats_acc["dispatch_bytes_total"] += float(
+            sum(stats["dispatch_bytes_per_step"]))
+        stats_acc["num_plan_variants"] = max(stats_acc["num_plan_variants"],
+                                             stats["num_plan_variants"])
+        stats_acc["jit_cache_size"] = max(stats_acc["jit_cache_size"],
+                                          stats["jit_cache_size"])
     return out, stats_acc
+
+
+# ---------------------------------------------------------------------------
+# continuous batching (slot-level staleness-state recycling, DESIGN.md Sec. 9)
+# ---------------------------------------------------------------------------
+@dataclass
+class _Slot:
+    """One batch lane of the continuous engine."""
+    rid: int = -1
+    class_id: int = 0
+    local_step: int = 0
+    active: bool = False
+
+
+def request_noise(key, rid: int, cfg: ModelConfig) -> jnp.ndarray:
+    """Per-request initial latent noise: (patch_tokens, in_channels).
+
+    Keyed by ``fold_in(key, rid)`` so a request's noise — and therefore its
+    sample — is independent of which slot or batch it lands in.  The
+    slot-recycling equivalence guarantee (a recycled-slot sample is
+    bit-identical to the same request in a fresh batch) is defined w.r.t.
+    this derivation, and holds for configurations whose per-step sampling
+    path consumes no randomness — ``router_jitter == 0`` and
+    ``cond_policy != "random"``, i.e. the paper's serving defaults.  A
+    ``random`` conditional-communication mask is drawn over the whole
+    (batch*tokens, K) shape, so its per-slot rows depend on batch
+    composition under ANY batching scheme and no bit-level equivalence
+    across batch placements exists to preserve.
+    """
+    return jax.random.normal(jax.random.fold_in(key, rid),
+                             (cfg.patch_tokens, cfg.in_channels))
+
+
+def serve_continuous(server: "DiceServer", requests: List[Request], *,
+                     max_batch: int = 8, num_steps: int = 10,
+                     guidance: float = 1.5, key=None,
+                     arrival_steps: Optional[List[float]] = None):
+    """Continuous-batching serving loop: slot-level admission + recycling.
+
+    Unlike :func:`serve_queue` (rigid FIFO batches: a finished request
+    holds its slot until every peer finishes), each of the ``max_batch``
+    slots carries its own step counter and completes independently; queued
+    requests are admitted into freed slots at plan-variant-aligned step
+    boundaries (``tick % steady_period == 0``) so every established slot
+    shares the tick's StepPlan.  A recycled slot replays the schedule's
+    warmup prefix via the traced per-slot selectors of
+    :func:`repro.sampling.rectified_flow.make_rf_step`, its staleness rows
+    zeroed by :func:`repro.core.staleness.reset_slots` — so no activation
+    of the previous occupant leaks into the successor, and the jit cache
+    still holds exactly one entry per plan variant.
+
+    Bit-identity of recycled-slot samples to fresh-batch samples holds
+    for key-free sampling configurations (``router_jitter == 0`` and
+    ``cond_policy != "random"`` — the serving defaults); see
+    :func:`request_noise`.
+
+    ``arrival_steps[i]`` is the tick at which ``requests[i]`` becomes
+    available (default: all at tick 0).  Returns ({rid: sample}, stats)
+    where stats reports the occupancy quantities behind the throughput
+    benchmark: executed ticks, padded-slot step-executions, mean slot
+    occupancy, and the aggregate byte/compile stats.
+    """
+    cfg, dcfg = server.cfg, server.dcfg
+    key = key if key is not None else jax.random.PRNGKey(0)
+    noise_key, step_key = jax.random.split(key)
+    B, Tp = max_batch, cfg.patch_tokens
+    dt = 1.0 / num_steps
+    k_exp = cfg.experts_per_token
+
+    splan = plan_lib.compile_step_plans(dcfg, cfg.num_layers, num_steps,
+                                        experts_per_token=k_exp)
+    period = plan_lib.steady_period(dcfg, cfg.num_layers,
+                                    experts_per_token=k_exp)
+    merge_plan = plan_lib.slotted_merge_plan(dcfg, cfg.num_layers,
+                                             experts_per_token=k_exp)
+    merge_wants_cache = any(a.want_cache for a in merge_plan.actions)
+    rf_step = make_rf_step(server.params, cfg, dcfg, dt=dt,
+                           guidance=guidance)
+    planned_init = partial(stale_lib.init_planned_states, splan,
+                           num_tokens=B * Tp, d_model=cfg.d_model,
+                           k=k_exp, dtype=jnp.float32)
+    states, states_u = planned_init(), planned_init()
+    x = jnp.zeros((B, Tp, cfg.in_channels), jnp.float32)
+    classes = np.full((B,), cfg.num_classes, np.int32)   # null = free slot
+    slots = [_Slot() for _ in range(B)]
+    ever_used = [False] * B
+
+    pending = sorted(
+        ((0.0 if arrival_steps is None else float(arrival_steps[i]), i, r)
+         for i, r in enumerate(requests)), key=lambda a: (a[0], a[1]))
+    out: dict = {}
+    tick = 0
+    executed_ticks = 0
+    padded_slot_steps = 0
+    slotted_ticks = 0
+    admissions = 0
+    recycled_admissions = 0
+    dispatch_bytes_total = 0.0
+    buffer_bytes = 0
+    t0 = time.time()
+
+    def _next_aligned(g: float) -> int:
+        g = int(np.ceil(g))
+        return g + (-g) % period
+
+    while pending or any(s.active for s in slots):
+        # ---- admission at plan-variant-aligned boundaries ----------------
+        if tick % period == 0:
+            recycle = np.zeros(B, bool)
+            for i, slot in enumerate(slots):
+                if slot.active or not pending or pending[0][0] > tick:
+                    continue
+                _, _, req = pending.pop(0)
+                slots[i] = _Slot(rid=req.rid, class_id=req.class_id,
+                                 local_step=0, active=True)
+                recycle[i] = True
+                classes[i] = req.class_id
+                x = x.at[i].set(request_noise(noise_key, req.rid, cfg))
+                admissions += 1
+                if ever_used[i]:
+                    recycled_admissions += 1
+                ever_used[i] = True
+            if recycle.any():
+                m = jnp.asarray(recycle)
+                states = stale_lib.reset_slots(states, m, tokens_per_slot=Tp)
+                states_u = stale_lib.reset_slots(states_u, m,
+                                                 tokens_per_slot=Tp)
+        if not any(s.active for s in slots):
+            # fully idle: jump to the next aligned tick with an arrival
+            tick = _next_aligned(max(pending[0][0], tick + 1))
+            continue
+
+        # ---- one engine tick --------------------------------------------
+        warming = [s.active and s.local_step < dcfg.warmup_steps
+                   for s in slots]
+        slotted = any(warming)
+        if slotted:
+            plan = merge_plan
+            # free slots replay warmup too: their (discarded) lanes then
+            # consume only fresh values, never the zeroed buffers
+            fresh_b = np.array([w or not s.active
+                                for w, s in zip(warming, slots)])
+            slot_fresh = jnp.repeat(jnp.asarray(fresh_b), Tp)
+            consume = None
+            if merge_wants_cache:
+                light = dcfg.cond_comm and not conditional.is_refresh_step(
+                    tick, dcfg.cond_stride)
+                if light:
+                    steady_mask = conditional.policy_mask(
+                        dcfg.cond_policy, B * Tp, k_exp,
+                        key=jax.random.fold_in(step_key, tick))
+                else:
+                    steady_mask = jnp.ones((B * Tp, k_exp), bool)
+                consume = jnp.where(slot_fresh[:, None], True, steady_mask)
+        else:
+            ref = min(s.local_step for s in slots if s.active)
+            plan = splan.steps[min(ref, num_steps - 1)]
+            slot_fresh = consume = None
+
+        t = jnp.asarray([s.local_step * dt if s.active else 0.0
+                         for s in slots], jnp.float32)
+        x, states, states_u, _, _, aux = rf_step(
+            x, jnp.asarray(classes), states, states_u, {}, {}, t,
+            jax.random.fold_in(step_key, tick), plan=plan, slotted=slotted,
+            slot_fresh=slot_fresh, consume_mask=consume)
+
+        executed_ticks += 1
+        slotted_ticks += int(slotted)
+        padded_slot_steps += sum(not s.active for s in slots)
+        dispatch_bytes_total += float(aux["dispatch_bytes"])
+        buffer_bytes = int(aux["buffer_bytes"])
+
+        for i, slot in enumerate(slots):
+            if not slot.active:
+                continue
+            slot.local_step += 1
+            if slot.local_step >= num_steps:
+                out[slot.rid] = np.asarray(x[i])
+                slots[i] = _Slot()
+                classes[i] = cfg.num_classes
+        tick += 1
+
+    lat = modeled_step_latency(cfg, dcfg, n_dev=server.n_dev,
+                               local_batch=max(1, B // server.n_dev))
+    stats = {
+        "ticks": executed_ticks,
+        "makespan_steps": tick,
+        "padded_slot_steps": padded_slot_steps,
+        "slot_occupancy": 1.0 - padded_slot_steps / max(1, executed_ticks * B),
+        "slotted_ticks": slotted_ticks,
+        "admissions": admissions,
+        "recycled_admissions": recycled_admissions,
+        "steady_period": period,
+        "wall_s_cpu": time.time() - t0,
+        "modeled_step_s_tpu8": lat["t_step_s"],
+        "modeled_total_s_tpu8": lat["t_step_s"] * executed_ticks,
+        "a2a_bytes_per_layer": lat["a2a_bytes_layer"],
+        "buffer_bytes": buffer_bytes,
+        "dispatch_bytes_total": dispatch_bytes_total,
+        "num_plan_variants": splan.num_variants,
+        "jit_cache_size": int(rf_step._cache_size()),
+    }
+    return out, stats
 
 
 def main():
@@ -211,6 +450,11 @@ def main():
     ap.add_argument("--guidance", type=float, default=1.5)
     ap.add_argument("--n-dev", type=int, default=8,
                     help="serving mesh size for the latency model")
+    ap.add_argument("--continuous", action="store_true",
+                    help="drain the requests through the continuous-"
+                         "batching engine (--max-batch slots) instead of "
+                         "one fixed batch")
+    ap.add_argument("--max-batch", type=int, default=8)
     args = ap.parse_args()
 
     cfg = tiny() if args.tiny else xl_config()
@@ -229,6 +473,17 @@ def main():
           f"{splan.num_steps} steps "
           f"({[len(splan.steps_of_variant(v)) for v in range(splan.num_variants)]} "
           f"steps each)")
+    if args.continuous:
+        out, stats = serve_continuous(server, reqs,
+                                      max_batch=args.max_batch,
+                                      num_steps=args.steps,
+                                      guidance=args.guidance)
+        finite = all(bool(np.isfinite(s).all()) for s in out.values())
+        print(f"served {len(out)} requests continuously, finite={finite}")
+        for k, v in stats.items():
+            print(f"  {k:26s} {v:.6g}" if isinstance(v, float)
+                  else f"  {k:26s} {v}")
+        return
     samples, stats = server.generate(reqs, num_steps=args.steps,
                                      guidance=args.guidance)
     print(f"samples: {samples.shape}, "

@@ -88,7 +88,9 @@ def dit_forward(params, x, t, y, cfg: ModelConfig, dcfg: DiceConfig,
                 patch_parallel_ndev: int = 0,
                 ep_axis: Optional[str] = None,
                 key=None,
-                use_pallas: bool = False):
+                use_pallas: bool = False,
+                slot_fresh=None,
+                consume_mask=None):
     """Velocity prediction.
 
     x: (B, T, C_in) latents; t: (B,) times; y: (B,) class ids
@@ -96,6 +98,9 @@ def dit_forward(params, x, t, y, cfg: ModelConfig, dcfg: DiceConfig,
     precompiled :class:`repro.core.plan.StepPlan`, hashable, jit-static);
     callers that still think in step indices may pass ``step_idx`` instead
     and the plan is derived on the fly through the schedule registry.
+    ``slot_fresh`` (B*T,) / ``consume_mask`` (B*T, K) are the continuous-
+    batching engine's traced per-slot warmup-replay selectors (DESIGN.md
+    Sec. 9), forwarded to every MoE layer.
     Returns (v, new_states, new_patch_states, aux dict).
     """
     if plan is None:
@@ -148,7 +153,8 @@ def dit_forward(params, x, t, y, cfg: ModelConfig, dcfg: DiceConfig,
             flat = hn.reshape(B * T, d)
             moe_out, new_st, aux = stale_lib.apply_layer_action(
                 blk["moe"], flat, cfg, plan.actions[i], states[i],
-                key=key, ep_axis=ep_axis, use_pallas=use_pallas)
+                key=key, ep_axis=ep_axis, use_pallas=use_pallas,
+                slot_fresh=slot_fresh, consume_mask=consume_mask)
         new_states[i] = new_st
         total_lb += aux.lb_loss
         total_dispatch_bytes += aux.dispatch_bytes

@@ -60,38 +60,79 @@ def rf_train_step(params, opt_state, batch, key, cfg: ModelConfig):
 # ---------------------------------------------------------------------------
 # sampling under a parallelism schedule
 # ---------------------------------------------------------------------------
-def make_sample_step(params, cfg: ModelConfig, dcfg: DiceConfig, classes, *,
-                     dt: float, guidance: float = 1.5,
-                     patch_parallel_ndev: int = 0,
-                     ep_axis: Optional[str] = None):
-    """One jitted Euler step, parameterised by a static StepPlan.
+def make_rf_step(params, cfg: ModelConfig, dcfg: DiceConfig, *,
+                 dt: float, guidance: float = 1.5,
+                 patch_parallel_ndev: int = 0,
+                 ep_axis: Optional[str] = None):
+    """The reusable single-Euler-step callable behind both :func:`rf_sample`
+    and the continuous-batching serving engine (DESIGN.md Sec. 9).
 
-    The returned function's jit cache is keyed by the (hashable) plan:
-    equal plans — however many step indices map to them — share a single
-    compiled executable.  ``t`` is a traced argument, so the step index
-    never enters the trace.
+    The returned jitted function's cache is keyed by the (hashable) static
+    ``plan`` plus the static ``slotted`` flag; ``t`` and ``classes`` are
+    traced, so neither the step index nor the admitted request mix enters
+    the trace.  Signature::
+
+        rf_step(x, classes, states, states_u, patch_states, patch_states_u,
+                t, key, *, plan, slotted=False,
+                slot_fresh=None, consume_mask=None)
+
+    ``slotted=True`` is the continuous-batching mixed tick: ``slot_fresh``
+    (B*T tokens,) marks warmup-replaying slots (their layers consume the
+    fresh combine — sync semantics) and ``consume_mask`` (B*T, K) carries
+    each slot's conditional-communication mask.  Both are traced arrays,
+    so every warmup/steady mixture shares one compiled entry per
+    (plan, slotted) pair.
     """
-    B = classes.shape[0]
-    null = jnp.full((B,), cfg.num_classes, jnp.int32)
 
-    @partial(jax.jit, static_argnames=("plan",))
-    def one_step(x, states, states_u, patch_states, patch_states_u, t, key,
-                 *, plan):
+    @partial(jax.jit, static_argnames=("plan", "slotted"))
+    def rf_step(x, classes, states, states_u, patch_states, patch_states_u,
+                t, key, *, plan, slotted=False,
+                slot_fresh=None, consume_mask=None):
+        null = jnp.full_like(classes, cfg.num_classes)
+        sf = slot_fresh if slotted else None
+        cm = consume_mask if slotted else None
         v_c, ns, nps, aux = dit_forward(
             params, x, t, classes, cfg, dcfg, states, plan=plan,
             patch_states=patch_states or None,
-            patch_parallel_ndev=patch_parallel_ndev, ep_axis=ep_axis, key=key)
+            patch_parallel_ndev=patch_parallel_ndev, ep_axis=ep_axis, key=key,
+            slot_fresh=sf, consume_mask=cm)
         if guidance != 1.0:
             v_u, nsu, npsu, _ = dit_forward(
                 params, x, t, null, cfg, dcfg, states_u, plan=plan,
                 patch_states=patch_states_u or None,
                 patch_parallel_ndev=patch_parallel_ndev, ep_axis=ep_axis,
-                key=key)
+                key=key, slot_fresh=sf, consume_mask=cm)
             v = v_u + guidance * (v_c - v_u)
         else:
             v, nsu, npsu = v_c, states_u, patch_states_u
         return x + dt * v, ns, nsu, nps, npsu, aux
 
+    return rf_step
+
+
+def make_sample_step(params, cfg: ModelConfig, dcfg: DiceConfig, classes, *,
+                     dt: float, guidance: float = 1.5,
+                     patch_parallel_ndev: int = 0,
+                     ep_axis: Optional[str] = None):
+    """One jitted Euler step with ``classes`` bound — the whole-loop
+    sampler's view of :func:`make_rf_step`.
+
+    The underlying jit cache is keyed by the (hashable) plan: equal plans —
+    however many step indices map to them — share a single compiled
+    executable.  ``t`` is a traced argument, so the step index never
+    enters the trace.
+    """
+    classes = jnp.asarray(classes, jnp.int32)
+    rf_step = make_rf_step(params, cfg, dcfg, dt=dt, guidance=guidance,
+                           patch_parallel_ndev=patch_parallel_ndev,
+                           ep_axis=ep_axis)
+
+    def one_step(x, states, states_u, patch_states, patch_states_u, t, key,
+                 *, plan):
+        return rf_step(x, classes, states, states_u, patch_states,
+                       patch_states_u, t, key, plan=plan)
+
+    one_step._cache_size = rf_step._cache_size
     return one_step
 
 

@@ -33,7 +33,8 @@ def test_dispatch_combine_roundtrip_identity():
     _, scores, idx = route(p, x, cfg)
     plan = make_plan(idx, cfg.num_experts, 64)
     buf = dispatch(x, plan, cfg.num_experts, 64)
-    _, pair_vals = combine(buf, plan, jnp.ones_like(scores), 32)
+    _, pair_vals, pair_keep = combine(buf, plan, jnp.ones_like(scores), 32)
+    assert bool(pair_keep.all())                          # ample capacity
     np.testing.assert_allclose(np.asarray(pair_vals),
                                np.asarray(x)[:, None, :].repeat(2, 1),
                                rtol=1e-6)
@@ -108,9 +109,11 @@ def test_fresh_mask_reduces_dispatch():
     # cached values substitute for stale pairs
     cache = jnp.full((32, 2, 64), 7.0)
     buf = dispatch(x, plan, cfg.num_experts, 64)
-    y, pair_vals = combine(buf, plan, scores, 32, h_cache=cache,
-                           fresh_mask=mask)
+    y, pair_vals, pair_keep = combine(buf, plan, scores, 32, h_cache=cache,
+                                      fresh_mask=mask)
     np.testing.assert_allclose(np.asarray(pair_vals[:, 1]), 7.0)
+    # masked-out pairs never entered dispatch, so they are not "kept"
+    assert not bool(pair_keep[:, 1].any()) and bool(pair_keep[:, 0].all())
 
 
 def test_expert_parallel_matches_single_device():

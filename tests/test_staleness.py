@@ -139,3 +139,100 @@ def test_dice_light_steps_shrink_dispatch(setup):
 def test_staleness_enum_values():
     assert Schedule.SYNC.step_staleness == 0
     assert Schedule.DICE.step_staleness == 1
+
+
+# ---------------------------------------------------------------------------
+# conditional-communication cache vs capacity overflow (h_cache poisoning)
+# ---------------------------------------------------------------------------
+def _overflow_setup():
+    """A config whose tiny capacity forces dispatch drops."""
+    cfg = CFG.replace(capacity_factor=0.1)     # floor-rounds to capacity 8
+    p = moe_init(jax.random.PRNGKey(0), cfg)
+    x = jax.random.normal(jax.random.PRNGKey(2), (64, 32), jnp.float32)
+    return cfg, p, x
+
+
+def test_dropped_pairs_do_not_poison_cache_interweaved():
+    """A capacity-overflowed pair gathers zeros; the cache must RETAIN its
+    previous value for that pair instead of storing the zeros."""
+    from repro.core.plan import LayerAction
+    from repro.core.staleness import apply_layer_action
+    cfg, p, x = _overflow_setup()
+    action = LayerAction(mode="interweaved", want_cache=True)
+    state = MoELayerState(y_buf=jnp.zeros((64, 32)),
+                          h_cache=jnp.full((64, 2, 32), 7.0))
+    _, new, aux = apply_layer_action(p, x, cfg, action, state)
+    keep = np.asarray(aux.pair_keep)
+    assert not keep.all(), "capacity must actually overflow in this test"
+    dropped = np.asarray(new.h_cache)[~keep]
+    np.testing.assert_array_equal(dropped, 7.0)
+    kept_vals = np.asarray(new.h_cache)[keep]
+    np.testing.assert_array_equal(kept_vals, np.asarray(aux.pair_vals)[keep])
+
+
+def test_dropped_pairs_do_not_poison_cache_sync():
+    """Same guarantee on synchronized (warmup / selective-sync) steps."""
+    from repro.core.plan import LayerAction
+    from repro.core.staleness import apply_layer_action
+    cfg, p, x = _overflow_setup()
+    action = LayerAction(mode="sync", store_y=True, want_cache=True)
+    state = MoELayerState(h_cache=jnp.full((64, 2, 32), 7.0))
+    _, new, aux = apply_layer_action(p, x, cfg, action, state)
+    keep = np.asarray(aux.pair_keep)
+    assert not keep.all()
+    np.testing.assert_array_equal(np.asarray(new.h_cache)[~keep], 7.0)
+
+
+# ---------------------------------------------------------------------------
+# dropped_frac counts capacity drops, not conditional-communication masking
+# ---------------------------------------------------------------------------
+def test_dropped_frac_ignores_masked_pairs():
+    """A light step that masks everything but top-1, with ample capacity,
+    is NOT dropping anything — the masked pairs are deliberately cached."""
+    p = moe_init(jax.random.PRNGKey(0), CFG)
+    x = jax.random.normal(jax.random.PRNGKey(3), (16, 32), jnp.float32)
+    mask = conditional.policy_mask("low", 16, CFG.experts_per_token)
+    cache = jnp.zeros((16, CFG.experts_per_token, 32))
+    _, aux = moe_forward(p, x, CFG, capacity=64, fresh_mask=mask,
+                         h_cache=cache)
+    assert float(aux.dropped_frac) == 0.0
+
+
+def test_dropped_frac_still_reports_real_drops():
+    cfg, p, x = _overflow_setup()
+    _, aux = moe_forward(p, x, cfg)
+    assert float(aux.dropped_frac) > 0.0
+
+
+# ---------------------------------------------------------------------------
+# selective sync: every policy honours `fraction`
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("policy", ["none", "deep", "shallow", "staggered"])
+@pytest.mark.parametrize("fraction", [0.0, 0.25, 0.5, 0.75, 1.0])
+@pytest.mark.parametrize("L", [4, 7, 8])
+def test_sync_layer_mask_budgets(policy, fraction, L):
+    from repro.core.selective import sync_layer_mask
+    mask = sync_layer_mask(policy, L, fraction=fraction)
+    k = int(round(L * fraction))
+    if policy == "none":
+        assert mask.sum() == 0
+    else:
+        assert mask.sum() == k, (policy, fraction, L, mask)
+    if policy == "deep" and k:
+        assert mask[L - k:].all()
+    if policy == "shallow" and k:
+        assert mask[:k].all()
+    if policy == "staggered":
+        # within the alternating budget the synced layers are every-other
+        cand = list(range(1, L, 2))
+        if k <= len(cand):
+            chosen = np.flatnonzero(mask)
+            assert all(int(c) in cand for c in chosen)
+            assert (np.diff(chosen) >= 2).all() if len(chosen) > 1 else True
+
+
+def test_sync_layer_mask_all_and_unknown():
+    from repro.core.selective import sync_layer_mask
+    assert sync_layer_mask("all", 6).sum() == 6
+    with pytest.raises(ValueError):
+        sync_layer_mask("bogus", 6)
