@@ -65,7 +65,7 @@ def fifo_schedule(arrivals: List[float], *, max_batch: int,
 
 def run(*, schedule: str = "dice", requests: int = 32, max_batch: int = 8,
         num_steps: int = 8, rate: float = 0.5, seed: int = 0,
-        smoke: bool = False) -> dict:
+        smoke: bool = False, ep: int = 0) -> dict:
     if os.environ.get("BENCH_SMOKE") == "1" and not smoke:
         # benchmarks.run --fast sets BENCH_SMOKE: shrink like the other tables
         smoke = True
@@ -78,8 +78,16 @@ def run(*, schedule: str = "dice", requests: int = 32, max_batch: int = 8,
                           d_model=48, d_ff=192, num_heads=4, num_kv_heads=4,
                           head_dim=12, moe_d_ff=48, patch_tokens=16,
                           capacity_factor=4.0)
+    mesh = None
+    if ep:
+        # mesh-native continuous engine (DESIGN.md §10): slots shard over
+        # the ep axis, so the slot count must divide it
+        from repro.launch.mesh import make_ep_mesh
+        mesh = make_ep_mesh(ep)
+        max_batch = max(max_batch, ep)
+        max_batch -= max_batch % ep
     dcfg = SCHEDULES[schedule]()
-    server = DiceServer(cfg, dcfg, seed=0)
+    server = DiceServer(cfg, dcfg, seed=0, mesh=mesh)
     reqs = [Request(class_id=i % cfg.num_classes, rid=i)
             for i in range(requests)]
     arrivals = poisson_arrivals(requests, rate, seed)
@@ -143,6 +151,10 @@ def main():
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--smoke", action="store_true",
                     help="CI-sized model and workload")
+    ap.add_argument("--ep", type=int, default=0,
+                    help="run mesh-native over an N-way 'ep' axis (needs N "
+                         "devices, e.g. XLA_FLAGS="
+                         "--xla_force_host_platform_device_count=N)")
     args = ap.parse_args()
     if args.smoke:
         args.requests = min(args.requests, 12)
@@ -151,7 +163,7 @@ def main():
 
     res = run(schedule=args.schedule, requests=args.requests,
               max_batch=args.max_batch, num_steps=args.steps,
-              rate=args.rate, seed=args.seed, smoke=args.smoke)
+              rate=args.rate, seed=args.seed, smoke=args.smoke, ep=args.ep)
     for k, v in res.items():
         print(f"  {k:28s} {v:.6g}" if isinstance(v, float)
               else f"  {k:28s} {v}")

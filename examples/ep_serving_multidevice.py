@@ -1,10 +1,15 @@
-"""True expert-parallel DICE serving across 8 devices.
+"""True expert-parallel DICE serving across 8 devices — mesh-native.
 
-Runs the paper's workload end-to-end DISTRIBUTED: the DiT-MoE experts are
-sharded across an 8-way "ep" mesh axis, requests are batch-split, and each
-diffusion step executes the real dispatch/combine all-to-alls inside
-shard_map — under the synchronous, interweaved, and DICE schedules.
-Verifies that distributed sampling matches the single-device reference.
+Runs the paper's workload end-to-end DISTRIBUTED through the core stack
+(DESIGN.md §10): ``rf_sample(mesh=...)`` lowers every StepPlan variant to
+one shard_map-ped step function, with the DiT-MoE experts sharded across
+an 8-way "ep" mesh axis (``common.sharding.ep_param_specs``), requests
+batch-split, staleness state sharded over the same axis, and the real
+dispatch/combine all-to-alls executing in every MoE layer — under the
+synchronous, interweaved, selective and FULL DICE schedules (conditional
+communication included: light steps put a genuinely smaller per-device
+buffer on the wire).  Verifies that distributed sampling matches the
+single-device reference.
 
 Run:  PYTHONPATH=src python examples/ep_serving_multidevice.py
 (uses 8 XLA host devices; set before importing jax)
@@ -12,76 +17,22 @@ Run:  PYTHONPATH=src python examples/ep_serving_multidevice.py
 import os
 os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=8")
 
-from functools import partial
-
 import jax
 import jax.numpy as jnp
-from jax.sharding import PartitionSpec as P
 
-from repro.common import compat
-from repro.common.config import ModelConfig
 from repro.configs.dit_moe_xl import tiny
-from repro.core.schedules import DiceConfig
-from repro.core import staleness as stale_lib
+from repro.core.schedules import DiceConfig, Schedule
+from repro.launch.mesh import make_ep_mesh
 from repro.metrics.fid_proxy import mse_vs_reference
-from repro.models.dit_moe import dit_forward, init_dit
+from repro.models.dit_moe import init_dit
+from repro.sampling.rectified_flow import rf_sample
 
 EP = 8
 
 
-def param_specs(params):
-    """Experts shard over 'ep'; everything else replicated."""
-    def spec_for(path, leaf):
-        names = [str(getattr(k, "key", getattr(k, "idx", ""))) for k in path]
-        if any(n.startswith("experts_") for n in names):
-            return P("ep")
-        return P()
-    flat, treedef = jax.tree_util.tree_flatten_with_path(params)
-    return jax.tree_util.tree_unflatten(
-        treedef, [spec_for(p, l) for p, l in flat])
-
-
-def sample_ep(params, cfg, dcfg, mesh, *, num_steps, classes, key):
-    B = classes.shape[0]
-    x = jax.random.normal(key, (B, cfg.patch_tokens, cfg.in_channels))
-    states = stale_lib.init_layer_states(cfg.num_layers)
-    dt = 1.0 / num_steps
-    pspecs = param_specs(params)
-
-    def step(p_l, x_l, cls_l, st_l, *, step_idx, ep_axis="ep"):
-        t = jnp.full((x_l.shape[0],), step_idx * dt)
-        v, ns, _, _ = dit_forward(p_l, x_l, t, cls_l, cfg, dcfg, st_l,
-                                  step_idx=step_idx, ep_axis=ep_axis)
-        return x_l + dt * v, ns
-
-    def local(a):
-        return jax.ShapeDtypeStruct((a.shape[0] // EP,) + a.shape[1:],
-                                    a.dtype)
-
-    for s in range(num_steps):
-        state_spec = jax.tree.map(lambda _: P("ep"), states)
-        # state structure changes after warmup (buffers fill in): derive the
-        # OUTPUT pytree structure from an abstract local evaluation
-        params_loc = jax.tree.map(
-            lambda a, sp: jax.ShapeDtypeStruct(
-                (a.shape[0] // EP,) + a.shape[1:] if sp == P("ep")
-                else a.shape, a.dtype), params, param_specs(params))
-        out_shape = jax.eval_shape(
-            partial(step, step_idx=s, ep_axis=None), params_loc, local(x),
-            local(classes), jax.tree.map(local, states))
-        out_spec = jax.tree.map(lambda _: P("ep"), out_shape)
-
-        x, states = jax.jit(compat.shard_map(
-            partial(step, step_idx=s), mesh=mesh,
-            in_specs=(pspecs, P("ep"), P("ep"), state_spec),
-            out_specs=out_spec,
-        ))(params, x, classes, states)
-    return x
-
-
 def main():
     assert len(jax.devices()) == EP, jax.devices()
-    mesh = compat.make_mesh((EP,), ("ep",))
+    mesh = make_ep_mesh(EP)
     cfg = tiny().replace(num_layers=4, capacity_factor=8.0)
     params = init_dit(jax.random.PRNGKey(0), cfg)
     # adaLN-zero init gives exactly-zero velocity on an untrained model (all
@@ -96,26 +47,36 @@ def main():
     classes = jnp.arange(16) % cfg.num_classes
     key = jax.random.PRNGKey(7)
 
-    # single-device references
-    from repro.sampling.rectified_flow import rf_sample
     ref_sync, _ = rf_sample(params, cfg, DiceConfig.sync_ep(), num_steps=8,
                             classes=classes, key=key, guidance=1.0)
 
-    print(f"{'schedule':14s} {'mse vs 1-device sync':>22s}")
-    for name, dcfg in [("sync", DiceConfig.sync_ep()),
-                       ("interweaved", DiceConfig.interweaved()),
-                       ("dice", DiceConfig.dice(sync_policy="deep"))]:
-        if dcfg.cond_comm:
-            # conditional comm changes buffer shapes per step; the uniform
-            # shard_map example runs the sync+selective part of DICE
-            dcfg = DiceConfig(schedule=dcfg.schedule,
-                              sync_policy=dcfg.sync_policy, cond_comm=False)
-        out = sample_ep(params, cfg, dcfg, mesh, num_steps=8,
-                        classes=classes, key=key)
+    print(f"{'schedule':14s} {'max|Δ| vs 1-dev self':>21s} "
+          f"{'mse vs 1-dev sync':>18s} {'cache':>6s}")
+    for name, dcfg in [
+            ("sync", DiceConfig.sync_ep()),
+            ("interweaved", DiceConfig.interweaved()),
+            ("selective", DiceConfig(schedule=Schedule.DICE,
+                                     sync_policy="deep", cond_comm=False)),
+            ("dice", DiceConfig.dice(sync_policy="deep"))]:
+        ref, _ = rf_sample(params, cfg, dcfg, num_steps=8, classes=classes,
+                           key=key, guidance=1.0)
+        out, stats = rf_sample(params, cfg, dcfg, num_steps=8,
+                               classes=classes, key=key, guidance=1.0,
+                               mesh=mesh)
+        err = float(jnp.max(jnp.abs(out - ref)))
+        assert err < 0.1, (name, err)   # full-DICE distributed parity too
+        assert stats["jit_cache_size"] == stats["num_plan_variants"]
         mse = mse_vs_reference(out, ref_sync)
-        print(f"{name:14s} {mse:22.6f}")
-    print("distributed EP serving OK — experts sharded 8-way, "
-          "all-to-all dispatch/combine in every MoE layer")
+        print(f"{name:14s} {err:21.3e} {mse:18.6f} "
+              f"{stats['jit_cache_size']:6d}")
+        if name == "dice":
+            per_step = stats["dispatch_bytes"]
+            light, full = min(per_step), max(per_step)
+            assert light < full, per_step
+            print(f"{'':14s} conditional comm on the wire: per-device "
+                  f"payload {full:.0f} B (refresh) -> {light:.0f} B (light)")
+    print("distributed EP serving OK — experts sharded 8-way, all-to-all "
+          "dispatch/combine in every MoE layer, full DICE included")
 
 
 if __name__ == "__main__":

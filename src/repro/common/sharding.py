@@ -19,6 +19,41 @@ def batch_spec(mesh) -> Any:
     return ("pod", "data") if "pod" in mesh.axis_names else "data"
 
 
+def ep_param_specs(params, *, ep_axis: str = "ep"):
+    """PartitionSpec pytree for expert-parallel serving (DESIGN.md §10).
+
+    Routed-expert weights — every leaf whose name starts with ``experts_``,
+    i.e. the (E, d, f) / (E, f, d) stacks of ``repro.core.moe.moe_init`` —
+    shard their expert dim over ``ep_axis``; everything else (router,
+    shared experts, attention, embeddings) is replicated.  This is the
+    single source of truth the mesh-native sampler, the serving engine and
+    the multi-device example all use.
+    """
+    def spec_for(path):
+        names = [str(getattr(k, "key", getattr(k, "idx", ""))) for k in path]
+        if any(n.startswith("experts_") for n in names):
+            return P(ep_axis)
+        return P()
+    flat, treedef = jax.tree_util.tree_flatten_with_path(params)
+    return jax.tree_util.tree_unflatten(treedef,
+                                        [spec_for(p) for p, _ in flat])
+
+
+def ep_shard_params(params, mesh, *, ep_axis: str = "ep"):
+    """Place ``params`` on ``mesh`` under :func:`ep_param_specs`.
+    Idempotent: re-placing an already-sharded tree is a no-op."""
+    return jax.tree.map(
+        lambda a, sp: jax.device_put(a, NamedSharding(mesh, sp)),
+        params, ep_param_specs(params, ep_axis=ep_axis))
+
+
+def ep_place_batch(a, mesh, *, ep_axis: str = "ep"):
+    """Shard a batch-leading array (latents, classes, per-slot selectors,
+    staleness buffers after host-side surgery) over the ep axis — the one
+    batch layout of the mesh-native step (DESIGN.md §10)."""
+    return jax.device_put(a, NamedSharding(mesh, P(ep_axis)))
+
+
 def _divisible(dim: int, mesh, axis: str) -> bool:
     return axis in mesh.axis_names and dim % mesh.shape[axis] == 0
 

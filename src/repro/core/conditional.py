@@ -81,6 +81,25 @@ def comm_volume_fraction(k: int, stride: int, policy: str = "low") -> float:
     return (k + (stride - 1) * kf) / (stride * k)
 
 
+def expected_dispatch_fraction(k: int, stride: int, policy: str,
+                               capacity_of) -> float:
+    """:func:`comm_volume_fraction` in *buffer slots*: the long-run mean
+    per-device all-to-all payload relative to full dispatch given the
+    actual (floor-aligned) capacities the plan allocates.
+
+    ``capacity_of(k) -> int`` maps an effective rank count to the
+    per-device dispatch capacity (``LayerAction.dispatch_capacity`` /
+    ``moe.default_capacity``).  When capacity rounding is exact this
+    equals :func:`comm_volume_fraction`; the 8-slot floor alignment makes
+    it the quantity ``aux.dispatch_bytes`` actually measures on the wire.
+    """
+    if stride <= 1:
+        return 1.0
+    c_full = capacity_of(k)
+    c_light = capacity_of(policy_effective_k(policy, k))
+    return (c_full + (stride - 1) * c_light) / (stride * c_full)
+
+
 def update_cache(h_cache: Optional[jnp.ndarray],
                  pair_vals: jnp.ndarray,
                  mask: Optional[jnp.ndarray]) -> jnp.ndarray:

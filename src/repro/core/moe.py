@@ -172,11 +172,18 @@ def shared_expert(p, x, *, act: str = "silu"):
 # ---------------------------------------------------------------------------
 # load-balance aux loss (switch-style)
 # ---------------------------------------------------------------------------
-def load_balance_loss(probs, idx, E: int):
+def load_balance_loss(probs, idx, E: int, ep_axis: Optional[str] = None):
     T, K = idx.shape
     frac_routed = jnp.mean(
         jax.nn.one_hot(idx, E, dtype=jnp.float32).sum(1), axis=0)  # (E,)
     mean_prob = jnp.mean(probs, axis=0)
+    if ep_axis is not None:
+        # global-batch loss under expert parallelism: the loss is bilinear
+        # in these two batch means, so average each across the equal-sized
+        # token shards BEFORE the product — a pmean of per-shard losses
+        # would be a mean of products, not the global switch loss
+        frac_routed = jax.lax.pmean(frac_routed, ep_axis)
+        mean_prob = jax.lax.pmean(mean_prob, ep_axis)
     return E * jnp.sum(frac_routed / K * mean_prob)
 
 
@@ -204,7 +211,12 @@ def moe_forward(p, x, cfg: ModelConfig, *,
 
     ``ep_axis``: mesh axis name for expert parallelism — call inside
     shard_map with experts sharded over that axis; the two lax.all_to_all
-    calls are the paper's dispatch/combine collectives.
+    calls are the paper's dispatch/combine collectives.  ``capacity`` (and
+    the default derived from T) is the PER-DEVICE capacity: inside
+    shard_map T is the local token shard, so a Conditional-Communication
+    light step's smaller ``effective_k`` shrinks the (E, C, d) buffer each
+    device puts on the wire — ``aux.dispatch_bytes`` reports exactly that
+    one-way per-device payload.
     """
     T, d = x.shape
     E = cfg.num_experts
@@ -218,6 +230,10 @@ def moe_forward(p, x, cfg: ModelConfig, *,
         buf_out = expert_ffn(p, buf, act=cfg.act, use_pallas=use_pallas)
     else:
         n = compat.axis_size(ep_axis)
+        if E % n:
+            raise ValueError(
+                f"num_experts={E} must divide over the {n}-way "
+                f"{ep_axis!r} mesh axis for expert parallelism")
         e_loc = E // n
         # ---- dispatch all-to-all (collective #1) -------------------------
         # NOTE: the CPU backend's float-normalization pass upcasts bf16
@@ -251,7 +267,7 @@ def moe_forward(p, x, cfg: ModelConfig, *,
     dropped_frac = jnp.where(dispatched > 0,
                              1.0 - kept / jnp.maximum(dispatched, 1.0), 0.0)
     aux = MoEAux(
-        lb_loss=load_balance_loss(probs, idx, E),
+        lb_loss=load_balance_loss(probs, idx, E, ep_axis=ep_axis),
         dropped_frac=dropped_frac,
         dispatch_bytes=jnp.asarray(E * capacity * d * jnp.dtype(x.dtype).itemsize),
         pair_vals=pair_vals if (want_pair_vals or fresh_mask is not None) else None,

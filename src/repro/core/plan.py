@@ -99,6 +99,27 @@ class LayerAction:
         return {"sync": 0, "interweaved": 1, "staggered": 1,
                 "displaced": 2}[self.mode]
 
+    # -- ep-aware buffer sizing (DESIGN.md §10) -----------------------------
+    def dispatch_capacity(self, num_local_tokens: int, cfg) -> int:
+        """Per-device dispatch-buffer capacity this action's all-to-all
+        moves.  ``num_local_tokens`` is the per-device token count — under
+        a mesh the plan sizes the buffer from the LOCAL shard, so a
+        Conditional-Communication light step (``effective_k < K``) shrinks
+        the payload actually on the wire, not just a mask over it.
+        """
+        from repro.core.moe import default_capacity
+        return default_capacity(num_local_tokens, cfg, k=self.effective_k)
+
+    def dispatch_bytes(self, num_local_tokens: int, cfg, *,
+                       itemsize: int = 4) -> int:
+        """One-way per-device all-to-all payload under this action.
+        ``itemsize`` is the activation dtype's byte width and must match
+        it for the planned == measured ``aux.dispatch_bytes`` contract:
+        4 for the f32 serving/test path, 2 to count a bf16 wire."""
+        return (cfg.num_experts
+                * self.dispatch_capacity(num_local_tokens, cfg)
+                * cfg.d_model * itemsize)
+
 
 @dataclass(frozen=True)
 class StepPlan:

@@ -30,7 +30,7 @@ import jax.numpy as jnp
 
 from repro.common.config import ModelConfig
 from repro.core import conditional
-from repro.core.moe import MoEAux, default_capacity, moe_forward
+from repro.core.moe import MoEAux, moe_forward
 from repro.core.plan import LayerAction, plan_for_step
 from repro.core.schedules import DiceConfig, Schedule
 
@@ -59,7 +59,8 @@ def init_layer_states(num_moe_layers: int) -> Dict[int, MoELayerState]:
 
 
 def init_planned_states(splan, *, num_tokens: int, d_model: int, k: int,
-                        dtype=jnp.float32) -> Dict[int, MoELayerState]:
+                        dtype=jnp.float32, mesh=None,
+                        ep_axis: str = "ep") -> Dict[int, MoELayerState]:
     """Pre-allocate exactly the buffers a SchedulePlan will ever write.
 
     Zero-filled buffers are never *read* before a warmup step overwrites
@@ -67,6 +68,11 @@ def init_planned_states(splan, *, num_tokens: int, d_model: int, k: int,
     constant across the whole run, so the jitted step function compiles
     exactly once per plan variant (no extra cache entry when the first
     warmup step would otherwise change the pytree signature).
+
+    With ``mesh`` the buffers are placed sharded over the ``ep_axis`` mesh
+    axis (token dim 0 — the sharding of the activations they cache,
+    DESIGN.md §10), so the mesh-native step function starts from the
+    layout its shard_map expects instead of paying a reshard on first use.
     """
     states = {}
     num_layers = splan.steps[0].num_layers if splan.steps else 0
@@ -79,7 +85,32 @@ def init_planned_states(splan, *, num_tokens: int, d_model: int, k: int,
             if any(a.writes_x_prev for a in acts) else None,
             h_cache=jnp.zeros((num_tokens, k, d_model), dtype)
             if any(a.want_cache for a in acts) else None)
+    if mesh is not None:
+        states = shard_states(states, mesh, ep_axis=ep_axis)
     return states
+
+
+def state_specs(states, *, ep_axis: str = "ep"):
+    """PartitionSpec pytree matching ``states``: every staleness buffer
+    (``y_buf`` (T, d), ``x_prev`` (T, d), ``h_cache`` (T, K, d)) shards its
+    leading token dim over ``ep_axis`` and replicates the rest — the
+    in/out specs of the mesh-native step function's shard_map."""
+    from jax.sharding import PartitionSpec as P
+    return jax.tree.map(lambda _: P(ep_axis), states)
+
+
+def shard_states(states, mesh, *, ep_axis: str = "ep"):
+    """Place staleness state on ``mesh`` under :func:`state_specs`.
+
+    Used at init and after any host-side surgery (e.g. the continuous
+    engine's :func:`reset_slots` at admission) so the jitted step always
+    sees one stable input sharding — a changed layout would otherwise key
+    a fresh jit-cache entry and break the compile-count guarantee.
+    """
+    from jax.sharding import NamedSharding
+    return jax.tree.map(
+        lambda a, sp: jax.device_put(a, NamedSharding(mesh, sp)),
+        states, state_specs(states, ep_axis=ep_axis))
 
 
 def state_bytes(states: Dict[int, MoELayerState]) -> int:
@@ -145,22 +176,30 @@ def apply_layer_action(p, x, cfg: ModelConfig, action: LayerAction,
     path.  Returns (y, new_state, aux).
     """
     mask = None
-    capacity = None
     if action.mask_policy is not None:
         k = cfg.experts_per_token
+        mkey = key
+        if mkey is not None and ep_axis is not None:
+            # a "random" policy mask must differ per device: the global
+            # mask is the concatenation of independent per-device draws,
+            # not one draw repeated across the ep axis
+            mkey = jax.random.fold_in(mkey, jax.lax.axis_index(ep_axis))
         mask = conditional.policy_mask(action.mask_policy, x.shape[0], k,
-                                       key=key)
+                                       key=mkey)
     if slot_fresh is not None and consume_mask is not None \
             and action.want_cache and action.mode != "sync":
         # slotted execution: the per-slot composed mask replaces the
         # uniform policy mask (the merged plan dispatches at full capacity)
         mask = consume_mask
-    if action.effective_k is not None:
-        capacity = default_capacity(x.shape[0], cfg, k=action.effective_k)
 
     want_cache = action.want_cache
 
     def run(inp, m=None, cache=None):
+        # per-device capacity carried by the plan, sized from THIS call's
+        # token count: inside shard_map inp is the local shard (so light
+        # steps genuinely shrink the wire payload), and staggered mode's
+        # half-batch calls get half-batch buffers
+        capacity = action.dispatch_capacity(inp.shape[0], cfg)
         return moe_forward(p, inp, cfg, capacity=capacity, fresh_mask=m,
                            h_cache=cache, ep_axis=ep_axis, key=key,
                            use_pallas=use_pallas, want_pair_vals=want_cache)

@@ -27,6 +27,17 @@ def make_local_mesh(data: int = 1, model: int = 1) -> jax.sharding.Mesh:
     return make_mesh((data, model), ("data", "model"))
 
 
+def make_ep_mesh(ep: int = 0) -> jax.sharding.Mesh:
+    """1-D expert-parallel mesh with the ``"ep"`` axis the mesh-native DICE
+    stack lowers onto (DESIGN.md §10).  ``ep == 0`` takes every local
+    device; dispatch/combine all-to-alls run over this axis."""
+    n = len(jax.devices())
+    ep = n if ep <= 0 else ep
+    if ep > n:
+        raise ValueError(f"ep={ep} exceeds the {n} available devices")
+    return make_mesh((ep,), ("ep",))
+
+
 def batch_axes(mesh: jax.sharding.Mesh):
     """Axes over which the global batch is sharded (pod included if present)."""
     return ("pod", "data") if "pod" in mesh.axis_names else ("data",)

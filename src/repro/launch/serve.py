@@ -138,17 +138,38 @@ def modeled_step_latency(cfg: ModelConfig, dcfg: DiceConfig, *,
 # ---------------------------------------------------------------------------
 class DiceServer:
     """``n_dev`` is the serving mesh size; it feeds both the per-device
-    local batch and the all-to-all fan-out of the latency model."""
+    local batch and the all-to-all fan-out of the latency model.
+
+    ``mesh`` (an ``"ep"``-axis mesh, ``launch.mesh.make_ep_mesh``) makes
+    the server mesh-native: ``generate`` and :func:`serve_continuous`
+    execute the real sharded dispatch/combine all-to-alls via the
+    shard_map-lowered step functions (DESIGN.md §10), and ``n_dev``
+    defaults to the mesh's ep size so the latency model describes the
+    mesh actually running."""
 
     def __init__(self, cfg: ModelConfig, dcfg: DiceConfig, *,
-                 params=None, seed: int = 0, n_dev: int = 8):
+                 params=None, seed: int = 0, n_dev: Optional[int] = None,
+                 mesh: Optional[jax.sharding.Mesh] = None,
+                 ep_axis: str = "ep"):
+        if mesh is not None and ep_axis not in mesh.axis_names:
+            raise ValueError(f"mesh axes {mesh.axis_names} lack {ep_axis!r}")
+        if n_dev is None:
+            n_dev = mesh.shape[ep_axis] if mesh is not None else 8
         if n_dev < 1:
             raise ValueError(f"n_dev must be >= 1, got {n_dev}")
         self.cfg = cfg
         self.dcfg = dcfg
         self.n_dev = n_dev
+        self.mesh = mesh
+        self.ep_axis = ep_axis
         self.params = params if params is not None else init_dit(
             jax.random.PRNGKey(seed), cfg)
+        if mesh is not None:
+            # place once at construction; the per-batch ep_shard_params
+            # inside make_rf_step then sees an already-sharded tree and
+            # device_put is a no-op (no host->device re-transfer per batch)
+            from repro.common.sharding import ep_shard_params
+            self.params = ep_shard_params(self.params, mesh, ep_axis=ep_axis)
 
     def plan(self, num_steps: int) -> plan_lib.SchedulePlan:
         """The compile-once schedule plan a ``generate`` call will run."""
@@ -163,7 +184,10 @@ class DiceServer:
         t0 = time.time()
         samples, stats = rf_sample(self.params, self.cfg, self.dcfg,
                                    num_steps=num_steps, classes=classes,
-                                   key=key, guidance=guidance)
+                                   key=key, guidance=guidance,
+                                   mesh=self.mesh,
+                                   ep_axis=self.ep_axis if self.mesh
+                                   is not None else None)
         wall = time.time() - t0
         lat = modeled_step_latency(
             self.cfg, self.dcfg, n_dev=self.n_dev,
@@ -269,7 +293,8 @@ def request_noise(key, rid: int, cfg: ModelConfig) -> jnp.ndarray:
 def serve_continuous(server: "DiceServer", requests: List[Request], *,
                      max_batch: int = 8, num_steps: int = 10,
                      guidance: float = 1.5, key=None,
-                     arrival_steps: Optional[List[float]] = None):
+                     arrival_steps: Optional[List[float]] = None,
+                     mesh: Optional[jax.sharding.Mesh] = None):
     """Continuous-batching serving loop: slot-level admission + recycling.
 
     Unlike :func:`serve_queue` (rigid FIFO batches: a finished request
@@ -294,13 +319,31 @@ def serve_continuous(server: "DiceServer", requests: List[Request], *,
     where stats reports the occupancy quantities behind the throughput
     benchmark: executed ticks, padded-slot step-executions, mean slot
     occupancy, and the aggregate byte/compile stats.
+
+    ``mesh`` (default: the server's mesh) runs every tick mesh-native:
+    slots shard over the ``"ep"`` axis, the recycled-slot state surgery is
+    re-placed with ``staleness.shard_states`` so the jitted step always
+    sees one stable input layout, and the compile-count guarantee (jit
+    cache == plan-variant count) carries over to the sharded path.
     """
     cfg, dcfg = server.cfg, server.dcfg
+    mesh = mesh if mesh is not None else server.mesh
+    ep_axis = server.ep_axis if mesh is not None else None
     key = key if key is not None else jax.random.PRNGKey(0)
     noise_key, step_key = jax.random.split(key)
     B, Tp = max_batch, cfg.patch_tokens
     dt = 1.0 / num_steps
     k_exp = cfg.experts_per_token
+    if mesh is not None and B % mesh.shape[ep_axis]:
+        raise ValueError(f"max_batch={B} must divide over the "
+                         f"{mesh.shape[ep_axis]}-way {ep_axis!r} axis")
+
+    def _place(a):
+        """Pin the batch to its ep sharding after host-side slot surgery."""
+        if mesh is None:
+            return a
+        from repro.common.sharding import ep_place_batch
+        return ep_place_batch(a, mesh, ep_axis=ep_axis)
 
     splan = plan_lib.compile_step_plans(dcfg, cfg.num_layers, num_steps,
                                         experts_per_token=k_exp)
@@ -310,12 +353,13 @@ def serve_continuous(server: "DiceServer", requests: List[Request], *,
                                              experts_per_token=k_exp)
     merge_wants_cache = any(a.want_cache for a in merge_plan.actions)
     rf_step = make_rf_step(server.params, cfg, dcfg, dt=dt,
-                           guidance=guidance)
+                           guidance=guidance, mesh=mesh, ep_axis=ep_axis)
     planned_init = partial(stale_lib.init_planned_states, splan,
                            num_tokens=B * Tp, d_model=cfg.d_model,
-                           k=k_exp, dtype=jnp.float32)
+                           k=k_exp, dtype=jnp.float32, mesh=mesh,
+                           ep_axis=ep_axis or "ep")
     states, states_u = planned_init(), planned_init()
-    x = jnp.zeros((B, Tp, cfg.in_channels), jnp.float32)
+    x = _place(jnp.zeros((B, Tp, cfg.in_channels), jnp.float32))
     classes = np.full((B,), cfg.num_classes, np.int32)   # null = free slot
     slots = [_Slot() for _ in range(B)]
     ever_used = [False] * B
@@ -360,6 +404,14 @@ def serve_continuous(server: "DiceServer", requests: List[Request], *,
                 states = stale_lib.reset_slots(states, m, tokens_per_slot=Tp)
                 states_u = stale_lib.reset_slots(states_u, m,
                                                  tokens_per_slot=Tp)
+                if mesh is not None:
+                    # re-place after host-side surgery: a drifted layout
+                    # would key extra jit-cache entries
+                    states = stale_lib.shard_states(states, mesh,
+                                                    ep_axis=ep_axis)
+                    states_u = stale_lib.shard_states(states_u, mesh,
+                                                      ep_axis=ep_axis)
+                    x = _place(x)
         if not any(s.active for s in slots):
             # fully idle: jump to the next aligned tick with an arrival
             tick = _next_aligned(max(pending[0][0], tick + 1))
@@ -448,8 +500,13 @@ def main():
     ap.add_argument("--no-tiny", dest="tiny", action="store_false")
     ap.add_argument("--ckpt", default=None)
     ap.add_argument("--guidance", type=float, default=1.5)
-    ap.add_argument("--n-dev", type=int, default=8,
-                    help="serving mesh size for the latency model")
+    ap.add_argument("--n-dev", type=int, default=None,
+                    help="serving mesh size for the latency model "
+                         "(default: the ep mesh size, else 8)")
+    ap.add_argument("--ep", type=int, default=0,
+                    help="run mesh-native over an N-way 'ep' axis "
+                         "(DESIGN.md §10; needs N devices, e.g. XLA_FLAGS="
+                         "--xla_force_host_platform_device_count=N)")
     ap.add_argument("--continuous", action="store_true",
                     help="drain the requests through the continuous-"
                          "batching engine (--max-batch slots) instead of "
@@ -463,12 +520,18 @@ def main():
     if args.ckpt:
         params = load_checkpoint(args.ckpt,
                                  init_dit(jax.random.PRNGKey(0), cfg))
-    server = DiceServer(cfg, dcfg, params=params, n_dev=args.n_dev)
+    mesh = None
+    if args.ep:
+        from repro.launch.mesh import make_ep_mesh
+        mesh = make_ep_mesh(args.ep)
+    server = DiceServer(cfg, dcfg, params=params, n_dev=args.n_dev,
+                        mesh=mesh)
     reqs = [Request(class_id=i % cfg.num_classes, rid=i)
             for i in range(args.requests)]
     splan = server.plan(args.steps)
     print(f"serving {len(reqs)} requests, schedule={args.schedule}, "
-          f"{args.steps} steps, model={cfg.name}, n_dev={args.n_dev}")
+          f"{args.steps} steps, model={cfg.name}, n_dev={server.n_dev}"
+          + (f", mesh-native {args.ep}-way ep" if mesh is not None else ""))
     print(f"step plan: {splan.num_variants} compiled variants for "
           f"{splan.num_steps} steps "
           f"({[len(splan.steps_of_variant(v)) for v in range(splan.num_variants)]} "

@@ -172,6 +172,18 @@ def dit_forward(params, x, t, y, cfg: ModelConfig, dcfg: DiceConfig,
         "buffer_bytes": stale_lib.state_bytes(new_states)
         + sum(p.bytes() for p in new_patch.values()),
     }
+    if ep_axis is not None:
+        # mesh-native execution (inside shard_map): token-mean quantities
+        # average over the ep axis so the reported aux is replicated;
+        # buffer_bytes scales to the GLOBAL persistent footprint while
+        # dispatch_bytes stays the PER-DEVICE wire payload — the quantity
+        # the paper's all-to-all claim is about (DESIGN.md §10)
+        from repro.common import compat
+        aux_out["lb_loss"] = jax.lax.pmean(aux_out["lb_loss"], ep_axis)
+        aux_out["dropped_frac"] = jax.lax.pmean(aux_out["dropped_frac"],
+                                                ep_axis)
+        aux_out["buffer_bytes"] = (aux_out["buffer_bytes"]
+                                   * compat.axis_size(ep_axis))
     return v, new_states, new_patch, aux_out
 
 

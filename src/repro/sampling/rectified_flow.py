@@ -20,6 +20,10 @@ from typing import Dict, Optional
 import jax
 import jax.numpy as jnp
 
+from jax.sharding import PartitionSpec as P
+
+from repro.common import compat
+from repro.common import sharding as shard_lib
 from repro.common.config import ModelConfig
 from repro.core import plan as plan_lib
 from repro.core import staleness as stale_lib
@@ -60,10 +64,37 @@ def rf_train_step(params, opt_state, batch, key, cfg: ModelConfig):
 # ---------------------------------------------------------------------------
 # sampling under a parallelism schedule
 # ---------------------------------------------------------------------------
+def _euler_step(params, cfg: ModelConfig, dcfg: DiceConfig,
+                x, classes, states, states_u, patch_states, patch_states_u,
+                t, key, *, plan, dt, guidance, patch_parallel_ndev=0,
+                ep_axis=None, slot_fresh=None, consume_mask=None):
+    """One CFG-guided Euler step — the schedule-agnostic core both the
+    single-device and the mesh-native (shard_map-ped) step functions trace.
+    Inside shard_map every operand is the per-device shard and ``ep_axis``
+    names the live mesh axis the MoE all-to-alls run over."""
+    null = jnp.full_like(classes, cfg.num_classes)
+    v_c, ns, nps, aux = dit_forward(
+        params, x, t, classes, cfg, dcfg, states, plan=plan,
+        patch_states=patch_states or None,
+        patch_parallel_ndev=patch_parallel_ndev, ep_axis=ep_axis, key=key,
+        slot_fresh=slot_fresh, consume_mask=consume_mask)
+    if guidance != 1.0:
+        v_u, nsu, npsu, _ = dit_forward(
+            params, x, t, null, cfg, dcfg, states_u, plan=plan,
+            patch_states=patch_states_u or None,
+            patch_parallel_ndev=patch_parallel_ndev, ep_axis=ep_axis,
+            key=key, slot_fresh=slot_fresh, consume_mask=consume_mask)
+        v = v_u + guidance * (v_c - v_u)
+    else:
+        v, nsu, npsu = v_c, states_u, patch_states_u
+    return x + dt * v, ns, nsu, nps, npsu, aux
+
+
 def make_rf_step(params, cfg: ModelConfig, dcfg: DiceConfig, *,
                  dt: float, guidance: float = 1.5,
                  patch_parallel_ndev: int = 0,
-                 ep_axis: Optional[str] = None):
+                 ep_axis: Optional[str] = None,
+                 mesh: Optional[jax.sharding.Mesh] = None):
     """The reusable single-Euler-step callable behind both :func:`rf_sample`
     and the continuous-batching serving engine (DESIGN.md Sec. 9).
 
@@ -82,30 +113,89 @@ def make_rf_step(params, cfg: ModelConfig, dcfg: DiceConfig, *,
     each slot's conditional-communication mask.  Both are traced arrays,
     so every warmup/steady mixture shares one compiled entry per
     (plan, slotted) pair.
+
+    With ``mesh`` (an ``"ep"``-axis mesh, see ``launch.mesh.make_ep_mesh``)
+    each plan variant lowers to ONE shard_map-ped step: the batch, the
+    staleness state and the per-slot selectors shard over the ep axis,
+    expert params shard under ``common.sharding.ep_param_specs``, and the
+    dispatch/combine all-to-alls of every MoE layer run over the axis
+    (DESIGN.md §10).  The jit-cache contract is unchanged — one entry per
+    (plan, slotted) pair, mesh-independent.
     """
+    if mesh is not None:
+        return _make_mesh_rf_step(
+            params, cfg, dcfg, dt=dt, guidance=guidance,
+            patch_parallel_ndev=patch_parallel_ndev, mesh=mesh,
+            ep_axis=ep_axis or "ep")
 
     @partial(jax.jit, static_argnames=("plan", "slotted"))
     def rf_step(x, classes, states, states_u, patch_states, patch_states_u,
                 t, key, *, plan, slotted=False,
                 slot_fresh=None, consume_mask=None):
-        null = jnp.full_like(classes, cfg.num_classes)
-        sf = slot_fresh if slotted else None
-        cm = consume_mask if slotted else None
-        v_c, ns, nps, aux = dit_forward(
-            params, x, t, classes, cfg, dcfg, states, plan=plan,
-            patch_states=patch_states or None,
-            patch_parallel_ndev=patch_parallel_ndev, ep_axis=ep_axis, key=key,
-            slot_fresh=sf, consume_mask=cm)
-        if guidance != 1.0:
-            v_u, nsu, npsu, _ = dit_forward(
-                params, x, t, null, cfg, dcfg, states_u, plan=plan,
-                patch_states=patch_states_u or None,
-                patch_parallel_ndev=patch_parallel_ndev, ep_axis=ep_axis,
-                key=key, slot_fresh=sf, consume_mask=cm)
-            v = v_u + guidance * (v_c - v_u)
-        else:
-            v, nsu, npsu = v_c, states_u, patch_states_u
-        return x + dt * v, ns, nsu, nps, npsu, aux
+        return _euler_step(
+            params, cfg, dcfg, x, classes, states, states_u,
+            patch_states, patch_states_u, t, key, plan=plan, dt=dt,
+            guidance=guidance, patch_parallel_ndev=patch_parallel_ndev,
+            ep_axis=ep_axis,
+            slot_fresh=slot_fresh if slotted else None,
+            consume_mask=consume_mask if slotted else None)
+
+    return rf_step
+
+
+def _make_mesh_rf_step(params, cfg: ModelConfig, dcfg: DiceConfig, *,
+                       dt: float, guidance: float, patch_parallel_ndev: int,
+                       mesh: jax.sharding.Mesh, ep_axis: str):
+    """Mesh-native lowering of :func:`make_rf_step` (DESIGN.md §10).
+
+    One ``shard_map`` per plan variant: batch/state/selectors shard over
+    ``ep_axis``, experts shard under ``ep_param_specs``, aux is reduced to
+    replicated values inside the mapped body (``dispatch_bytes`` stays the
+    per-device wire payload).  Params are placed on the mesh once, here.
+    """
+    if patch_parallel_ndev:
+        raise ValueError("patch-parallel attention does not compose with "
+                         "the mesh-native expert-parallel path")
+    if ep_axis not in mesh.axis_names:
+        raise ValueError(f"mesh axes {mesh.axis_names} lack {ep_axis!r}")
+    n = mesh.shape[ep_axis]
+    if cfg.num_experts % n:
+        raise ValueError(f"num_experts={cfg.num_experts} must divide the "
+                         f"{n}-way {ep_axis!r} axis")
+    params = shard_lib.ep_shard_params(params, mesh, ep_axis=ep_axis)
+    pspecs = shard_lib.ep_param_specs(params, ep_axis=ep_axis)
+
+    @partial(jax.jit, static_argnames=("plan", "slotted"))
+    def rf_step(x, classes, states, states_u, patch_states, patch_states_u,
+                t, key, *, plan, slotted=False,
+                slot_fresh=None, consume_mask=None):
+        if x.shape[0] % n:
+            raise ValueError(f"batch {x.shape[0]} must divide over the "
+                             f"{n}-way {ep_axis!r} axis")
+        st_spec = stale_lib.state_specs(states, ep_axis=ep_axis)
+        stu_spec = stale_lib.state_specs(states_u, ep_axis=ep_axis)
+        aux_spec = {"lb_loss": P(), "dispatch_bytes": P(),
+                    "dropped_frac": P(), "buffer_bytes": P()}
+        ops = (params, x, classes, states, states_u, t, key)
+        in_specs = (pspecs, P(ep_axis), P(ep_axis), st_spec, stu_spec,
+                    P(ep_axis), P())
+        if slotted:
+            ops += (slot_fresh, consume_mask)
+            in_specs += (P(ep_axis), P(ep_axis))
+
+        def inner(p_l, x_l, cls_l, st_l, stu_l, t_l, key_l, *slot_ops):
+            sf, cm = slot_ops if slotted else (None, None)
+            x_new, ns, nsu, _, _, aux = _euler_step(
+                p_l, cfg, dcfg, x_l, cls_l, st_l, stu_l, {}, {}, t_l, key_l,
+                plan=plan, dt=dt, guidance=guidance, ep_axis=ep_axis,
+                slot_fresh=sf, consume_mask=cm)
+            aux = dict(aux, buffer_bytes=jnp.asarray(aux["buffer_bytes"]))
+            return x_new, ns, nsu, aux
+
+        x_new, ns, nsu, aux = compat.shard_map(
+            inner, mesh=mesh, in_specs=in_specs,
+            out_specs=(P(ep_axis), st_spec, stu_spec, aux_spec))(*ops)
+        return x_new, ns, nsu, patch_states, patch_states_u, aux
 
     return rf_step
 
@@ -113,7 +203,8 @@ def make_rf_step(params, cfg: ModelConfig, dcfg: DiceConfig, *,
 def make_sample_step(params, cfg: ModelConfig, dcfg: DiceConfig, classes, *,
                      dt: float, guidance: float = 1.5,
                      patch_parallel_ndev: int = 0,
-                     ep_axis: Optional[str] = None):
+                     ep_axis: Optional[str] = None,
+                     mesh: Optional[jax.sharding.Mesh] = None):
     """One jitted Euler step with ``classes`` bound — the whole-loop
     sampler's view of :func:`make_rf_step`.
 
@@ -123,9 +214,12 @@ def make_sample_step(params, cfg: ModelConfig, dcfg: DiceConfig, classes, *,
     enters the trace.
     """
     classes = jnp.asarray(classes, jnp.int32)
+    if mesh is not None:
+        classes = shard_lib.ep_place_batch(classes, mesh,
+                                           ep_axis=ep_axis or "ep")
     rf_step = make_rf_step(params, cfg, dcfg, dt=dt, guidance=guidance,
                            patch_parallel_ndev=patch_parallel_ndev,
-                           ep_axis=ep_axis)
+                           ep_axis=ep_axis, mesh=mesh)
 
     def one_step(x, states, states_u, patch_states, patch_states_u, t, key,
                  *, plan):
@@ -141,6 +235,7 @@ def rf_sample(params, cfg: ModelConfig, dcfg: DiceConfig, *,
               guidance: float = 1.5,
               patch_parallel_ndev: int = 0,
               ep_axis: Optional[str] = None,
+              mesh: Optional[jax.sharding.Mesh] = None,
               collect_stats: bool = True):
     """Generate latents (B, T, C) for ``classes`` under a schedule.
 
@@ -151,20 +246,31 @@ def rf_sample(params, cfg: ModelConfig, dcfg: DiceConfig, *,
     and ``jit_cache_size`` (actual compiled entries of the step function
     — equal to the variant count thanks to plan-aware state init, and
     O(1) in ``num_steps`` vs. the seed's one-compile-per-step).
+
+    ``mesh`` runs the whole loop mesh-native (DESIGN.md §10): batch and
+    staleness state shard over the mesh's ``"ep"`` axis (``ep_axis``
+    overrides the name), experts shard under ``ep_param_specs``, and the
+    per-step ``dispatch_bytes`` stat becomes the PER-DEVICE all-to-all
+    payload — on Conditional-Communication light steps a genuinely
+    smaller number, straight off the sharded dispatch buffer.
     """
     B = classes.shape[0]
+    ep = ep_axis or ("ep" if mesh is not None else None)
     x = jax.random.normal(key, (B, cfg.patch_tokens, cfg.in_channels))
+    if mesh is not None:
+        x = shard_lib.ep_place_batch(x, mesh, ep_axis=ep)
     dt = 1.0 / num_steps
     splan = plan_lib.compile_step_plans(
         dcfg, cfg.num_layers, num_steps,
         experts_per_token=cfg.experts_per_token)
     # plan-aware init: allocate exactly the buffers the run will write, so
     # the state pytree signature is constant and the jit cache holds
-    # exactly one entry per plan variant
+    # exactly one entry per plan variant (sharded over ep under a mesh)
     planned_init = partial(stale_lib.init_planned_states, splan,
                            num_tokens=B * cfg.patch_tokens,
                            d_model=cfg.d_model, k=cfg.experts_per_token,
-                           dtype=x.dtype)
+                           dtype=x.dtype, mesh=mesh,
+                           ep_axis=ep or "ep")
     states = planned_init()
     states_u = planned_init()
     patch_states: Dict = {}
@@ -174,7 +280,7 @@ def rf_sample(params, cfg: ModelConfig, dcfg: DiceConfig, *,
     one_step = make_sample_step(params, cfg, dcfg, classes, dt=dt,
                                 guidance=guidance,
                                 patch_parallel_ndev=patch_parallel_ndev,
-                                ep_axis=ep_axis)
+                                ep_axis=ep, mesh=mesh)
 
     for s in range(num_steps):
         key, k = jax.random.split(key)

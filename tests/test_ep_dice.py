@@ -1,0 +1,98 @@
+"""Mesh-native DICE conformance (ISSUE 3): distributed == single-device.
+
+Subprocess-based (tests must keep the parent on the single real CPU
+device): an 8-host-device child shards the DiT-MoE experts over an "ep"
+mesh axis through the CORE stack — ``rf_sample(mesh=...)`` — and proves,
+for ALL FIVE schedules (sync, displaced, interweaved, selective, full
+DICE with conditional communication):
+
+  * sharded sampling matches the single-device reference within 0.1
+    (observed ~1e-7: same f32 math, re-ordered only by the all-to-alls);
+  * the jit cache holds exactly one compiled entry per plan variant on
+    the mesh path too (the mesh does not multiply compiles);
+  * DICE's conditional-communication light steps put a strictly smaller
+    per-device all-to-all payload on the wire than full-dispatch steps
+    (``aux.dispatch_bytes`` off the sharded dispatch buffer).
+"""
+import os
+import subprocess
+import sys
+import textwrap
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+PROG = textwrap.dedent("""
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    import jax, jax.numpy as jnp
+    from repro.configs.dit_moe_xl import tiny
+    from repro.core import plan as plan_lib
+    from repro.core.schedules import DiceConfig, Schedule
+    from repro.launch.mesh import make_ep_mesh
+    from repro.models.dit_moe import init_dit
+    from repro.sampling.rectified_flow import rf_sample
+
+    # capacity_factor == num_experts: a capacity drop is impossible even if
+    # every pair routes to one expert, on the per-device shard too, so the
+    # sharded and single-device runs drop exactly the same (zero) pairs
+    cfg = tiny().replace(num_layers=2, d_model=64, moe_d_ff=64, d_ff=256,
+                         num_heads=4, num_kv_heads=4, head_dim=16,
+                         patch_tokens=16, capacity_factor=8.0)
+    params = init_dit(jax.random.PRNGKey(0), cfg)
+    k = jax.random.PRNGKey(99)
+    for i, blk in enumerate(params["blocks"]):
+        blk["adaln"] = 0.05 * jax.random.normal(
+            jax.random.fold_in(k, i), blk["adaln"].shape)
+    params["final_out"] = 0.05 * jax.random.normal(
+        jax.random.fold_in(k, 10_000), params["final_out"].shape)
+    classes = jnp.arange(8) % cfg.num_classes
+    key = jax.random.PRNGKey(7)
+    mesh = make_ep_mesh(8)
+    NUM_STEPS = 6
+
+    SCHEDULES = [
+        ("sync", DiceConfig.sync_ep()),
+        ("displaced", DiceConfig.displaced()),
+        ("interweaved", DiceConfig.interweaved()),
+        ("selective", DiceConfig(schedule=Schedule.DICE, sync_policy="deep",
+                                 cond_comm=False)),
+        ("dice", DiceConfig.dice(sync_policy="deep")),
+    ]
+    for name, dcfg in SCHEDULES:
+        ref, _ = rf_sample(params, cfg, dcfg, num_steps=NUM_STEPS,
+                           classes=classes, key=key, guidance=1.0)
+        out, stats = rf_sample(params, cfg, dcfg, num_steps=NUM_STEPS,
+                               classes=classes, key=key, guidance=1.0,
+                               mesh=mesh)
+        err = float(jnp.max(jnp.abs(out.astype(jnp.float32)
+                                    - ref.astype(jnp.float32))))
+        assert err < 0.1, (name, err)
+        splan = plan_lib.compile_step_plans(
+            dcfg, cfg.num_layers, NUM_STEPS,
+            experts_per_token=cfg.experts_per_token)
+        assert stats["num_plan_variants"] == splan.num_variants, name
+        assert stats["jit_cache_size"] == splan.num_variants, (
+            name, stats["jit_cache_size"], splan.num_variants)
+        if name == "dice":
+            per_step = stats["dispatch_bytes"]
+            w = dcfg.warmup_steps
+            refresh, light = per_step[w], per_step[w + 1]   # stride 2
+            assert light < refresh, per_step
+            # effective_k=1 of K=2 halves the capacity buffer of async
+            # layers; sync layers stay full — payload strictly between
+            assert refresh * 0.4 < light < refresh, (light, refresh)
+        print("PARITY", name, err, stats["jit_cache_size"])
+    print("EPDICE-OK")
+""")
+
+
+def test_ep_dice_distributed_parity_all_schedules():
+    r = subprocess.run([sys.executable, "-c", PROG], capture_output=True,
+                       text=True,
+                       env=dict(os.environ, PYTHONPATH="src"),
+                       cwd=REPO, timeout=1200)
+    assert "EPDICE-OK" in r.stdout, (r.stdout[-2000:], r.stderr[-3000:])
+    # all five schedules actually ran the parity check
+    for name in ("sync", "displaced", "interweaved", "selective", "dice"):
+        assert f"PARITY {name}" in r.stdout, (name, r.stdout[-2000:])

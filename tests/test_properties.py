@@ -8,7 +8,8 @@ pytest.importorskip("hypothesis")  # property tests need the dev extra
 from hypothesis import given, settings, strategies as st
 
 from repro.common.config import ModelConfig
-from repro.core.moe import default_capacity
+from repro.core import conditional, plan as plan_lib
+from repro.core.moe import combine, default_capacity, dispatch, make_plan
 from repro.core.schedules import DiceConfig, Schedule
 from repro.core.selective import sync_layer_mask, sync_overhead_fraction
 
@@ -77,6 +78,122 @@ def test_schedule_invariants():
     }
     for sched, fn in factories.items():
         assert fn().schedule == sched
+
+
+# ---------------------------------------------------------------------------
+# mesh-native expert parallelism (ISSUE 3): the sharded dispatch/combine
+# path, emulated device-by-device with the exact all-to-all block exchange
+# of repro.core.moe.moe_forward (reshape(n, e_loc, C, d) -> swap sender and
+# expert-block axes -> reshape(e_loc, n*C, d), and its inverse)
+# ---------------------------------------------------------------------------
+def _ep_exchange(bufs, n_dev, e_loc):
+    """Emulate the dispatch all-to-all: per-device (E, C, d) buffers ->
+    per-device (e_loc, n*C, d) local-expert buffers."""
+    stacked = np.stack([np.asarray(b) for b in bufs])      # (n, E, C, d)
+    C, d = stacked.shape[2], stacked.shape[3]
+    out = []
+    for j in range(n_dev):
+        recv = stacked[:, j * e_loc:(j + 1) * e_loc]       # (n, e_loc, C, d)
+        out.append(np.moveaxis(recv, 0, 1).reshape(e_loc, n_dev * C, d))
+    return out
+
+
+def _ep_exchange_back(outs, n_dev, e_loc):
+    """Inverse (combine all-to-all): per-device (e_loc, n*C, d) expert
+    outputs -> per-device (E, C, d) combine buffers."""
+    C = outs[0].shape[1] // n_dev
+    d = outs[0].shape[2]
+    blocks = [np.moveaxis(o.reshape(e_loc, n_dev, C, d), 1, 0) for o in outs]
+    return [np.concatenate([blocks[j][i] for j in range(n_dev)], axis=0)
+            for i in range(n_dev)]
+
+
+@settings(max_examples=25, deadline=None)
+@given(n_dev=st.sampled_from([1, 2, 4]), e_per_dev=st.integers(1, 2),
+       k=st.integers(1, 3), t_loc=st.sampled_from([4, 8]),
+       seed=st.integers(0, 2**31 - 1))
+def test_sharded_dispatch_combine_roundtrip(n_dev, e_per_dev, k, t_loc, seed):
+    """With sufficient capacity, the sharded dispatch -> all-to-all ->
+    identity experts -> all-to-all -> combine pipeline returns every token
+    exactly (y == k * x with unit scores), for any E % n_dev == 0 split."""
+    E = n_dev * e_per_dev
+    k = min(k, E)
+    rng = np.random.default_rng(seed)
+    d = 4
+    cap = t_loc * k                     # worst case: every local pair one expert
+    xs = [jnp.asarray(rng.standard_normal((t_loc, d)), jnp.float32)
+          for _ in range(n_dev)]
+    idx = [jnp.asarray(rng.integers(0, E, (t_loc, k))) for _ in range(n_dev)]
+    plans = [make_plan(i, E, cap) for i in idx]
+    bufs = [dispatch(x, p, E, cap) for x, p in zip(xs, plans)]
+    # every routed pair survives dispatch (capacity suffices)
+    assert all(bool(p.keep.all()) for p in plans)
+    recv = _ep_exchange(bufs, n_dev, e_per_dev)
+    back = _ep_exchange_back(recv, n_dev, e_per_dev)       # identity experts
+    for dev in range(n_dev):
+        np.testing.assert_array_equal(np.asarray(bufs[dev]), back[dev])
+        y, _, pair_keep = combine(jnp.asarray(back[dev]), plans[dev],
+                                  jnp.ones((t_loc, k), jnp.float32), t_loc)
+        assert bool(pair_keep.all())
+        np.testing.assert_array_equal(np.asarray(y),
+                                      k * np.asarray(xs[dev]))
+
+
+@settings(max_examples=30, deadline=None)
+@given(k=st.integers(2, 6), stride=st.integers(2, 6),
+       policy=st.sampled_from(["low", "high"]),
+       t_loc=st.sampled_from([8, 16]), layers=st.integers(1, 3))
+def test_comm_fraction_matches_planned_dispatch_bytes(k, stride, policy,
+                                                      t_loc, layers):
+    """The plan's per-device dispatch payload over one steady DICE cycle
+    reproduces conditional.comm_volume_fraction: capacity factor E keeps
+    the 8-slot floor alignment exact, so the slot-level
+    expected_dispatch_fraction equals the analytic rank-level fraction."""
+    E = 8
+    cfg = _cfg(E, k, cf=float(E))
+    dcfg = DiceConfig(schedule=Schedule.DICE, sync_policy="none",
+                      cond_comm=True, cond_stride=stride, cond_policy=policy)
+    w = dcfg.warmup_steps
+    cycle = [plan_lib.plan_for_step(dcfg, layers, w + s, experts_per_token=k)
+             for s in range(stride)]
+    step_bytes = [sum(a.dispatch_bytes(t_loc, cfg) for a in p.actions)
+                  for p in cycle]
+    full = layers * plan_lib.LayerAction(mode="sync").dispatch_bytes(
+        t_loc, cfg)
+    measured = sum(step_bytes) / (stride * full)
+    predicted = conditional.comm_volume_fraction(k, stride, policy)
+    slotwise = conditional.expected_dispatch_fraction(
+        k, stride, policy,
+        capacity_of=lambda kk: default_capacity(t_loc, cfg, k=kk))
+    assert measured == pytest.approx(slotwise)
+    assert measured == pytest.approx(predicted)   # rounding exact by design
+    # light steps are strictly cheaper on the wire than refresh steps
+    assert min(step_bytes) < max(step_bytes)
+
+
+def test_dispatch_bytes_measured_equals_planned():
+    """aux.dispatch_bytes off the executed MoE layer equals the plan's
+    LayerAction.dispatch_bytes — the quantity the mesh-native path reports
+    per device (DESIGN.md §10)."""
+    import jax as _jax
+    from repro.core.moe import moe_init
+    from repro.core.staleness import MoELayerState, apply_layer_action
+    cfg = _cfg(8, 2, cf=8.0)
+    p = moe_init(_jax.random.PRNGKey(0), cfg, dtype=jnp.float32)
+    T = 16
+    x = _jax.random.normal(_jax.random.PRNGKey(1), (T, cfg.d_model),
+                           jnp.float32)
+    state = MoELayerState(y_buf=jnp.zeros_like(x),
+                          h_cache=jnp.zeros((T, 2, cfg.d_model)))
+    light = plan_lib.LayerAction(mode="interweaved", mask_policy="low",
+                                 effective_k=1, want_cache=True)
+    full = plan_lib.LayerAction(mode="interweaved", effective_k=2,
+                                want_cache=True)
+    _, _, aux_l = apply_layer_action(p, x, cfg, light, state)
+    _, _, aux_f = apply_layer_action(p, x, cfg, full, state)
+    assert int(aux_l.dispatch_bytes) == light.dispatch_bytes(T, cfg)
+    assert int(aux_f.dispatch_bytes) == full.dispatch_bytes(T, cfg)
+    assert int(aux_l.dispatch_bytes) < int(aux_f.dispatch_bytes)
 
 
 @settings(max_examples=20, deadline=None)

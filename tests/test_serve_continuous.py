@@ -186,6 +186,106 @@ def test_paper_comm_fraction_band():
             assert 0.6 <= frac <= 0.8, (n_dev, b, frac)
 
 
+def test_sharded_recycled_slots_match_fresh_sharded_batch():
+    """Mesh-native continuous batching (DESIGN.md §10): requests admitted
+    into RECYCLED slots of an 8-way-ep ``serve_continuous(mesh=...)`` run
+    must be bit-identical to the same requests in a fresh sharded batch —
+    no cross-request leakage through the sharded ``h_cache``/``y_buf``
+    rows — and the jit cache must stay at the plan-variant count.
+    Subprocess-based: the parent process must keep the single real CPU
+    device."""
+    import os
+    import subprocess
+    import sys
+    import textwrap
+    prog = textwrap.dedent("""
+        import os
+        os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+        from functools import partial
+        import jax, jax.numpy as jnp
+        import numpy as np
+        from jax.sharding import NamedSharding, PartitionSpec as P
+        from repro.configs.dit_moe_xl import tiny
+        from repro.core import plan as plan_lib
+        from repro.core.schedules import DiceConfig
+        from repro.core.staleness import init_planned_states
+        from repro.launch.mesh import make_ep_mesh
+        from repro.launch.serve import (DiceServer, Request, request_noise,
+                                        serve_continuous)
+        from repro.models.dit_moe import init_dit
+        from repro.sampling.rectified_flow import make_rf_step
+
+        cfg = tiny().replace(num_layers=4, d_model=64, moe_d_ff=64,
+                             d_ff=256, patch_tokens=16, capacity_factor=8.0)
+        params = init_dit(jax.random.PRNGKey(0), cfg)
+        k = jax.random.PRNGKey(99)
+        for i, blk in enumerate(params["blocks"]):
+            blk["adaln"] = 0.05 * jax.random.normal(
+                jax.random.fold_in(k, i), blk["adaln"].shape)
+        params["final_out"] = 0.05 * jax.random.normal(
+            jax.random.fold_in(k, 10_000), params["final_out"].shape)
+        mesh = make_ep_mesh(8)
+        dcfg = DiceConfig.dice()
+        NUM_STEPS = 4
+
+        def fresh_mesh_batch(requests, key):
+            noise_key, step_key = jax.random.split(key)
+            B = len(requests)
+            sh = NamedSharding(mesh, P("ep"))
+            x = jax.device_put(jnp.stack(
+                [request_noise(noise_key, r.rid, cfg) for r in requests]), sh)
+            classes = jax.device_put(jnp.asarray(
+                [r.class_id for r in requests], jnp.int32), sh)
+            splan = plan_lib.compile_step_plans(
+                dcfg, cfg.num_layers, NUM_STEPS,
+                experts_per_token=cfg.experts_per_token)
+            init = partial(init_planned_states, splan,
+                           num_tokens=B * cfg.patch_tokens,
+                           d_model=cfg.d_model, k=cfg.experts_per_token,
+                           dtype=jnp.float32, mesh=mesh)
+            states, states_u = init(), init()
+            step = make_rf_step(params, cfg, dcfg, dt=1.0 / NUM_STEPS,
+                                guidance=1.5, mesh=mesh)
+            for s in range(NUM_STEPS):
+                t = jnp.full((B,), s / NUM_STEPS)
+                x, states, states_u, _, _, _ = step(
+                    x, classes, states, states_u, {}, {}, t,
+                    jax.random.fold_in(step_key, s), plan=splan.steps[s])
+            return {r.rid: np.asarray(x[i]) for i, r in enumerate(requests)}
+
+        server = DiceServer(cfg, dcfg, params=params, mesh=mesh)
+        reqs = [Request(class_id=i % cfg.num_classes, rid=i)
+                for i in range(10)]
+        key = jax.random.PRNGKey(42)
+        out, stats = serve_continuous(
+            server, reqs, max_batch=8, num_steps=NUM_STEPS, key=key,
+            arrival_steps=[0.0] * 8 + [1.0, 1.0])
+        assert sorted(out) == list(range(10))
+        assert stats["recycled_admissions"] >= 2, stats
+        assert stats["jit_cache_size"] == stats["num_plan_variants"], stats
+
+        # recycled requests (rid 8, 9) vs a fresh sharded batch with
+        # DIFFERENT co-residents: leakage from the previous occupants of
+        # their slots would break bit-identity
+        ref = fresh_mesh_batch(
+            [reqs[8], reqs[9]] + [Request(class_id=(i * 3) % cfg.num_classes,
+                                          rid=100 + i) for i in range(6)],
+            key)
+        np.testing.assert_array_equal(out[8], ref[8])
+        np.testing.assert_array_equal(out[9], ref[9])
+        # first-wave requests went through slotted warmup ticks; they too
+        # must match the plain mesh-sharded fixed-batch sampler
+        ref0 = fresh_mesh_batch(reqs[:8], key)
+        np.testing.assert_array_equal(out[0], ref0[0])
+        print("EPSERVE-OK")
+    """)
+    repo = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    r = subprocess.run([sys.executable, "-c", prog], capture_output=True,
+                       text=True, env=dict(os.environ, PYTHONPATH="src"),
+                       cwd=repo, timeout=1200)
+    assert "EPSERVE-OK" in r.stdout, (r.stdout[-2000:], r.stderr[-3000:])
+
+
 def test_steady_period_and_merge_plan():
     assert plan_lib.steady_period(DiceConfig.dice(), 4,
                                   experts_per_token=2) == 2
