@@ -1,13 +1,22 @@
 """Shared benchmark infrastructure.
 
-Trains (once, checkpoint-cached) the CPU-sized DiT-MoE used by all quality
-benchmarks, and provides timed sampling under each parallelism schedule.
-Quality numbers are FID-proxy / paired-MSE on synthetic latents — the
-validated claim is the paper's ORDERING (DESIGN.md Sec. 8); latency/speedup
-numbers are modeled on the paper's 8-device setup from the roofline terms.
+Trains (once, disk-cached keyed by config hash) the CPU-sized DiT-MoE used
+by all quality benchmarks, and provides timed sampling under each
+parallelism schedule.  Quality numbers are FID-proxy / paired-MSE on
+synthetic latents — the validated claim is the paper's ORDERING (DESIGN.md
+Sec. 8); latency/speedup numbers are modeled on the paper's 8-device setup
+from the roofline terms.
+
+Environment knobs (all read lazily, so ``benchmarks.run`` and standalone
+``--smoke`` mains can set them before the first use):
+  BENCH_TRAIN_STEPS   tiny-model training steps (default 300)
+  BENCH_SAMPLES       samples per quality measurement (default 64)
+  BENCH_SEED          sampling-noise PRNG seed (default 7) — threaded into
+                      every ``sample_method`` call for reproducible CSV rows
 """
 from __future__ import annotations
 
+import hashlib
 import os
 import time
 from typing import Dict, Optional, Tuple
@@ -27,10 +36,27 @@ from repro.models.dit_moe import init_dit
 from repro.optim.adamw import adamw_init
 from repro.sampling.rectified_flow import rf_sample, rf_train_step
 
-CKPT = os.path.join(os.path.dirname(__file__), "..", "results",
-                    "dit_tiny.ckpt")
-TRAIN_STEPS = int(os.environ.get("BENCH_TRAIN_STEPS", "300"))
-N_SAMPLES = int(os.environ.get("BENCH_SAMPLES", "64"))
+CACHE_DIR = os.path.join(os.path.dirname(__file__), "..", "results", "cache")
+
+
+def train_steps() -> int:
+    return int(os.environ.get("BENCH_TRAIN_STEPS", "300"))
+
+
+def num_samples() -> int:
+    return int(os.environ.get("BENCH_SAMPLES", "64"))
+
+
+def bench_seed() -> int:
+    return int(os.environ.get("BENCH_SEED", "7"))
+
+
+def _cfg_hash(cfg, *extra) -> str:
+    """Key for the on-disk caches: the full (frozen-dataclass) config repr
+    plus any run parameters that change the artifact — a stale cache under
+    a different cfg can never be loaded by accident."""
+    payload = repr(cfg) + "|" + "|".join(map(str, extra))
+    return hashlib.sha1(payload.encode()).hexdigest()[:12]
 
 SCHEDULES = {
     "expert_parallelism": (DiceConfig.sync_ep(), 0),
@@ -45,13 +71,27 @@ def tiny_cfg():
     return tiny()
 
 
-def get_trained_params(cfg=None, *, steps: int = TRAIN_STEPS):
-    """Train once and cache; later benchmark tables reuse the checkpoint."""
+def smoke_cfg(name: str):
+    """The CI-sized model the serving/compression smokes share — one
+    definition so the shrink pattern (and the disk-cache key) cannot
+    silently diverge between benchmarks."""
+    return tiny().replace(name=name, num_layers=4, d_model=48, d_ff=192,
+                          num_heads=4, num_kv_heads=4, head_dim=12,
+                          moe_d_ff=48, patch_tokens=16, capacity_factor=4.0)
+
+
+def get_trained_params(cfg=None, *, steps: Optional[int] = None):
+    """Train once per (cfg, steps) and cache the checkpoint on disk, keyed
+    by the config hash — table1/table23/fig10/fig_compress all reuse it
+    instead of retraining the tiny model per benchmark invocation, and a
+    changed config can never pick up a stale checkpoint."""
     cfg = cfg or tiny_cfg()
+    steps = train_steps() if steps is None else steps
     params0 = init_dit(jax.random.PRNGKey(0), cfg)
-    if os.path.exists(CKPT):
+    path = os.path.join(CACHE_DIR, f"dit_{_cfg_hash(cfg, steps)}.ckpt")
+    if os.path.exists(path):
         try:
-            return load_checkpoint(CKPT, params0)
+            return load_checkpoint(path, params0)
         except Exception:
             pass
     params, opt = params0, adamw_init(params0)
@@ -65,30 +105,43 @@ def get_trained_params(cfg=None, *, steps: int = TRAIN_STEPS):
         if i % 50 == 0:
             print(f"# train step {i}, loss {float(m['loss']):.4f}",
                   flush=True)
-    os.makedirs(os.path.dirname(CKPT), exist_ok=True)
-    save_checkpoint(CKPT, params, step=steps)
+    os.makedirs(CACHE_DIR, exist_ok=True)
+    save_checkpoint(path, params, step=steps)
     return params
 
 
-def reference_set(cfg, n=N_SAMPLES):
-    """'Real' data for the FID proxy."""
+def reference_set(cfg, n: Optional[int] = None):
+    """'Real' data for the FID proxy (disk-cached keyed by cfg hash)."""
+    n = num_samples() if n is None else n
+    path = os.path.join(CACHE_DIR, f"ref_{_cfg_hash(cfg, n)}.npy")
+    if os.path.exists(path):
+        try:
+            return jnp.asarray(np.load(path))
+        except Exception:
+            pass
     x, _ = gaussian_mixture_latents(jax.random.PRNGKey(99), batch=n,
                                     tokens=cfg.patch_tokens,
                                     channels=cfg.in_channels,
                                     num_classes=cfg.num_classes)
+    os.makedirs(CACHE_DIR, exist_ok=True)
+    np.save(path, np.asarray(x))
     return x
 
 
 def sample_method(params, cfg, method: str, *, num_steps: int,
-                  n=N_SAMPLES, guidance=1.5) -> Tuple[jnp.ndarray, Dict, float]:
+                  n: Optional[int] = None,
+                  guidance=1.5) -> Tuple[jnp.ndarray, Dict, float]:
     """Returns (samples, stats, us_per_step) for a schedule by name.
     stats includes the StepPlan engine's compile accounting
-    (num_plan_variants / jit_cache_size)."""
+    (num_plan_variants / jit_cache_size).  Sampling noise is keyed by
+    BENCH_SEED (``--seed`` on benchmarks/run.py) for reproducible rows."""
+    n = num_samples() if n is None else n
     dcfg, ndev = SCHEDULES[method]
     classes = jnp.arange(n) % cfg.num_classes
     t0 = time.time()
     samples, stats = rf_sample(params, cfg, dcfg, num_steps=num_steps,
-                               classes=classes, key=jax.random.PRNGKey(7),
+                               classes=classes,
+                               key=jax.random.PRNGKey(bench_seed()),
                                guidance=guidance, patch_parallel_ndev=ndev)
     jax.block_until_ready(samples)
     us_per_step = (time.time() - t0) / num_steps * 1e6

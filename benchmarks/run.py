@@ -14,7 +14,7 @@ import time
 
 TABLES = ["table1_quality", "table23_fewer_steps", "table4_ablation",
           "table5_comm_fraction", "fig9_scaling", "fig10_tradeoff",
-          "serve_throughput"]
+          "fig_compress_tradeoff", "serve_throughput"]
 
 
 def main() -> None:
@@ -22,7 +22,12 @@ def main() -> None:
     ap.add_argument("--only", default=None, help="comma list of modules")
     ap.add_argument("--fast", action="store_true",
                     help="fewer train steps / samples (smoke)")
+    ap.add_argument("--seed", type=int, default=None,
+                    help="sampling-noise seed threaded into every benchmark "
+                         "(BENCH_SEED) for reproducible CSV rows")
     args = ap.parse_args()
+    if args.seed is not None:
+        os.environ["BENCH_SEED"] = str(args.seed)
     if args.fast:
         os.environ.setdefault("BENCH_TRAIN_STEPS", "60")
         os.environ.setdefault("BENCH_SAMPLES", "32")

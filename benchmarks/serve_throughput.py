@@ -29,6 +29,7 @@ import jax
 import numpy as np
 
 from benchmarks import common
+from repro.compress.codecs import CODEC_KINDS, CompressConfig
 from repro.configs.dit_moe_xl import tiny
 from repro.core.schedules import DiceConfig
 from repro.launch.serve import (DiceServer, Request, SCHEDULES,
@@ -65,7 +66,7 @@ def fifo_schedule(arrivals: List[float], *, max_batch: int,
 
 def run(*, schedule: str = "dice", requests: int = 32, max_batch: int = 8,
         num_steps: int = 8, rate: float = 0.5, seed: int = 0,
-        smoke: bool = False, ep: int = 0) -> dict:
+        smoke: bool = False, ep: int = 0, codec: str = "none") -> dict:
     if os.environ.get("BENCH_SMOKE") == "1" and not smoke:
         # benchmarks.run --fast sets BENCH_SMOKE: shrink like the other tables
         smoke = True
@@ -74,10 +75,7 @@ def run(*, schedule: str = "dice", requests: int = 32, max_batch: int = 8,
                                           min(max_batch, 4))
     cfg = tiny()
     if smoke:
-        cfg = cfg.replace(name="dit-moe-serve-smoke", num_layers=4,
-                          d_model=48, d_ff=192, num_heads=4, num_kv_heads=4,
-                          head_dim=12, moe_d_ff=48, patch_tokens=16,
-                          capacity_factor=4.0)
+        cfg = common.smoke_cfg("dit-moe-serve-smoke")
     mesh = None
     if ep:
         # mesh-native continuous engine (DESIGN.md §10): slots shard over
@@ -87,7 +85,8 @@ def run(*, schedule: str = "dice", requests: int = 32, max_batch: int = 8,
         max_batch = max(max_batch, ep)
         max_batch -= max_batch % ep
     dcfg = SCHEDULES[schedule]()
-    server = DiceServer(cfg, dcfg, seed=0, mesh=mesh)
+    server = DiceServer(cfg, dcfg, seed=0, mesh=mesh,
+                        compress=CompressConfig(codec=codec))
     reqs = [Request(class_id=i % cfg.num_classes, rid=i)
             for i in range(requests)]
     arrivals = poisson_arrivals(requests, rate, seed)
@@ -108,7 +107,10 @@ def run(*, schedule: str = "dice", requests: int = 32, max_batch: int = 8,
                             num_steps=num_steps,
                             key=jax.random.PRNGKey(seed))
 
-    t_step = modeled_step_latency(cfg, dcfg, n_dev=server.n_dev,
+    # server.dcfg, not the local dcfg: DiceServer threads the CompressConfig
+    # into its schedule config, and the codec-aware light_scale of the
+    # latency model must see it
+    t_step = modeled_step_latency(cfg, server.dcfg, n_dev=server.n_dev,
                                   local_batch=max(1, max_batch
                                                   // server.n_dev))["t_step_s"]
     fifo_slot_steps = fifo_batches * max_batch * num_steps
@@ -129,14 +131,25 @@ def run(*, schedule: str = "dice", requests: int = 32, max_batch: int = 8,
         "fifo_dispatch_bytes_total": fstats["dispatch_bytes_total"],
         "fifo_a2a_bytes_per_layer": fstats["a2a_bytes_per_layer"],
         "fifo_buffer_bytes": fstats["buffer_bytes"],
+        # wire vs raw payload (Sec. 11): ratio > 1 iff a codec is active
+        "codec": codec,
+        "cont_wire_bytes_total": cstats["wire_bytes_total"],
+        "cont_raw_bytes_total": cstats["raw_bytes_total"],
+        "cont_compression_ratio": cstats["raw_bytes_total"]
+        / max(cstats["wire_bytes_total"], 1.0),
+        "fifo_wire_bytes_total": fstats["wire_bytes_total"],
+        "fifo_raw_bytes_total": fstats["raw_bytes_total"],
     }
+    tag = f"serve_throughput/{schedule}" \
+          + (f"+{codec}" if codec != "none" else "") + f"/b{max_batch}"
     common.csv_row(
-        f"serve_throughput/{schedule}/b{max_batch}",
+        tag,
         res["cont_req_per_s"],
         f"fifo_req_per_s={res['fifo_req_per_s']:.4g} "
         f"cont_padded={res['cont_padded_slot_steps']} "
         f"fifo_padded={res['fifo_padded_slot_steps']} "
-        f"occupancy={res['cont_occupancy']:.3f}")
+        f"occupancy={res['cont_occupancy']:.3f} "
+        f"compression={res['cont_compression_ratio']:.2f}")
     return res
 
 
@@ -155,6 +168,9 @@ def main():
                     help="run mesh-native over an N-way 'ep' axis (needs N "
                          "devices, e.g. XLA_FLAGS="
                          "--xla_force_host_platform_device_count=N)")
+    ap.add_argument("--codec", choices=list(CODEC_KINDS), default="none",
+                    help="wire codec for staleness-era payloads "
+                         "(DESIGN.md Sec. 11)")
     args = ap.parse_args()
     if args.smoke:
         args.requests = min(args.requests, 12)
@@ -163,7 +179,8 @@ def main():
 
     res = run(schedule=args.schedule, requests=args.requests,
               max_batch=args.max_batch, num_steps=args.steps,
-              rate=args.rate, seed=args.seed, smoke=args.smoke, ep=args.ep)
+              rate=args.rate, seed=args.seed, smoke=args.smoke, ep=args.ep,
+              codec=args.codec)
     for k, v in res.items():
         print(f"  {k:28s} {v:.6g}" if isinstance(v, float)
               else f"  {k:28s} {v}")
@@ -172,7 +189,21 @@ def main():
     assert res["jit_cache_size"] == res["num_plan_variants"], (
         "slot recycling must not grow the jit cache beyond the plan "
         "variants")
-    print("OK: continuous < fifo padded-slot steps, jit cache == variants")
+    # the planner only attaches codecs to staleness schedules; sync /
+    # staggered_batch legitimately ignore --codec (wire == raw)
+    compresses = args.codec != "none" and args.schedule in (
+        "dice", "interweaved", "displaced")
+    if compresses:
+        assert res["cont_compression_ratio"] > 1.0, (
+            "an active wire codec must put fewer bytes on the wire than "
+            "the lossless payloads")
+        assert res["cont_wire_bytes_total"] < res["cont_raw_bytes_total"]
+    elif args.codec != "none":
+        assert res["cont_wire_bytes_total"] == res["cont_raw_bytes_total"], (
+            f"schedule {args.schedule!r} plans no codec; wire must equal raw")
+    print("OK: continuous < fifo padded-slot steps, jit cache == variants"
+          + (f", wire compression {res['cont_compression_ratio']:.2f}x"
+             if compresses else ""))
 
 
 if __name__ == "__main__":

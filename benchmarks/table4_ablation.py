@@ -37,7 +37,7 @@ def run(num_steps: int = 50):
     cfg = common.tiny_cfg()
     params = common.get_trained_params(cfg)
     ref_data = common.reference_set(cfg)
-    classes = jnp.arange(common.N_SAMPLES) % cfg.num_classes
+    classes = jnp.arange(common.num_samples()) % cfg.num_classes
     sync_samples, _, _ = common.sample_method(
         params, cfg, "expert_parallelism", num_steps=num_steps)
 
@@ -47,7 +47,8 @@ def run(num_steps: int = 50):
         t0 = time.time()
         samples, stats = rf_sample(params, cfg, dcfg, num_steps=num_steps,
                                    classes=classes,
-                                   key=jax.random.PRNGKey(7), guidance=1.5)
+                                   key=jax.random.PRNGKey(common.bench_seed()),
+                                   guidance=1.5)
         jax.block_until_ready(samples)
         us = (time.time() - t0) / num_steps * 1e6
         fid = fid_proxy(samples, ref_data)

@@ -1,0 +1,8 @@
+"""Wire-codec subsystem: residual compression of staleness-era payloads
+(DESIGN.md Sec. 11).  See :mod:`repro.compress.codecs`."""
+from repro.compress.codecs import (CODEC_KINDS, CodecSpec, CompressConfig,
+                                   Encoded, apply, decode, encode,
+                                   encoded_nbytes, roundtrip)
+
+__all__ = ["CODEC_KINDS", "CodecSpec", "CompressConfig", "Encoded",
+           "apply", "decode", "encode", "encoded_nbytes", "roundtrip"]

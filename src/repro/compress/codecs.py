@@ -1,0 +1,163 @@
+"""Wire-codec subsystem: residual compression of staleness-era payloads
+(DESIGN.md Sec. 11).
+
+DICE reduces *how often* expert-parallel payloads move; this layer shrinks
+*how many bytes* each payload costs by exploiting the temporal redundancy
+of consecutive diffusion steps: the activation a MoE layer dispatches at
+step ``s`` is close to what it dispatched at ``s-1``, and the staleness
+cache (`x_prev`-style bases, `h_cache`) is exactly that predictor.  A
+codec therefore transmits a **quantized residual against the cache**:
+
+    wire(s)  = encode(value(s) - base(s))
+    value'(s) = base(s) + decode(wire(s))        # what the receiver sees
+    base(s+1) = value'(s)                        # decoded reconstruction
+
+Both endpoints advance the base from the *decoded* reconstruction (never
+the raw value), so sender and receiver stay bit-synchronized without any
+side channel — the invariant `repro.core.staleness` maintains via the
+``c_base`` buffer.
+
+The codecs are hashable :class:`CodecSpec` values so a planned
+:class:`repro.core.plan.LayerAction` can carry one as a static jit-cache
+key; ``wire_bytes_per_row`` is the exact decoded-bytes accounting both the
+plan (`LayerAction.dispatch_bytes`) and the executed layer
+(`MoEAux.dispatch_bytes`) report.  Pure-JAX references live in
+:mod:`repro.compress.ref`; the fused int8 quantize-pack Pallas kernel in
+:mod:`repro.kernels.residual_codec`.
+
+This module must stay import-light (jax only): `repro.core.plan` and
+`repro.core.schedules` both import it.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import NamedTuple, Optional, Tuple
+
+import jax.numpy as jnp
+
+from repro.compress import ref as _ref
+
+CODEC_KINDS = ("none", "int8_residual", "topk_residual")
+
+
+@dataclass(frozen=True)
+class CodecSpec:
+    """One wire codec, fully static (hashable -> plannable).
+
+    kind
+        "none"           identity; bit-exact, full-width wire
+        "int8_residual"  per-row symmetric int8 quantization of the
+                         residual + one f32 scale per row
+        "topk_residual"  sparse delta: the ``topk_frac`` largest-magnitude
+                         residual entries per row, value+index pairs
+    """
+    kind: str = "int8_residual"
+    topk_frac: float = 0.125
+
+    def __post_init__(self):
+        if self.kind not in CODEC_KINDS:
+            raise ValueError(f"unknown codec kind {self.kind!r}; "
+                             f"known: {CODEC_KINDS}")
+        if not (0.0 < self.topk_frac <= 1.0):
+            raise ValueError(f"topk_frac must be in (0, 1], got "
+                             f"{self.topk_frac}")
+
+    def keep_count(self, d: int) -> int:
+        return max(1, int(d * self.topk_frac))
+
+    # -- exact decoded-bytes accounting -------------------------------------
+    def wire_bytes_per_row(self, d: int, itemsize: int = 4) -> int:
+        """Bytes one length-``d`` payload row costs on the wire.  Exact:
+        the hypothesis suite asserts ``encoded_nbytes(encode(...)) ==
+        rows * wire_bytes_per_row`` for every codec."""
+        if self.kind == "none":
+            return d * itemsize
+        if self.kind == "int8_residual":
+            return d + 4                         # int8 payload + f32 scale
+        return self.keep_count(d) * (itemsize + 4)   # values + int32 indices
+
+    def wire_ratio(self, d: int, itemsize: int = 4) -> float:
+        """Compressed / raw wire size (<= 1) for a length-``d`` row."""
+        return self.wire_bytes_per_row(d, itemsize) / float(d * itemsize)
+
+
+@dataclass(frozen=True)
+class CompressConfig:
+    """User-facing compression knob threaded through ``DiceConfig`` /
+    ``DiceServer`` / the serve CLI.  ``codec="none"`` means compression is
+    OFF and planning is bit-identical to a config with no CompressConfig
+    at all (the planner normalizes it away)."""
+    codec: str = "none"
+    topk_frac: float = 0.125
+
+    def __post_init__(self):
+        if self.codec not in CODEC_KINDS:
+            raise ValueError(f"unknown codec {self.codec!r}; "
+                             f"known: {CODEC_KINDS}")
+
+    def spec(self) -> Optional[CodecSpec]:
+        if self.codec == "none":
+            return None
+        return CodecSpec(kind=self.codec, topk_frac=self.topk_frac)
+
+
+class Encoded(NamedTuple):
+    """A codec's wire representation: the arrays that would be transmitted."""
+    kind: str
+    data: Tuple[jnp.ndarray, ...]
+    d: int                     # original row width (needed by topk decode)
+
+
+def encode(spec: CodecSpec, r: jnp.ndarray) -> Encoded:
+    """Encode residual rows r (..., d) into their wire representation."""
+    if spec.kind == "none":
+        return Encoded(kind="none", data=(r,), d=r.shape[-1])
+    if spec.kind == "int8_residual":
+        q, scale = _ref.int8_encode(r)
+        return Encoded(kind="int8_residual", data=(q, scale), d=r.shape[-1])
+    vals, idx = _ref.topk_encode(r, spec.keep_count(r.shape[-1]))
+    return Encoded(kind="topk_residual", data=(vals, idx), d=r.shape[-1])
+
+
+def decode(spec: CodecSpec, enc: Encoded) -> jnp.ndarray:
+    if spec.kind == "none":
+        return enc.data[0]
+    if spec.kind == "int8_residual":
+        return _ref.int8_decode(*enc.data)
+    return _ref.topk_decode(enc.data[0], enc.data[1], enc.d)
+
+
+def encoded_nbytes(enc: Encoded) -> int:
+    """Exact bytes of the wire representation (the measured side of the
+    planned == measured bytes contract)."""
+    return int(sum(a.size * a.dtype.itemsize for a in enc.data))
+
+
+def roundtrip(spec: CodecSpec, r: jnp.ndarray) -> jnp.ndarray:
+    """decode(encode(r)) — what the receiver reconstructs of residual r."""
+    return decode(spec, encode(spec, r))
+
+
+def apply(spec: Optional[CodecSpec], value: jnp.ndarray,
+          base: jnp.ndarray, *, use_pallas: bool = False) -> jnp.ndarray:
+    """Transmit ``value`` as a quantized residual against ``base``; return
+    the receiver-side reconstruction (f32 math, cast back to value.dtype).
+
+    This is the single wire-crossing primitive `repro.core.moe` wraps
+    around the dispatch/combine all-to-alls.  ``use_pallas`` routes the
+    int8 codec through the fused quantize-pack kernel
+    (`repro.kernels.ops.residual_int8_pallas`); other codecs run the
+    pure-JAX reference.
+    """
+    if spec is None or spec.kind == "none":
+        return value
+    if spec.kind == "int8_residual" and use_pallas:
+        from repro.kernels.ops import residual_int8_pallas
+        lead, d = value.shape[:-1], value.shape[-1]
+        v2 = value.reshape(-1, d)
+        b2 = jnp.broadcast_to(base, value.shape).reshape(-1, d)
+        _, _, recon = residual_int8_pallas(v2, b2)
+        return recon.reshape(lead + (d,)).astype(value.dtype)
+    v = value.astype(jnp.float32)
+    b = base.astype(jnp.float32)
+    return (b + roundtrip(spec, v - b)).astype(value.dtype)

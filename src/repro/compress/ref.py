@@ -1,0 +1,65 @@
+"""Pure-JAX reference codecs (the oracles the wire-codec tests assert
+against, and the implementation the CPU path runs).
+
+Each codec maps a residual tensor ``r`` with rows along the last axis to a
+compact wire representation and back.  The *reconstruction* — not the raw
+value — is what the receiver sees and what the staleness cache stores as
+the next step's residual base (DESIGN.md Sec. 11), so encode/decode are
+deliberately deterministic: the sender can mirror the receiver's state by
+running the same decode locally.
+
+  int8  r -> (q int8, scale f32)   per-row symmetric scale, |err| <= scale/2
+  topk  r -> (vals, idx int32)     keep the largest-|.| fraction, rest -> 0
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+INT8_EPS = 1e-8
+
+
+def int8_encode(r: jnp.ndarray, *, eps: float = INT8_EPS):
+    """r: (..., d) f32 residual -> (q int8 (..., d), scale f32 (..., 1))."""
+    amax = jnp.max(jnp.abs(r), axis=-1, keepdims=True)
+    scale = jnp.maximum(amax / 127.0, eps).astype(jnp.float32)
+    q = jnp.clip(jnp.round(r / scale), -127.0, 127.0).astype(jnp.int8)
+    return q, scale
+
+
+def int8_decode(q: jnp.ndarray, scale: jnp.ndarray) -> jnp.ndarray:
+    return q.astype(jnp.float32) * scale
+
+
+def topk_encode(r: jnp.ndarray, keep: int):
+    """Keep the ``keep`` largest-magnitude entries of each row.
+
+    Returns (vals (..., keep), idx int32 (..., keep)); kept entries are
+    transmitted exactly (no quantization), everything else decodes to 0.
+    """
+    _, idx = jax.lax.top_k(jnp.abs(r), keep)
+    vals = jnp.take_along_axis(r, idx, axis=-1)
+    return vals, idx.astype(jnp.int32)
+
+
+def topk_decode(vals: jnp.ndarray, idx: jnp.ndarray, d: int) -> jnp.ndarray:
+    lead = vals.shape[:-1]
+    keep = vals.shape[-1]
+    n = 1
+    for s in lead:
+        n *= s
+    vals2 = vals.reshape(n, keep)
+    idx2 = idx.reshape(n, keep).astype(jnp.int32)
+    rows = jnp.arange(n)[:, None]
+    out = jnp.zeros((n, d), vals.dtype).at[rows, idx2].set(vals2)
+    return out.reshape(lead + (d,))
+
+
+def int8_roundtrip(r: jnp.ndarray, *, eps: float = INT8_EPS) -> jnp.ndarray:
+    q, scale = int8_encode(r, eps=eps)
+    return int8_decode(q, scale)
+
+
+def topk_roundtrip(r: jnp.ndarray, keep: int) -> jnp.ndarray:
+    vals, idx = topk_encode(r, keep)
+    return topk_decode(vals, idx, r.shape[-1])

@@ -6,5 +6,7 @@ staleness.py  — staleness buffers threaded through the sampling loop
 selective.py  — layer-level selective synchronization policies
 conditional.py— token-level conditional communication (router-score gated)
 patch_parallel.py — DistriFusion baseline (displaced patch parallelism)
+(wire codecs — residual compression of the payloads the schedules move —
+live in the sibling package repro.compress, DESIGN.md Sec. 11)
 """
 from repro.core.schedules import Schedule, DiceConfig

@@ -72,13 +72,20 @@ def effective_k(step: int, k: int, *, stride: int, policy: str = "low") -> int:
     return policy_effective_k(policy, k)
 
 
-def comm_volume_fraction(k: int, stride: int, policy: str = "low") -> float:
-    """Long-run mean all-to-all volume relative to full dispatch."""
+def comm_volume_fraction(k: int, stride: int, policy: str = "low", *,
+                         light_scale: float = 1.0) -> float:
+    """Long-run mean all-to-all volume relative to full dispatch.
+
+    ``light_scale`` (<= 1) scales the light steps' per-rank volume — the
+    wire codec's compression ratio (``CodecSpec.wire_ratio``) when light
+    payloads are transmitted as quantized residuals while refresh steps
+    stay lossless (DESIGN.md Sec. 11)."""
     if stride <= 1:
         return 1.0
     kf = {"low": 1, "high": k - 1, "random": k / 2}[policy]
-    # refresh step sends k ranks, the other (stride-1) steps send kf ranks
-    return (k + (stride - 1) * kf) / (stride * k)
+    # refresh step sends k ranks fresh; the other (stride-1) steps send kf
+    # ranks, each at the codec's light-step wire ratio
+    return (k + (stride - 1) * kf * light_scale) / (stride * k)
 
 
 def expected_dispatch_fraction(k: int, stride: int, policy: str,

@@ -32,6 +32,7 @@ import jax.numpy as jnp
 
 from repro.common import compat
 from repro.common.config import ModelConfig
+from repro.compress import codecs as codec_lib
 from repro.models.layers import dense_init
 
 
@@ -193,10 +194,14 @@ def load_balance_loss(probs, idx, E: int, ep_axis: Optional[str] = None):
 class MoEAux(NamedTuple):
     lb_loss: jnp.ndarray
     dropped_frac: jnp.ndarray      # capacity drops over DISPATCHED pairs only
-    dispatch_bytes: jnp.ndarray    # per-device all-to-all payload (one way)
+    dispatch_bytes: jnp.ndarray    # per-device all-to-all payload (one way,
+    #                                AS TRANSMITTED: codec-compressed)
     pair_vals: Optional[jnp.ndarray]
     scores: Optional[jnp.ndarray]
     pair_keep: Optional[jnp.ndarray] = None   # (T, K) survived dispatch
+    raw_dispatch_bytes: Optional[jnp.ndarray] = None  # same payload, lossless
+    wire_payload: Optional[jnp.ndarray] = None  # (T, d) decoded dispatch
+    #                                payload — the codec's next residual base
 
 
 def moe_forward(p, x, cfg: ModelConfig, *,
@@ -206,7 +211,9 @@ def moe_forward(p, x, cfg: ModelConfig, *,
                 ep_axis: Optional[str] = None,
                 key=None,
                 use_pallas: bool = False,
-                want_pair_vals: bool = False):
+                want_pair_vals: bool = False,
+                codec: Optional[codec_lib.CodecSpec] = None,
+                dispatch_base: Optional[jnp.ndarray] = None):
     """MoE layer forward.  x: (T, d) flat tokens (per-device shard if EP).
 
     ``ep_axis``: mesh axis name for expert parallelism — call inside
@@ -217,6 +224,19 @@ def moe_forward(p, x, cfg: ModelConfig, *,
     light step's smaller ``effective_k`` shrinks the (E, C, d) buffer each
     device puts on the wire — ``aux.dispatch_bytes`` reports exactly that
     one-way per-device payload.
+
+    ``codec`` / ``dispatch_base`` (DESIGN.md Sec. 11): with a codec, both
+    collectives carry quantized residuals instead of raw activations.  The
+    dispatch payload is encoded against ``dispatch_base`` (the decoded
+    payload of the previous step; zeros if None), decoded on arrival —
+    routing still sees the full-precision ``x`` (routing is local, only
+    the wire is lossy) — and the reconstruction is returned as
+    ``aux.wire_payload`` for the caller to store as the next base.  The
+    combine payload is encoded against ``h_cache`` (the per-(token, rank)
+    expert-output cache — both endpoints hold it), so its reconstruction
+    feeds the weighted sum AND becomes the next cache entry via
+    ``aux.pair_vals``.  ``aux.dispatch_bytes`` reports the wire
+    (compressed) payload, ``aux.raw_dispatch_bytes`` the lossless size.
     """
     T, d = x.shape
     E = cfg.num_experts
@@ -224,7 +244,15 @@ def moe_forward(p, x, cfg: ModelConfig, *,
     if capacity is None:
         capacity = default_capacity(T, cfg)
     plan = make_plan(idx, E, capacity, fresh_mask=fresh_mask)
-    buf = dispatch(x, plan, E, capacity)                        # (E, C, d)
+    # ---- wire codec, dispatch direction: the (E, C, d) buffer scattered
+    # below holds rows of x_wire, so encoding per token before the scatter
+    # is exactly encoding the buffer the all-to-all moves
+    x_wire = x
+    if codec is not None:
+        base = dispatch_base if dispatch_base is not None \
+            else jnp.zeros_like(x)
+        x_wire = codec_lib.apply(codec, x, base, use_pallas=use_pallas)
+    buf = dispatch(x_wire, plan, E, capacity)                   # (E, C, d)
 
     if ep_axis is None:
         buf_out = expert_ffn(p, buf, act=cfg.act, use_pallas=use_pallas)
@@ -256,6 +284,22 @@ def moe_forward(p, x, cfg: ModelConfig, *,
 
     y, pair_vals, pair_keep = combine(buf_out, plan, scores, T,
                                       h_cache=h_cache, fresh_mask=fresh_mask)
+    if codec is not None and h_cache is not None:
+        # ---- wire codec, combine direction: freshly transmitted pairs
+        # arrive as residuals against the shared (token, rank) cache; the
+        # reconstruction feeds the weighted sum and (via aux.pair_vals)
+        # becomes the next cache entry, keeping both endpoints' bases in
+        # lockstep.  Masked pairs already read h_cache; dropped pairs
+        # stay zero (nothing arrived for them).
+        wire_ok = pair_keep if fresh_mask is None \
+            else (pair_keep & fresh_mask)
+        recon = codec_lib.apply(codec, pair_vals.astype(jnp.float32),
+                                h_cache.astype(jnp.float32),
+                                use_pallas=use_pallas)
+        pair_vals = jnp.where(wire_ok[..., None],
+                              recon.astype(pair_vals.dtype), pair_vals)
+        y = jnp.einsum("tk,tkd->td", scores.astype(jnp.float32),
+                       pair_vals.astype(jnp.float32))
     if cfg.num_shared_experts:
         y = y + shared_expert(p, x, act=cfg.act).astype(y.dtype)
 
@@ -266,12 +310,17 @@ def moe_forward(p, x, cfg: ModelConfig, *,
     kept = plan.keep.sum().astype(jnp.float32)
     dropped_frac = jnp.where(dispatched > 0,
                              1.0 - kept / jnp.maximum(dispatched, 1.0), 0.0)
+    itemsize = jnp.dtype(x.dtype).itemsize
+    per_row = (codec.wire_bytes_per_row(d, itemsize)
+               if codec is not None else d * itemsize)
     aux = MoEAux(
         lb_loss=load_balance_loss(probs, idx, E, ep_axis=ep_axis),
         dropped_frac=dropped_frac,
-        dispatch_bytes=jnp.asarray(E * capacity * d * jnp.dtype(x.dtype).itemsize),
+        dispatch_bytes=jnp.asarray(E * capacity * per_row),
         pair_vals=pair_vals if (want_pair_vals or fresh_mask is not None) else None,
         scores=scores if (want_pair_vals or fresh_mask is not None) else None,
         pair_keep=pair_keep if (want_pair_vals or fresh_mask is not None) else None,
+        raw_dispatch_bytes=jnp.asarray(E * capacity * d * itemsize),
+        wire_payload=x_wire if codec is not None else None,
     )
     return y.astype(x.dtype), aux

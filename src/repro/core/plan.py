@@ -31,6 +31,7 @@ from __future__ import annotations
 from dataclasses import dataclass, field
 from typing import Callable, Dict, List, Optional, Tuple
 
+from repro.compress.codecs import CodecSpec
 from repro.core import conditional
 from repro.core.selective import sync_layer_mask
 
@@ -59,6 +60,19 @@ class LayerAction:
         means the model's full experts_per_token.
     want_cache
         maintain the per-(token, rank) expert-output cache h_cache.
+    codec
+        wire codec for this step's payloads (DESIGN.md Sec. 11): the
+        dispatch/combine all-to-alls move quantized residuals against the
+        staleness cache instead of raw activations.  ``None`` is the
+        lossless wire.  Planned per step like ``dispatch_capacity``:
+        refresh steps stay lossless while light/stale steps compress, and
+        the (hashable) spec keys the jit cache exactly like every other
+        field.
+    store_base
+        refresh the residual-base buffer ``c_base`` from this step's
+        losslessly transmitted payload, so the next compressed step has a
+        fresh predictor.  Codec'd steps write the base implicitly (the
+        decoded reconstruction); see ``writes_c_base``.
     """
     mode: str = "sync"
     store_y: bool = False
@@ -66,10 +80,20 @@ class LayerAction:
     mask_policy: Optional[str] = None
     effective_k: Optional[int] = None
     want_cache: bool = False
+    codec: Optional[CodecSpec] = None
+    store_base: bool = False
 
     def __post_init__(self):
         if self.mode not in ("sync", "displaced", "interweaved", "staggered"):
             raise ValueError(f"unknown LayerAction mode: {self.mode}")
+        if self.codec is not None and self.codec.kind == "none":
+            # normalize: a "none" codec IS the lossless wire, and must be
+            # indistinguishable from no codec (bit-identity + plan equality)
+            object.__setattr__(self, "codec", None)
+        if self.codec is not None and self.mode == "staggered":
+            raise ValueError("staggered mode does not support a wire codec "
+                             "(half-batch payloads have no per-batch "
+                             "residual base)")
 
     # -- buffer read/write accounting (drives the derived properties) -------
     @property
@@ -89,9 +113,20 @@ class LayerAction:
         return self.store_x or self.mode in ("displaced", "staggered")
 
     @property
+    def writes_c_base(self) -> bool:
+        """Keeps the residual-base buffer for the wire codec: implicitly
+        when a codec is attached (the decoded reconstruction becomes the
+        next base), explicitly via ``store_base`` on lossless refresh
+        steps."""
+        return self.codec is not None or self.store_base
+
+    @property
     def num_buffers(self) -> int:
-        """Persistent (T, d)-sized buffers this action keeps alive."""
-        return int(self.writes_y_buf) + int(self.writes_x_prev)
+        """Persistent (T, d)-sized buffers this action keeps alive (the
+        codec's residual base counts: compression buys bandwidth with
+        memory)."""
+        return (int(self.writes_y_buf) + int(self.writes_x_prev)
+                + int(self.writes_c_base))
 
     @property
     def staleness(self) -> int:
@@ -112,10 +147,23 @@ class LayerAction:
 
     def dispatch_bytes(self, num_local_tokens: int, cfg, *,
                        itemsize: int = 4) -> int:
-        """One-way per-device all-to-all payload under this action.
-        ``itemsize`` is the activation dtype's byte width and must match
-        it for the planned == measured ``aux.dispatch_bytes`` contract:
-        4 for the f32 serving/test path, 2 to count a bf16 wire."""
+        """One-way per-device all-to-all payload under this action, *as it
+        goes on the wire*: with a codec attached each (expert, slot) row
+        costs ``CodecSpec.wire_bytes_per_row`` instead of ``d *
+        itemsize``.  ``itemsize`` is the activation dtype's byte width and
+        must match it for the planned == measured ``aux.dispatch_bytes``
+        contract: 4 for the f32 serving/test path, 2 to count a bf16
+        wire."""
+        cap = self.dispatch_capacity(num_local_tokens, cfg)
+        per_row = (self.codec.wire_bytes_per_row(cfg.d_model, itemsize)
+                   if self.codec is not None else cfg.d_model * itemsize)
+        return cfg.num_experts * cap * per_row
+
+    def raw_dispatch_bytes(self, num_local_tokens: int, cfg, *,
+                           itemsize: int = 4) -> int:
+        """The same payload uncompressed — the codec-off wire size the
+        serving stats report alongside ``dispatch_bytes`` so compression
+        ratios are visible in aggregates."""
         return (cfg.num_experts
                 * self.dispatch_capacity(num_local_tokens, cfg)
                 * cfg.d_model * itemsize)
@@ -249,6 +297,15 @@ def _uniform(action: LayerAction, n: int) -> Tuple[LayerAction, ...]:
     return (action,) * n
 
 
+def codec_spec_of(dcfg) -> Optional[CodecSpec]:
+    """The planned wire codec of ``dcfg``, or None.  The lossless-refresh
+    cadence is ``dcfg.cond_stride`` (shared with Conditional Communication
+    by design: light steps both shrink AND compress the payload, refresh
+    steps stay bit-lossless)."""
+    compress = getattr(dcfg, "compress", None)
+    return compress.spec() if compress is not None else None
+
+
 def _plan_sync(dcfg, num_moe_layers, step_idx, k) -> StepPlan:
     """Baseline EP: blocking dispatch+combine, no persistent buffers.
     ``is_warmup`` still tracks the config (the patch-parallel attention
@@ -259,24 +316,34 @@ def _plan_sync(dcfg, num_moe_layers, step_idx, k) -> StepPlan:
 
 def _plan_displaced(dcfg, num_moe_layers, step_idx, k) -> StepPlan:
     """DistriFusion-style: both collectives deferred, 2-step staleness."""
+    cspec = codec_spec_of(dcfg)
     if step_idx < dcfg.warmup_steps:
-        a = LayerAction(mode="sync", store_y=True, store_x=True)
+        a = LayerAction(mode="sync", store_y=True, store_x=True,
+                        store_base=cspec is not None)
         return StepPlan(schedule="displaced", is_warmup=True,
                         actions=_uniform(a, num_moe_layers))
+    refresh = conditional.is_refresh_step(step_idx, dcfg.cond_stride)
+    a = LayerAction(mode="displaced",
+                    codec=None if refresh else cspec,
+                    store_base=cspec is not None and refresh)
     return StepPlan(schedule="displaced", is_warmup=False,
-                    actions=_uniform(LayerAction(mode="displaced"),
-                                     num_moe_layers))
+                    actions=_uniform(a, num_moe_layers))
 
 
 def _plan_interweaved(dcfg, num_moe_layers, step_idx, k) -> StepPlan:
     """Dispatch in-step, combine deferred: 1-step staleness, 1 buffer."""
+    cspec = codec_spec_of(dcfg)
     if step_idx < dcfg.warmup_steps:
-        a = LayerAction(mode="sync", store_y=True)
+        a = LayerAction(mode="sync", store_y=True,
+                        store_base=cspec is not None)
         return StepPlan(schedule="interweaved", is_warmup=True,
                         actions=_uniform(a, num_moe_layers))
+    refresh = conditional.is_refresh_step(step_idx, dcfg.cond_stride)
+    a = LayerAction(mode="interweaved",
+                    codec=None if refresh else cspec,
+                    store_base=cspec is not None and refresh)
     return StepPlan(schedule="interweaved", is_warmup=False,
-                    actions=_uniform(LayerAction(mode="interweaved"),
-                                     num_moe_layers))
+                    actions=_uniform(a, num_moe_layers))
 
 
 def _plan_staggered_batch(dcfg, num_moe_layers, step_idx, k) -> StepPlan:
@@ -296,26 +363,45 @@ def _plan_staggered_batch(dcfg, num_moe_layers, step_idx, k) -> StepPlan:
 
 
 def _plan_dice(dcfg, num_moe_layers, step_idx, k) -> StepPlan:
-    """Interweaved + selective sync (deep layers) + conditional comm."""
+    """Interweaved + selective sync (deep layers) + conditional comm.
+
+    With a :class:`repro.compress.codecs.CompressConfig` attached the
+    async layers' light steps additionally compress their wire payloads
+    (quantized residuals vs the staleness cache); refresh steps and the
+    protected sync layers stay bit-lossless, and lossless steps of async
+    layers refresh the residual base (``store_base``) so the next light
+    step has a fresh predictor.
+    """
     warmup = step_idx < dcfg.warmup_steps
     sync_mask = sync_layer_mask(dcfg.sync_policy, num_moe_layers,
                                 fraction=dcfg.sync_fraction)
     want_cache = bool(dcfg.cond_comm)
     refresh = conditional.is_refresh_step(step_idx, dcfg.cond_stride)
+    cspec = codec_spec_of(dcfg)
     actions = []
     for i in range(num_moe_layers):
+        # async-in-steady-state layers keep a residual base; protected
+        # sync layers never compress and never need one (keeping the
+        # per-layer state pytree constant across all plan variants)
+        wants_codec = cspec is not None and not bool(sync_mask[i])
         if warmup or bool(sync_mask[i]):
             actions.append(LayerAction(mode="sync", store_y=True,
-                                       want_cache=want_cache))
+                                       want_cache=want_cache,
+                                       store_base=wants_codec))
         elif dcfg.cond_comm:
             actions.append(LayerAction(
                 mode="interweaved",
                 mask_policy=None if refresh else dcfg.cond_policy,
                 effective_k=k if refresh
                 else conditional.policy_effective_k(dcfg.cond_policy, k),
-                want_cache=True))
+                want_cache=True,
+                codec=None if refresh else cspec,
+                store_base=wants_codec and refresh))
         else:
-            actions.append(LayerAction(mode="interweaved"))
+            actions.append(LayerAction(
+                mode="interweaved",
+                codec=None if refresh else cspec,
+                store_base=wants_codec and refresh))
     return StepPlan(schedule="dice", is_warmup=warmup,
                     actions=tuple(actions))
 
@@ -368,8 +454,11 @@ def steady_state_plan_for(dcfg, num_moe_layers: int, *,
 # ---------------------------------------------------------------------------
 def steady_period(dcfg, num_moe_layers: int, *, experts_per_token: int,
                   max_period: int = 8) -> int:
-    """Period of the post-warmup plan sequence (1 for sync / displaced /
-    interweaved; ``cond_stride`` for DICE's refresh/light alternation).
+    """Period of the post-warmup plan sequence (1 for sync, and for
+    displaced / interweaved without a wire codec; ``cond_stride`` for
+    DICE's refresh/light alternation AND for any codec'd schedule, whose
+    steady state alternates lossless-refresh and compressed-light steps
+    on the same cadence — Sec. 11).
 
     The continuous-batching engine admits requests only at global ticks
     ``g % steady_period == 0`` ("plan-variant-aligned step boundaries"), so

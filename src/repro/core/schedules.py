@@ -18,7 +18,9 @@ from __future__ import annotations
 
 import enum
 from dataclasses import dataclass
-from typing import Union
+from typing import Optional, Union
+
+from repro.compress.codecs import CompressConfig
 
 
 class Schedule(enum.Enum):
@@ -58,6 +60,10 @@ class DiceConfig:
     cond_policy: str = "low"         # low | high | random (ablation Table 4)
     # -- cold start -----------------------------------------------------------
     warmup_steps: int = 2            # synchronized steps post cold start
+    # -- wire level: residual compression of staleness-era payloads -----------
+    # (DESIGN.md Sec. 11) None == lossless wire; the planner also treats a
+    # CompressConfig(codec="none") as lossless, so plans stay bit-identical
+    compress: Optional[CompressConfig] = None
 
     @staticmethod
     def sync_ep() -> "DiceConfig":
@@ -65,20 +71,21 @@ class DiceConfig:
                           cond_comm=False, warmup_steps=0)
 
     @staticmethod
-    def displaced() -> "DiceConfig":
+    def displaced(*, compress=None) -> "DiceConfig":
         return DiceConfig(schedule=Schedule.DISPLACED, sync_policy="none",
-                          cond_comm=False)
+                          cond_comm=False, compress=compress)
 
     @staticmethod
-    def interweaved() -> "DiceConfig":
+    def interweaved(*, compress=None) -> "DiceConfig":
         return DiceConfig(schedule=Schedule.INTERWEAVED, sync_policy="none",
-                          cond_comm=False)
+                          cond_comm=False, compress=compress)
 
     @staticmethod
-    def dice(*, sync_policy="deep", cond_stride=2, cond_policy="low") -> "DiceConfig":
+    def dice(*, sync_policy="deep", cond_stride=2, cond_policy="low",
+             compress=None) -> "DiceConfig":
         return DiceConfig(schedule=Schedule.DICE, sync_policy=sync_policy,
                           cond_comm=True, cond_stride=cond_stride,
-                          cond_policy=cond_policy)
+                          cond_policy=cond_policy, compress=compress)
 
     @staticmethod
     def staggered_batch() -> "DiceConfig":

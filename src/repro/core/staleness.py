@@ -41,17 +41,21 @@ class MoELayerState:
     y_buf: Optional[jnp.ndarray] = None     # (T,d) combined output of step s-1
     x_prev: Optional[jnp.ndarray] = None    # (T,d) displaced-only: step s-1 tokens
     h_cache: Optional[jnp.ndarray] = None   # (T,K,d) conditional-comm cache
+    c_base: Optional[jnp.ndarray] = None    # (T,d) wire-codec residual base:
+    #                                         the DECODED dispatch payload of
+    #                                         the last transmission (Sec. 11)
 
     def bytes(self) -> int:
         tot = 0
-        for a in (self.y_buf, self.x_prev, self.h_cache):
+        for a in (self.y_buf, self.x_prev, self.h_cache, self.c_base):
             if a is not None:
                 tot += a.size * a.dtype.itemsize
         return tot
 
 
 jax.tree_util.register_dataclass(
-    MoELayerState, data_fields=["y_buf", "x_prev", "h_cache"], meta_fields=[])
+    MoELayerState, data_fields=["y_buf", "x_prev", "h_cache", "c_base"],
+    meta_fields=[])
 
 
 def init_layer_states(num_moe_layers: int) -> Dict[int, MoELayerState]:
@@ -84,7 +88,9 @@ def init_planned_states(splan, *, num_tokens: int, d_model: int, k: int,
             x_prev=jnp.zeros((num_tokens, d_model), dtype)
             if any(a.writes_x_prev for a in acts) else None,
             h_cache=jnp.zeros((num_tokens, k, d_model), dtype)
-            if any(a.want_cache for a in acts) else None)
+            if any(a.want_cache for a in acts) else None,
+            c_base=jnp.zeros((num_tokens, d_model), dtype)
+            if any(a.writes_c_base for a in acts) else None)
     if mesh is not None:
         states = shard_states(states, mesh, ep_axis=ep_axis)
     return states
@@ -137,7 +143,7 @@ def reset_slots(states: Dict[int, MoELayerState], slot_mask, *,
         return jnp.where(m, jnp.zeros_like(buf), buf)
 
     return {i: MoELayerState(y_buf=_zero(s.y_buf), x_prev=_zero(s.x_prev),
-                             h_cache=_zero(s.h_cache))
+                             h_cache=_zero(s.h_cache), c_base=_zero(s.c_base))
             for i, s in states.items()}
 
 
@@ -202,7 +208,20 @@ def apply_layer_action(p, x, cfg: ModelConfig, action: LayerAction,
         capacity = action.dispatch_capacity(inp.shape[0], cfg)
         return moe_forward(p, inp, cfg, capacity=capacity, fresh_mask=m,
                            h_cache=cache, ep_axis=ep_axis, key=key,
-                           use_pallas=use_pallas, want_pair_vals=want_cache)
+                           use_pallas=use_pallas, want_pair_vals=want_cache,
+                           codec=action.codec, dispatch_base=state.c_base)
+
+    def next_base(payload, aux):
+        """Residual base for the next wire transmission (Sec. 11): the
+        DECODED reconstruction on codec'd steps (both endpoints advance
+        from what was actually received), the lossless payload on
+        ``store_base`` refresh steps, else carried through unchanged so
+        the state pytree structure never varies across plan variants."""
+        if action.codec is not None:
+            return aux.wire_payload
+        if action.store_base:
+            return payload
+        return state.c_base
 
     def select_out(y_new, y_buf):
         """Consumed output: warmup-slot tokens take the fresh combine."""
@@ -217,7 +236,8 @@ def apply_layer_action(p, x, cfg: ModelConfig, action: LayerAction,
             x_prev=x if action.store_x else None,
             h_cache=conditional.update_cache(state.h_cache, aux.pair_vals,
                                              _cache_update_mask(None, aux.pair_keep))
-            if want_cache else None)
+            if want_cache else None,
+            c_base=next_base(x, aux))
         return y, new, aux
 
     if action.mode == "displaced":
@@ -228,7 +248,8 @@ def apply_layer_action(p, x, cfg: ModelConfig, action: LayerAction,
             jnp.where(slot_fresh[:, None], x, state.x_prev)
         y_new, aux = run(inp)
         out = select_out(y_new, state.y_buf)
-        new = MoELayerState(y_buf=y_new, x_prev=x, h_cache=None)
+        new = MoELayerState(y_buf=y_new, x_prev=x, h_cache=None,
+                            c_base=next_base(inp, aux))
         return out, new, aux
 
     if action.mode == "staggered":
@@ -242,11 +263,14 @@ def apply_layer_action(p, x, cfg: ModelConfig, action: LayerAction,
         y1, aux1 = run(x[half:])
         y_new = jnp.concatenate([y0, y1], axis=0)
         out = select_out(y_new, state.y_buf)
-        new = MoELayerState(y_buf=y_new, x_prev=x, h_cache=None)
+        new = MoELayerState(y_buf=y_new, x_prev=x, h_cache=None,
+                            c_base=state.c_base)
         aux = MoEAux(lb_loss=(aux0.lb_loss + aux1.lb_loss) / 2,
                      dropped_frac=(aux0.dropped_frac + aux1.dropped_frac) / 2,
                      dispatch_bytes=aux0.dispatch_bytes + aux1.dispatch_bytes,
-                     pair_vals=None, scores=None, pair_keep=None)
+                     pair_vals=None, scores=None, pair_keep=None,
+                     raw_dispatch_bytes=aux0.raw_dispatch_bytes
+                     + aux1.raw_dispatch_bytes)
         return out, new, aux
 
     # "interweaved": dispatch of x(s) completes within step s (overlapped
@@ -258,7 +282,8 @@ def apply_layer_action(p, x, cfg: ModelConfig, action: LayerAction,
         y_buf=y_new, x_prev=None,
         h_cache=conditional.update_cache(state.h_cache, aux.pair_vals,
                                          _cache_update_mask(mask, aux.pair_keep))
-        if want_cache else None)
+        if want_cache else None,
+        c_base=next_base(x, aux))
     return out, new, aux
 
 

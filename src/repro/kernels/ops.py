@@ -13,6 +13,7 @@ import jax
 
 from repro.kernels.expert_ffn import expert_ffn_pallas as _expert_ffn
 from repro.kernels.flash_attention import flash_attention as _flash
+from repro.kernels.residual_codec import residual_int8_pallas as _residual_int8
 from repro.kernels.rwkv6_scan import rwkv6_scan_pallas as _rwkv6_scan
 
 
@@ -29,6 +30,14 @@ def expert_ffn_pallas(buf, w_gate, w_up, w_down, *, act="silu",
     return _expert_ffn(buf, w_gate, w_up, w_down, act=act,
                        block_c=min(128, C), block_f=min(512, f),
                        interpret=interpret)
+
+
+@partial(jax.jit, static_argnames=("interpret",))
+def residual_int8_pallas(value, base, *, interpret=None):
+    """Fused wire-codec quantize-pack: (N, d) payload + residual base ->
+    (q int8, per-row f32 scale, receiver-side reconstruction)."""
+    interpret = _on_cpu() if interpret is None else interpret
+    return _residual_int8(value, base, interpret=interpret)
 
 
 def _pick_block(n: int, pref: int = 128) -> int:

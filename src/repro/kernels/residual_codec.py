@@ -1,0 +1,80 @@
+"""Pallas TPU kernel: fused int8 residual quantize-pack (the wire-codec
+hot path, DESIGN.md Sec. 11).
+
+One pass over a (N, d) payload block held in VMEM produces everything the
+wire codec needs: the residual against the staleness base, its per-row
+symmetric scale, the packed int8 payload, AND the receiver-side f32
+reconstruction (base + q*scale) — the value both endpoints advance their
+residual base to.  Fusing the four stages avoids materialising the f32
+residual in HBM: the unfused jnp reference reads value+base and writes
+residual, then reads residual and writes q/scale, then reads q/scale and
+writes recon (5 HBM round-trips of the payload); the kernel reads
+value+base once and writes q/scale/recon once.
+
+Grid: (N / block_rows,); each cell owns a (bn, d) row tile.  d is kept
+whole per tile (the per-row abs-max reduction stays in-VMEM; d <= 8192
+f32 fits comfortably), mirroring the `expert_ffn_pallas` layout choice.
+On TPU the int8 output wants (32, 128)-aligned tiles — `block_rows`
+defaults to 128 and d should be a lane multiple in production; CPU tests
+run in interpret mode where alignment is advisory.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.compress.ref import INT8_EPS
+
+
+def _kernel(x_ref, b_ref, q_ref, s_ref, o_ref, *, eps):
+    x = x_ref[...].astype(jnp.float32)          # (bn, d) payload tile
+    b = b_ref[...].astype(jnp.float32)          # (bn, d) residual base tile
+    r = x - b
+    amax = jnp.max(jnp.abs(r), axis=-1, keepdims=True)
+    scale = jnp.maximum(amax / 127.0, eps)      # (bn, 1)
+    q = jnp.clip(jnp.round(r / scale), -127.0, 127.0)
+    q_ref[...] = q.astype(jnp.int8)
+    s_ref[...] = scale
+    o_ref[...] = (b + q * scale).astype(o_ref.dtype)
+
+
+def residual_int8_pallas(value, base, *, block_rows: int = 128,
+                         eps: float = INT8_EPS, interpret: bool = False):
+    """value, base: (N, d) -> (q int8 (N, d), scale f32 (N, 1),
+    recon (N, d) value.dtype).
+
+    ``recon == base + q * scale`` is the receiver-side reconstruction; the
+    caller stores it as the next step's residual base (both endpoints run
+    the same decode, so no drift).  Matches
+    :func:`repro.compress.ref.int8_encode` / ``int8_decode`` to f32
+    round-off (the fused divide/multiply chain may reassociate).
+    """
+    N, d = value.shape
+    bn = min(block_rows, N)
+    while N % bn:
+        bn //= 2
+    bn = max(bn, 1)
+    grid = (N // bn,)
+
+    return pl.pallas_call(
+        functools.partial(_kernel, eps=eps),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bn, d), lambda i: (i, 0)),
+            pl.BlockSpec((bn, d), lambda i: (i, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((bn, d), lambda i: (i, 0)),
+            pl.BlockSpec((bn, 1), lambda i: (i, 0)),
+            pl.BlockSpec((bn, d), lambda i: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((N, d), jnp.int8),
+            jax.ShapeDtypeStruct((N, 1), jnp.float32),
+            jax.ShapeDtypeStruct((N, d), value.dtype),
+        ],
+        interpret=interpret,
+    )(value, base)

@@ -17,6 +17,7 @@ has no TPU).
 from __future__ import annotations
 
 import argparse
+import dataclasses
 import time
 from dataclasses import dataclass
 from functools import partial
@@ -28,6 +29,7 @@ import numpy as np
 
 from repro.checkpoint import load_checkpoint
 from repro.common.config import HW, ModelConfig
+from repro.compress.codecs import CODEC_KINDS, CompressConfig
 from repro.configs.dit_moe_xl import config as xl_config, tiny
 from repro.core import conditional
 from repro.core import plan as plan_lib
@@ -105,11 +107,24 @@ def modeled_step_latency(cfg: ModelConfig, dcfg: DiceConfig, *,
     cap_tokens = tokens * cfg.experts_per_token * cfg.capacity_factor
     a2a_full = 2 * cap_tokens * d * 2 * (n_dev - 1) / n_dev
     a2a_async = a2a_full
+    # wire codec (Sec. 11): light-step payloads shrink by the codec's
+    # ratio at the 2-byte (bf16/fp16) wire dtype the model counts in
+    light_scale = 1.0
+    cspec = plan_lib.codec_spec_of(dcfg)
+    if cspec is not None and plan_lib.schedule_name(dcfg.schedule) in (
+            "displaced", "interweaved", "dice"):
+        light_scale = cspec.wire_ratio(d, itemsize=2)
     if dcfg.cond_comm:
         # conditional communication gates ASYNC layers only; synchronized
         # layers transmit everything fresh (that is their purpose)
         a2a_async = a2a_full * comm_volume_fraction(
-            cfg.experts_per_token, dcfg.cond_stride, dcfg.cond_policy)
+            cfg.experts_per_token, dcfg.cond_stride, dcfg.cond_policy,
+            light_scale=light_scale)
+    elif light_scale < 1.0 and dcfg.cond_stride > 1:
+        # codec without conditional communication: every rank still moves,
+        # but non-refresh steps move it compressed
+        a2a_async = a2a_full * (
+            1 + (dcfg.cond_stride - 1) * light_scale) / dcfg.cond_stride
     t_comm_full = a2a_full / hw["link_bw"]
     t_comm_async = a2a_async / hw["link_bw"]
 
@@ -150,9 +165,17 @@ class DiceServer:
     def __init__(self, cfg: ModelConfig, dcfg: DiceConfig, *,
                  params=None, seed: int = 0, n_dev: Optional[int] = None,
                  mesh: Optional[jax.sharding.Mesh] = None,
-                 ep_axis: str = "ep"):
+                 ep_axis: str = "ep",
+                 compress: Optional[CompressConfig] = None):
         if mesh is not None and ep_axis not in mesh.axis_names:
             raise ValueError(f"mesh axes {mesh.axis_names} lack {ep_axis!r}")
+        if compress is not None:
+            # thread the wire codec into the schedule config (Sec. 11);
+            # codec="none" normalizes to no compression so plans — and
+            # therefore outputs — stay bit-identical to an uncompressed
+            # server
+            dcfg = dataclasses.replace(
+                dcfg, compress=None if compress.codec == "none" else compress)
         if n_dev is None:
             n_dev = mesh.shape[ep_axis] if mesh is not None else 8
         if n_dev < 1:
@@ -200,6 +223,10 @@ class DiceServer:
             "buffer_bytes": stats["buffer_bytes"][-1] if stats["buffer_bytes"]
             else 0,
             "dispatch_bytes_per_step": stats["dispatch_bytes"],
+            # wire vs raw payload (Sec. 11): with a codec the wire sum is
+            # smaller; without one they are equal and the ratio is 1
+            "wire_bytes_total": float(sum(stats["dispatch_bytes"])),
+            "raw_bytes_total": float(sum(stats["raw_bytes"])),
             "num_plan_variants": stats["num_plan_variants"],
             "jit_cache_size": stats["jit_cache_size"],
         }
@@ -224,6 +251,10 @@ def serve_queue(server: "DiceServer", requests: List[Request], *,
                  # compiled shape, so max is the actual per-batch value
                  "a2a_bytes_per_layer": 0.0, "buffer_bytes": 0,
                  "dispatch_bytes_total": 0.0,
+                 # wire (codec-compressed) vs raw payload flows (Sec. 11):
+                 # wire_bytes_total == dispatch_bytes_total; raw is what the
+                 # same run would move losslessly, so ratio = raw / wire
+                 "wire_bytes_total": 0.0, "raw_bytes_total": 0.0,
                  "num_plan_variants": 0, "jit_cache_size": 0}
     queue = list(requests)
     while queue:
@@ -252,6 +283,8 @@ def serve_queue(server: "DiceServer", requests: List[Request], *,
                                         int(stats["buffer_bytes"]))
         stats_acc["dispatch_bytes_total"] += float(
             sum(stats["dispatch_bytes_per_step"]))
+        stats_acc["wire_bytes_total"] += stats["wire_bytes_total"]
+        stats_acc["raw_bytes_total"] += stats["raw_bytes_total"]
         stats_acc["num_plan_variants"] = max(stats_acc["num_plan_variants"],
                                              stats["num_plan_variants"])
         stats_acc["jit_cache_size"] = max(stats_acc["jit_cache_size"],
@@ -375,6 +408,7 @@ def serve_continuous(server: "DiceServer", requests: List[Request], *,
     admissions = 0
     recycled_admissions = 0
     dispatch_bytes_total = 0.0
+    raw_bytes_total = 0.0
     buffer_bytes = 0
     t0 = time.time()
 
@@ -455,6 +489,7 @@ def serve_continuous(server: "DiceServer", requests: List[Request], *,
         slotted_ticks += int(slotted)
         padded_slot_steps += sum(not s.active for s in slots)
         dispatch_bytes_total += float(aux["dispatch_bytes"])
+        raw_bytes_total += float(aux["raw_dispatch_bytes"])
         buffer_bytes = int(aux["buffer_bytes"])
 
         for i, slot in enumerate(slots):
@@ -484,6 +519,9 @@ def serve_continuous(server: "DiceServer", requests: List[Request], *,
         "a2a_bytes_per_layer": lat["a2a_bytes_layer"],
         "buffer_bytes": buffer_bytes,
         "dispatch_bytes_total": dispatch_bytes_total,
+        # wire vs raw payload flows (Sec. 11): wire == dispatch_bytes_total
+        "wire_bytes_total": dispatch_bytes_total,
+        "raw_bytes_total": raw_bytes_total,
         "num_plan_variants": splan.num_variants,
         "jit_cache_size": int(rf_step._cache_size()),
     }
@@ -507,6 +545,14 @@ def main():
                     help="run mesh-native over an N-way 'ep' axis "
                          "(DESIGN.md §10; needs N devices, e.g. XLA_FLAGS="
                          "--xla_force_host_platform_device_count=N)")
+    ap.add_argument("--codec", choices=list(CODEC_KINDS), default="none",
+                    help="wire codec for staleness-era payloads (Sec. 11): "
+                         "light/stale steps transmit quantized residuals "
+                         "against the staleness cache; refresh steps stay "
+                         "lossless")
+    ap.add_argument("--topk-frac", type=float, default=0.125,
+                    help="fraction of residual entries the topk_residual "
+                         "codec keeps per token")
     ap.add_argument("--continuous", action="store_true",
                     help="drain the requests through the continuous-"
                          "batching engine (--max-batch slots) instead of "
@@ -525,13 +571,16 @@ def main():
         from repro.launch.mesh import make_ep_mesh
         mesh = make_ep_mesh(args.ep)
     server = DiceServer(cfg, dcfg, params=params, n_dev=args.n_dev,
-                        mesh=mesh)
+                        mesh=mesh,
+                        compress=CompressConfig(codec=args.codec,
+                                                topk_frac=args.topk_frac))
     reqs = [Request(class_id=i % cfg.num_classes, rid=i)
             for i in range(args.requests)]
     splan = server.plan(args.steps)
     print(f"serving {len(reqs)} requests, schedule={args.schedule}, "
           f"{args.steps} steps, model={cfg.name}, n_dev={server.n_dev}"
-          + (f", mesh-native {args.ep}-way ep" if mesh is not None else ""))
+          + (f", mesh-native {args.ep}-way ep" if mesh is not None else "")
+          + (f", wire codec {args.codec}" if args.codec != "none" else ""))
     print(f"step plan: {splan.num_variants} compiled variants for "
           f"{splan.num_steps} steps "
           f"({[len(splan.steps_of_variant(v)) for v in range(splan.num_variants)]} "

@@ -120,6 +120,7 @@ def dit_forward(params, x, t, y, cfg: ModelConfig, dcfg: DiceConfig,
     new_patch: Dict[int, PatchParallelState] = {}
     total_lb = 0.0
     total_dispatch_bytes = 0.0
+    total_raw_bytes = 0.0
     dropped = 0.0
 
     for i, blk in enumerate(params["blocks"]):
@@ -158,6 +159,7 @@ def dit_forward(params, x, t, y, cfg: ModelConfig, dcfg: DiceConfig,
         new_states[i] = new_st
         total_lb += aux.lb_loss
         total_dispatch_bytes += aux.dispatch_bytes
+        total_raw_bytes += aux.raw_dispatch_bytes
         dropped += aux.dropped_frac
         h = h + g2[:, None, :] * moe_out.reshape(B, T, d).astype(h.dtype)
 
@@ -168,6 +170,9 @@ def dit_forward(params, x, t, y, cfg: ModelConfig, dcfg: DiceConfig,
     aux_out = {
         "lb_loss": total_lb / cfg.num_layers,
         "dispatch_bytes": total_dispatch_bytes,
+        # the same payloads uncompressed — with a wire codec (Sec. 11) the
+        # wire/raw pair makes the compression ratio visible in aggregates
+        "raw_dispatch_bytes": total_raw_bytes,
         "dropped_frac": dropped / cfg.num_layers,
         "buffer_bytes": stale_lib.state_bytes(new_states)
         + sum(p.bytes() for p in new_patch.values()),

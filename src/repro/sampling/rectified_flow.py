@@ -175,7 +175,8 @@ def _make_mesh_rf_step(params, cfg: ModelConfig, dcfg: DiceConfig, *,
         st_spec = stale_lib.state_specs(states, ep_axis=ep_axis)
         stu_spec = stale_lib.state_specs(states_u, ep_axis=ep_axis)
         aux_spec = {"lb_loss": P(), "dispatch_bytes": P(),
-                    "dropped_frac": P(), "buffer_bytes": P()}
+                    "raw_dispatch_bytes": P(), "dropped_frac": P(),
+                    "buffer_bytes": P()}
         ops = (params, x, classes, states, states_u, t, key)
         in_specs = (pspecs, P(ep_axis), P(ep_axis), st_spec, stu_spec,
                     P(ep_axis), P())
@@ -275,7 +276,7 @@ def rf_sample(params, cfg: ModelConfig, dcfg: DiceConfig, *,
     states_u = planned_init()
     patch_states: Dict = {}
     patch_states_u: Dict = {}
-    stats = {"dispatch_bytes": [], "buffer_bytes": []}
+    stats = {"dispatch_bytes": [], "raw_bytes": [], "buffer_bytes": []}
 
     one_step = make_sample_step(params, cfg, dcfg, classes, dt=dt,
                                 guidance=guidance,
@@ -290,6 +291,7 @@ def rf_sample(params, cfg: ModelConfig, dcfg: DiceConfig, *,
             plan=splan.steps[s])
         if collect_stats:
             stats["dispatch_bytes"].append(float(aux["dispatch_bytes"]))
+            stats["raw_bytes"].append(float(aux["raw_dispatch_bytes"]))
             stats["buffer_bytes"].append(float(aux["buffer_bytes"]))
     stats["num_plan_variants"] = splan.num_variants
     stats["jit_cache_size"] = int(one_step._cache_size())

@@ -12,7 +12,12 @@ DICE with conditional communication):
     the mesh path too (the mesh does not multiply compiles);
   * DICE's conditional-communication light steps put a strictly smaller
     per-device all-to-all payload on the wire than full-dispatch steps
-    (``aux.dispatch_bytes`` off the sharded dispatch buffer).
+    (``aux.dispatch_bytes`` off the sharded dispatch buffer);
+  * the int8 residual wire codec (DESIGN.md Sec. 11) composes with the
+    mesh path: compressed DICE keeps distributed == single-device parity
+    and cache == variants, its light steps put strictly fewer bytes on
+    the wire than UNCOMPRESSED light steps, and the raw-bytes side still
+    reports the lossless payload.
 """
 import os
 import subprocess
@@ -82,7 +87,36 @@ PROG = textwrap.dedent("""
             # effective_k=1 of K=2 halves the capacity buffer of async
             # layers; sync layers stay full — payload strictly between
             assert refresh * 0.4 < light < refresh, (light, refresh)
+            dice_light_uncompressed = light
         print("PARITY", name, err, stats["jit_cache_size"])
+
+    # ---- int8 residual wire codec on the mesh path (Sec. 11) -----------
+    from repro.compress.codecs import CompressConfig
+    dcfg_c = DiceConfig.dice(sync_policy="deep",
+                             compress=CompressConfig(codec="int8_residual"))
+    ref_c, _ = rf_sample(params, cfg, dcfg_c, num_steps=NUM_STEPS,
+                         classes=classes, key=key, guidance=1.0)
+    out_c, stats_c = rf_sample(params, cfg, dcfg_c, num_steps=NUM_STEPS,
+                               classes=classes, key=key, guidance=1.0,
+                               mesh=mesh)
+    err_c = float(jnp.max(jnp.abs(out_c.astype(jnp.float32)
+                                  - ref_c.astype(jnp.float32))))
+    assert err_c < 0.1, err_c
+    splan_c = plan_lib.compile_step_plans(
+        dcfg_c, cfg.num_layers, NUM_STEPS,
+        experts_per_token=cfg.experts_per_token)
+    assert stats_c["jit_cache_size"] == splan_c.num_variants, (
+        stats_c["jit_cache_size"], splan_c.num_variants)
+    w = dcfg_c.warmup_steps
+    light_c = stats_c["dispatch_bytes"][w + 1]
+    # compressed light < uncompressed light on the wire; the raw side
+    # still reports the lossless payload of the same capacities
+    assert light_c < dice_light_uncompressed, (light_c,
+                                               dice_light_uncompressed)
+    assert stats_c["raw_bytes"][w + 1] == dice_light_uncompressed
+    # refresh steps stay lossless and full-size
+    assert stats_c["dispatch_bytes"][w] == stats_c["raw_bytes"][w]
+    print("COMPRESS", light_c, dice_light_uncompressed, err_c)
     print("EPDICE-OK")
 """)
 
@@ -96,3 +130,5 @@ def test_ep_dice_distributed_parity_all_schedules():
     # all five schedules actually ran the parity check
     for name in ("sync", "displaced", "interweaved", "selective", "dice"):
         assert f"PARITY {name}" in r.stdout, (name, r.stdout[-2000:])
+    # the compressed-DICE wire-bytes case actually ran
+    assert "COMPRESS" in r.stdout, r.stdout[-2000:]

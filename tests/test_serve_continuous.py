@@ -48,10 +48,21 @@ def setup():
     return cfg, params
 
 
+def _dice_int8():
+    """DICE + int8 residual wire codec (DESIGN.md Sec. 11): the recycled-
+    slot guarantees must also hold for the codec's per-slot residual base
+    (c_base zeroed at admission, re-anchored lossless by the merge plan's
+    store_base refresh) — a leaked base from a previous occupant would
+    break bit-identity on the successor's compressed light steps."""
+    from repro.compress.codecs import CompressConfig
+    return DiceConfig.dice(compress=CompressConfig(codec="int8_residual"))
+
+
 SCHEDS = {
     "sync": DiceConfig.sync_ep,
     "interweaved": DiceConfig.interweaved,
     "dice": DiceConfig.dice,
+    "dice_int8": _dice_int8,
 }
 
 
