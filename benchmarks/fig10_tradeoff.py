@@ -26,7 +26,7 @@ def run(num_steps: int = 20):
                                               num_steps=num_steps)
         fid = fid_proxy(samples, ref_data)
         mse = mse_vs_reference(samples, sync_samples)
-        d = DiceConfig.displaced() if ndev else dcfg
+        d = DiceConfig.displaced(overlap="ring") if ndev else dcfg
         t = modeled_step_latency(lat_cfg, d, local_batch=16)["t_step_s"]
         common.csv_row(f"fig10/{method}", t * 1e6,
                        f"fid_proxy={fid:.4f};mse_vs_sync={mse:.6f};"

@@ -47,7 +47,7 @@ def run():
                                         local_batch=b)["t_step_s"]
             for method, (dcfg, ndev) in common.SCHEDULES.items():
                 if ndev:
-                    dcfg = DiceConfig.displaced()
+                    dcfg = DiceConfig.displaced(overlap="ring")
                 t = modeled_step_latency(cfg, dcfg, local_batch=b)["t_step_s"]
                 buf = buffer_bytes_per_method(cfg, method, local_batch=b)
                 common.csv_row(

@@ -14,7 +14,7 @@ import time
 
 TABLES = ["table1_quality", "table23_fewer_steps", "table4_ablation",
           "table5_comm_fraction", "fig9_scaling", "fig10_tradeoff",
-          "fig_compress_tradeoff", "serve_throughput"]
+          "fig_compress_tradeoff", "fig_overlap", "serve_throughput"]
 
 
 def main() -> None:

@@ -66,7 +66,8 @@ def fifo_schedule(arrivals: List[float], *, max_batch: int,
 
 def run(*, schedule: str = "dice", requests: int = 32, max_batch: int = 8,
         num_steps: int = 8, rate: float = 0.5, seed: int = 0,
-        smoke: bool = False, ep: int = 0, codec: str = "none") -> dict:
+        smoke: bool = False, ep: int = 0, codec: str = "none",
+        overlap: str = "blocking") -> dict:
     if os.environ.get("BENCH_SMOKE") == "1" and not smoke:
         # benchmarks.run --fast sets BENCH_SMOKE: shrink like the other tables
         smoke = True
@@ -86,7 +87,8 @@ def run(*, schedule: str = "dice", requests: int = 32, max_batch: int = 8,
         max_batch -= max_batch % ep
     dcfg = SCHEDULES[schedule]()
     server = DiceServer(cfg, dcfg, seed=0, mesh=mesh,
-                        compress=CompressConfig(codec=codec))
+                        compress=CompressConfig(codec=codec),
+                        overlap=overlap)
     reqs = [Request(class_id=i % cfg.num_classes, rid=i)
             for i in range(requests)]
     arrivals = poisson_arrivals(requests, rate, seed)
@@ -139,9 +141,18 @@ def run(*, schedule: str = "dice", requests: int = 32, max_batch: int = 8,
         / max(cstats["wire_bytes_total"], 1.0),
         "fifo_wire_bytes_total": fstats["wire_bytes_total"],
         "fifo_raw_bytes_total": fstats["raw_bytes_total"],
+        # ring-overlap execution stats (DESIGN.md Sec. 12)
+        "overlap": overlap,
+        "cont_ring_hops": cstats["ring_hops"],
+        "cont_hop_bytes_total": cstats["hop_bytes_total"],
+        "modeled_overlap_efficiency": cstats["modeled_overlap_efficiency"],
+        "modeled_step_blocking_s": cstats["modeled_step_blocking_s"],
+        "modeled_step_ring_s": cstats["modeled_step_ring_s"],
     }
     tag = f"serve_throughput/{schedule}" \
-          + (f"+{codec}" if codec != "none" else "") + f"/b{max_batch}"
+          + (f"+{codec}" if codec != "none" else "") \
+          + (f"+{overlap}" if overlap != "blocking" else "") \
+          + f"/b{max_batch}"
     common.csv_row(
         tag,
         res["cont_req_per_s"],
@@ -149,7 +160,8 @@ def run(*, schedule: str = "dice", requests: int = 32, max_batch: int = 8,
         f"cont_padded={res['cont_padded_slot_steps']} "
         f"fifo_padded={res['fifo_padded_slot_steps']} "
         f"occupancy={res['cont_occupancy']:.3f} "
-        f"compression={res['cont_compression_ratio']:.2f}")
+        f"compression={res['cont_compression_ratio']:.2f} "
+        f"overlap_eff={res['modeled_overlap_efficiency']:.2f}")
     return res
 
 
@@ -171,6 +183,11 @@ def main():
     ap.add_argument("--codec", choices=list(CODEC_KINDS), default="none",
                     help="wire codec for staleness-era payloads "
                          "(DESIGN.md Sec. 11)")
+    ap.add_argument("--overlap", choices=["blocking", "ring"],
+                    default="blocking",
+                    help="a2a execution engine (DESIGN.md Sec. 12): ring "
+                         "pipelines chunked ppermute hops against the "
+                         "expert FFN (executed when --ep > 1)")
     args = ap.parse_args()
     if args.smoke:
         args.requests = min(args.requests, 12)
@@ -180,7 +197,7 @@ def main():
     res = run(schedule=args.schedule, requests=args.requests,
               max_batch=args.max_batch, num_steps=args.steps,
               rate=args.rate, seed=args.seed, smoke=args.smoke, ep=args.ep,
-              codec=args.codec)
+              codec=args.codec, overlap=args.overlap)
     for k, v in res.items():
         print(f"  {k:28s} {v:.6g}" if isinstance(v, float)
               else f"  {k:28s} {v}")
@@ -201,9 +218,21 @@ def main():
     elif args.codec != "none":
         assert res["cont_wire_bytes_total"] == res["cont_raw_bytes_total"], (
             f"schedule {args.schedule!r} plans no codec; wire must equal raw")
+    if args.overlap == "ring":
+        # modeled ring never loses to blocking; on a real mesh the engine
+        # must actually have executed its 2*(n-1) permutes per layer
+        assert res["modeled_step_ring_s"] <= res["modeled_step_blocking_s"]
+        if args.ep > 1:
+            # staggered steady steps run two independent half-batch rings
+            rings = 4 if args.schedule == "staggered_batch" else 2
+            assert res["cont_ring_hops"] == rings * (args.ep - 1), res
+            assert res["cont_hop_bytes_total"] > 0
     print("OK: continuous < fifo padded-slot steps, jit cache == variants"
           + (f", wire compression {res['cont_compression_ratio']:.2f}x"
-             if compresses else ""))
+             if compresses else "")
+          + (f", ring hops {res['cont_ring_hops']}, overlap efficiency "
+             f"{res['modeled_overlap_efficiency']:.2f}"
+             if args.overlap == "ring" else ""))
 
 
 if __name__ == "__main__":

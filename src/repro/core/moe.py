@@ -33,6 +33,7 @@ import jax.numpy as jnp
 from repro.common import compat
 from repro.common.config import ModelConfig
 from repro.compress import codecs as codec_lib
+from repro.core import overlap as overlap_lib
 from repro.models.layers import dense_init
 
 
@@ -202,6 +203,13 @@ class MoEAux(NamedTuple):
     raw_dispatch_bytes: Optional[jnp.ndarray] = None  # same payload, lossless
     wire_payload: Optional[jnp.ndarray] = None  # (T, d) decoded dispatch
     #                                payload — the codec's next residual base
+    hops: Optional[jnp.ndarray] = None       # collective-permutes this layer
+    #                                ran (2*(n-1) on the ring, 0 blocking)
+    hop_bytes: Optional[jnp.ndarray] = None  # per-device wire bytes of ONE
+    #                                ring hop (e_loc * C * wire row bytes) —
+    #                                like dispatch_bytes, counted under the
+    #                                Sec.-11 wire model where BOTH directions
+    #                                carry codec'd residuals
 
 
 def moe_forward(p, x, cfg: ModelConfig, *,
@@ -213,7 +221,8 @@ def moe_forward(p, x, cfg: ModelConfig, *,
                 use_pallas: bool = False,
                 want_pair_vals: bool = False,
                 codec: Optional[codec_lib.CodecSpec] = None,
-                dispatch_base: Optional[jnp.ndarray] = None):
+                dispatch_base: Optional[jnp.ndarray] = None,
+                overlap: bool = False):
     """MoE layer forward.  x: (T, d) flat tokens (per-device shard if EP).
 
     ``ep_axis``: mesh axis name for expert parallelism — call inside
@@ -237,6 +246,15 @@ def moe_forward(p, x, cfg: ModelConfig, *,
     feeds the weighted sum AND becomes the next cache entry via
     ``aux.pair_vals``.  ``aux.dispatch_bytes`` reports the wire
     (compressed) payload, ``aux.raw_dispatch_bytes`` the lossless size.
+
+    ``overlap`` (DESIGN.md Sec. 12): replace each monolithic all-to-all +
+    grouped FFN with the (n-1)-hop ``ppermute`` ring of
+    :mod:`repro.core.overlap`, whose chunk transfers hide behind the
+    expert GEMMs.  A no-op when ``ep_axis is None`` or the axis has one
+    device (the StepPlan engine normalizes the flag away there so plans
+    and outputs stay bit-identical); the total wire volume and
+    ``aux.dispatch_bytes`` are unchanged — only the collective shape is
+    (``aux.hops`` / ``aux.hop_bytes`` report the decomposition).
     """
     T, d = x.shape
     E = cfg.num_experts
@@ -254,6 +272,7 @@ def moe_forward(p, x, cfg: ModelConfig, *,
         x_wire = codec_lib.apply(codec, x, base, use_pallas=use_pallas)
     buf = dispatch(x_wire, plan, E, capacity)                   # (E, C, d)
 
+    n_dev = 1
     if ep_axis is None:
         buf_out = expert_ffn(p, buf, act=cfg.act, use_pallas=use_pallas)
     else:
@@ -262,25 +281,37 @@ def moe_forward(p, x, cfg: ModelConfig, *,
             raise ValueError(
                 f"num_experts={E} must divide over the {n}-way "
                 f"{ep_axis!r} mesh axis for expert parallelism")
+        n_dev = n
         e_loc = E // n
-        # ---- dispatch all-to-all (collective #1) -------------------------
-        # NOTE: the CPU backend's float-normalization pass upcasts bf16
-        # collectives to f32 in the lowered HLO; on TPU the wire dtype is
-        # bf16 (repro.launch.hlo_cost applies the bf16-wire correction).
-        b = buf.reshape(n, e_loc, capacity, d)
-        b = jax.lax.all_to_all(b, ep_axis, split_axis=0, concat_axis=0,
-                               tiled=True)                      # (n, e_loc, C, d)
-        # named so remat policies can keep the received buffer and avoid
-        # re-running the dispatch all-to-all during the backward pass
-        b = jax.ad_checkpoint.checkpoint_name(b, "ep_recv")
-        b = jnp.moveaxis(b, 0, 1).reshape(e_loc, n * capacity, d)
         local = {k: v for k, v in p.items() if k.startswith("experts_")}
-        b = expert_ffn(local, b, act=cfg.act, use_pallas=use_pallas)
-        # ---- combine all-to-all (collective #2) --------------------------
-        b = jnp.moveaxis(b.reshape(e_loc, n, capacity, d), 1, 0)
-        b = jax.lax.all_to_all(b.astype(x.dtype), ep_axis, split_axis=0,
-                               concat_axis=0, tiled=True)
-        buf_out = b.reshape(E, capacity, d)
+        if overlap and n > 1:
+            # ---- ring engine (DESIGN.md Sec. 12): 2*(n-1) ppermutes whose
+            # chunk transfers overlap the per-chunk expert FFN; same wire
+            # volume as the all-to-alls, decomposed so XLA can hide it
+            b = overlap_lib.ring_expert_exchange(
+                buf.reshape(n, e_loc, capacity, d),
+                lambda c: expert_ffn(local, c, act=cfg.act,
+                                     use_pallas=use_pallas),
+                ep_axis=ep_axis, n=n, wire_dtype=x.dtype)
+            buf_out = b.reshape(E, capacity, d)
+        else:
+            # ---- dispatch all-to-all (collective #1) ---------------------
+            # NOTE: the CPU backend's float-normalization pass upcasts bf16
+            # collectives to f32 in the lowered HLO; on TPU the wire dtype is
+            # bf16 (repro.launch.hlo_cost applies the bf16-wire correction).
+            b = buf.reshape(n, e_loc, capacity, d)
+            b = jax.lax.all_to_all(b, ep_axis, split_axis=0, concat_axis=0,
+                                   tiled=True)                  # (n, e_loc, C, d)
+            # named so remat policies can keep the received buffer and avoid
+            # re-running the dispatch all-to-all during the backward pass
+            b = jax.ad_checkpoint.checkpoint_name(b, "ep_recv")
+            b = jnp.moveaxis(b, 0, 1).reshape(e_loc, n * capacity, d)
+            b = expert_ffn(local, b, act=cfg.act, use_pallas=use_pallas)
+            # ---- combine all-to-all (collective #2) ----------------------
+            b = jnp.moveaxis(b.reshape(e_loc, n, capacity, d), 1, 0)
+            b = jax.lax.all_to_all(b.astype(x.dtype), ep_axis, split_axis=0,
+                                   concat_axis=0, tiled=True)
+            buf_out = b.reshape(E, capacity, d)
 
     y, pair_vals, pair_keep = combine(buf_out, plan, scores, T,
                                       h_cache=h_cache, fresh_mask=fresh_mask)
@@ -313,6 +344,9 @@ def moe_forward(p, x, cfg: ModelConfig, *,
     itemsize = jnp.dtype(x.dtype).itemsize
     per_row = (codec.wire_bytes_per_row(d, itemsize)
                if codec is not None else d * itemsize)
+    # ring accounting: same total wire volume as the all-to-alls, split
+    # across 2*(n-1) collective-permutes of one (e_loc, C, d) chunk each
+    ring = bool(overlap and n_dev > 1)
     aux = MoEAux(
         lb_loss=load_balance_loss(probs, idx, E, ep_axis=ep_axis),
         dropped_frac=dropped_frac,
@@ -322,5 +356,8 @@ def moe_forward(p, x, cfg: ModelConfig, *,
         pair_keep=pair_keep if (want_pair_vals or fresh_mask is not None) else None,
         raw_dispatch_bytes=jnp.asarray(E * capacity * d * itemsize),
         wire_payload=x_wire if codec is not None else None,
+        hops=jnp.asarray(2 * (n_dev - 1) if ring else 0),
+        hop_bytes=jnp.asarray((E // n_dev) * capacity * per_row
+                              if ring else 0),
     )
     return y.astype(x.dtype), aux

@@ -28,6 +28,7 @@ from the buffer read/write ops each action declares.
 """
 from __future__ import annotations
 
+import dataclasses
 from dataclasses import dataclass, field
 from typing import Callable, Dict, List, Optional, Tuple
 
@@ -73,6 +74,16 @@ class LayerAction:
         losslessly transmitted payload, so the next compressed step has a
         fresh predictor.  Codec'd steps write the base implicitly (the
         decoded reconstruction); see ``writes_c_base``.
+    overlap
+        execute this step's dispatch/combine as the ring-overlap engine
+        (DESIGN.md Sec. 12): 2*(n-1) chunked ``ppermute`` hops pipelined
+        against the expert FFN instead of two monolithic blocking
+        all-to-alls.  Same wire volume and identical per-row math — a
+        pure execution-shape property, planned per step so the (hashable)
+        flag keys the jit cache like every other field.  Entry points
+        normalize it away when no ep mesh (or a 1-device axis) backs the
+        run (:func:`normalize_overlap`), so single-device plan variants
+        and outputs stay bit-identical to blocking.
     """
     mode: str = "sync"
     store_y: bool = False
@@ -82,6 +93,7 @@ class LayerAction:
     want_cache: bool = False
     codec: Optional[CodecSpec] = None
     store_base: bool = False
+    overlap: bool = False
 
     def __post_init__(self):
         if self.mode not in ("sync", "displaced", "interweaved", "staggered"):
@@ -262,9 +274,18 @@ def registered_schedules() -> List[str]:
 # ---------------------------------------------------------------------------
 def plan_for_step(dcfg, num_moe_layers: int, step_idx: int, *,
                   experts_per_token: int) -> StepPlan:
-    """One step's plan via the registered planner for ``dcfg.schedule``."""
+    """One step's plan via the registered planner for ``dcfg.schedule``.
+
+    A ``dcfg.overlap == "ring"`` config stamps ``LayerAction.overlap`` on
+    every action here, after the planner ran — one point of truth, so
+    third-party registered schedules ride the ring engine for free.
+    """
     planner = get_planner(dcfg.schedule)
-    return planner(dcfg, num_moe_layers, step_idx, experts_per_token)
+    plan = planner(dcfg, num_moe_layers, step_idx, experts_per_token)
+    if overlap_of(dcfg) and not all(a.overlap for a in plan.actions):
+        plan = dataclasses.replace(plan, actions=tuple(
+            dataclasses.replace(a, overlap=True) for a in plan.actions))
+    return plan
 
 
 def compile_step_plans(dcfg, num_moe_layers: int, num_steps: int, *,
@@ -295,6 +316,29 @@ def compile_step_plans(dcfg, num_moe_layers: int, num_steps: int, *,
 # ---------------------------------------------------------------------------
 def _uniform(action: LayerAction, n: int) -> Tuple[LayerAction, ...]:
     return (action,) * n
+
+
+def overlap_of(dcfg) -> bool:
+    """Whether ``dcfg`` asks for the ring-overlap execution engine
+    (DESIGN.md Sec. 12).  ``getattr`` so pre-overlap config objects (and
+    test doubles) keep planning unchanged."""
+    return getattr(dcfg, "overlap", "blocking") == "ring"
+
+
+def normalize_overlap(dcfg, n_dev: int):
+    """Strip ``overlap="ring"`` when no multi-device ep axis backs the run.
+
+    The ring engine is an execution-shape property of an n>1 mesh axis: on
+    one device there is no wire, hop 0 IS the whole layer, and a plan that
+    still carried ``overlap=True`` would key a second jit entry for a
+    bit-identical computation.  Samplers and the serving engine call this
+    with the mesh's ep size (1 when mesh-less) before compiling plans, so
+    single-device plan variants — and therefore outputs — stay
+    bit-identical to blocking configs.
+    """
+    if n_dev > 1 or not overlap_of(dcfg):
+        return dcfg
+    return dataclasses.replace(dcfg, overlap="blocking")
 
 
 def codec_spec_of(dcfg) -> Optional[CodecSpec]:

@@ -64,30 +64,43 @@ class DiceConfig:
     # (DESIGN.md Sec. 11) None == lossless wire; the planner also treats a
     # CompressConfig(codec="none") as lossless, so plans stay bit-identical
     compress: Optional[CompressConfig] = None
+    # -- execution level: how the dispatch/combine collectives lower ----------
+    # (DESIGN.md Sec. 12) "blocking" = two monolithic all-to-alls around the
+    # expert FFN; "ring" = (n-1)-hop chunked ppermute pipeline that hides
+    # each hop's wire time behind the expert GEMMs.  Normalized back to
+    # "blocking" by the entry points when no n>1 ep mesh backs the run.
+    overlap: str = "blocking"
+
+    def __post_init__(self):
+        if self.overlap not in ("blocking", "ring"):
+            raise ValueError(f"overlap must be 'blocking' or 'ring', got "
+                             f"{self.overlap!r}")
 
     @staticmethod
-    def sync_ep() -> "DiceConfig":
+    def sync_ep(*, overlap="blocking") -> "DiceConfig":
         return DiceConfig(schedule=Schedule.SYNC, sync_policy="none",
-                          cond_comm=False, warmup_steps=0)
+                          cond_comm=False, warmup_steps=0, overlap=overlap)
 
     @staticmethod
-    def displaced(*, compress=None) -> "DiceConfig":
+    def displaced(*, compress=None, overlap="blocking") -> "DiceConfig":
         return DiceConfig(schedule=Schedule.DISPLACED, sync_policy="none",
-                          cond_comm=False, compress=compress)
+                          cond_comm=False, compress=compress, overlap=overlap)
 
     @staticmethod
-    def interweaved(*, compress=None) -> "DiceConfig":
+    def interweaved(*, compress=None, overlap="blocking") -> "DiceConfig":
         return DiceConfig(schedule=Schedule.INTERWEAVED, sync_policy="none",
-                          cond_comm=False, compress=compress)
+                          cond_comm=False, compress=compress, overlap=overlap)
 
     @staticmethod
     def dice(*, sync_policy="deep", cond_stride=2, cond_policy="low",
-             compress=None) -> "DiceConfig":
+             compress=None, overlap="blocking") -> "DiceConfig":
         return DiceConfig(schedule=Schedule.DICE, sync_policy=sync_policy,
                           cond_comm=True, cond_stride=cond_stride,
-                          cond_policy=cond_policy, compress=compress)
+                          cond_policy=cond_policy, compress=compress,
+                          overlap=overlap)
 
     @staticmethod
-    def staggered_batch() -> "DiceConfig":
+    def staggered_batch(*, overlap="blocking") -> "DiceConfig":
         return DiceConfig(schedule=Schedule.STAGGERED_BATCH,
-                          sync_policy="none", cond_comm=False)
+                          sync_policy="none", cond_comm=False,
+                          overlap=overlap)

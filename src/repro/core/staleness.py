@@ -209,7 +209,8 @@ def apply_layer_action(p, x, cfg: ModelConfig, action: LayerAction,
         return moe_forward(p, inp, cfg, capacity=capacity, fresh_mask=m,
                            h_cache=cache, ep_axis=ep_axis, key=key,
                            use_pallas=use_pallas, want_pair_vals=want_cache,
-                           codec=action.codec, dispatch_base=state.c_base)
+                           codec=action.codec, dispatch_base=state.c_base,
+                           overlap=action.overlap)
 
     def next_base(payload, aux):
         """Residual base for the next wire transmission (Sec. 11): the
@@ -270,7 +271,12 @@ def apply_layer_action(p, x, cfg: ModelConfig, action: LayerAction,
                      dispatch_bytes=aux0.dispatch_bytes + aux1.dispatch_bytes,
                      pair_vals=None, scores=None, pair_keep=None,
                      raw_dispatch_bytes=aux0.raw_dispatch_bytes
-                     + aux1.raw_dispatch_bytes)
+                     + aux1.raw_dispatch_bytes,
+                     # two INDEPENDENT half-batch ring exchanges: the
+                     # layer lowers both rings' permutes (4*(n-1) total),
+                     # each hop moving one half-batch chunk
+                     hops=aux0.hops + aux1.hops,
+                     hop_bytes=aux0.hop_bytes)
         return out, new, aux
 
     # "interweaved": dispatch of x(s) completes within step s (overlapped

@@ -1,15 +1,22 @@
 """Pallas TPU kernel: grouped expert gated-MLP (the compute the paper's
 all-to-alls must overlap with).
 
-One kernel serves every local expert: grid (E, C/bc, F/bf).  Per cell it
-holds in VMEM the (bc, d) token tile of expert e, the (d, bf) gate/up tiles
-and the (bf, d) down tile, accumulating the output tile in an f32 VMEM
-scratch across the f-block (minor) grid dimension — the standard TPU
-matmul-chain pattern (reset at jf==0, flush at jf==last).
+One kernel serves every local expert: grid (E, C/bc, F/bf, D/bd).  Per
+cell it holds in VMEM the (bc, bd) token tile of expert e, the (bd, bf)
+gate/up tiles and the (bf, d) down tile.  The d (d_model) contraction of
+the gate/up GEMMs accumulates in (bc, bf) f32 scratch across the d-block
+(minor-most) grid dimension; at the last d-block the gated activation is
+applied once and the (bc, d) output tile accumulates the down projection
+across the f-block dimension — the standard TPU matmul-chain pattern
+(reset at jd==0 / jf==0, flush at the last (jf, jd) cell).
 
-Blocks are MXU-aligned (multiples of 128 on the contracting/lane dims);
-d (d_model) is kept whole per tile which fits VMEM for every assigned
-arch (d <= 8192: x-tile 128x8192xf32 = 4 MiB; weight tiles <= 16 MiB).
+Blocks are MXU-aligned when the caller picks multiples of 128 on the
+contracting/lane dims; ``block_d=None`` keeps d whole per tile (the
+pre-tiling behavior, bit-identical math).  With ``block_d`` set, the
+x/gate/up tiles no longer grow with d_model, so d > 8192 configs fit:
+the remaining d-wide tiles (the (bf, d) down tile and the (bc, d) output
+accumulator) are bounded by ``block_f`` / ``block_c``, e.g. d=16384 with
+bc=128, bf=128, bd=512 keeps every tile <= 8 MiB.
 """
 from __future__ import annotations
 
@@ -21,53 +28,72 @@ from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
 
-def _kernel(x_ref, wg_ref, wu_ref, wd_ref, o_ref, acc_ref, *, act, n_jf):
+def _kernel(x_ref, wg_ref, wu_ref, wd_ref, o_ref, acc_ref, g_ref, u_ref,
+            *, act, n_jf, n_jd):
     jf = pl.program_id(2)
+    jd = pl.program_id(3)
 
-    @pl.when(jf == 0)
-    def _init():
+    @pl.when(jnp.logical_and(jf == 0, jd == 0))
+    def _init_out():
         acc_ref[...] = jnp.zeros_like(acc_ref)
 
-    x = x_ref[0].astype(jnp.float32)           # (bc, d)
-    wg = wg_ref[0].astype(jnp.float32)         # (d, bf)
-    wu = wu_ref[0].astype(jnp.float32)
-    wd = wd_ref[0].astype(jnp.float32)         # (bf, d)
-    g = jnp.dot(x, wg, preferred_element_type=jnp.float32)
-    if act == "silu":
-        g = jax.nn.silu(g)
-    else:
-        g = jax.nn.gelu(g)
-    u = jnp.dot(x, wu, preferred_element_type=jnp.float32)
-    acc_ref[...] += jnp.dot(g * u, wd, preferred_element_type=jnp.float32)
+    @pl.when(jd == 0)
+    def _init_gu():
+        g_ref[...] = jnp.zeros_like(g_ref)
+        u_ref[...] = jnp.zeros_like(u_ref)
 
-    @pl.when(jf == n_jf - 1)
+    x = x_ref[0].astype(jnp.float32)           # (bc, bd)
+    wg = wg_ref[0].astype(jnp.float32)         # (bd, bf)
+    wu = wu_ref[0].astype(jnp.float32)
+    # d-contraction accumulates across the minor-most grid dim; the gated
+    # activation must wait for the full contraction (it is nonlinear)
+    g_ref[...] += jnp.dot(x, wg, preferred_element_type=jnp.float32)
+    u_ref[...] += jnp.dot(x, wu, preferred_element_type=jnp.float32)
+
+    @pl.when(jd == n_jd - 1)
+    def _down():
+        g = g_ref[...]
+        if act == "silu":
+            g = jax.nn.silu(g)
+        else:
+            g = jax.nn.gelu(g)
+        wd = wd_ref[0].astype(jnp.float32)     # (bf, d)
+        acc_ref[...] += jnp.dot(g * u_ref[...], wd,
+                                preferred_element_type=jnp.float32)
+
+    @pl.when(jnp.logical_and(jf == n_jf - 1, jd == n_jd - 1))
     def _flush():
         o_ref[0] = acc_ref[...].astype(o_ref.dtype)
 
 
 def expert_ffn_pallas(buf, w_gate, w_up, w_down, *, act: str = "silu",
                       block_c: int = 128, block_f: int = 512,
+                      block_d: int = None,
                       interpret: bool = False):
     """buf: (E, C, d); w_gate/w_up: (E, d, f); w_down: (E, f, d)."""
     E, C, d = buf.shape
     f = w_gate.shape[-1]
     bc = min(block_c, C)
     bf = min(block_f, f)
-    assert C % bc == 0 and f % bf == 0, (C, bc, f, bf)
+    bd = d if block_d is None else min(block_d, d)
+    assert C % bc == 0 and f % bf == 0 and d % bd == 0, (C, bc, f, bf, d, bd)
     n_jf = f // bf
-    grid = (E, C // bc, n_jf)
+    n_jd = d // bd
+    grid = (E, C // bc, n_jf, n_jd)
 
     return pl.pallas_call(
-        functools.partial(_kernel, act=act, n_jf=n_jf),
+        functools.partial(_kernel, act=act, n_jf=n_jf, n_jd=n_jd),
         grid=grid,
         in_specs=[
-            pl.BlockSpec((1, bc, d), lambda e, ic, jf: (e, ic, 0)),
-            pl.BlockSpec((1, d, bf), lambda e, ic, jf: (e, 0, jf)),
-            pl.BlockSpec((1, d, bf), lambda e, ic, jf: (e, 0, jf)),
-            pl.BlockSpec((1, bf, d), lambda e, ic, jf: (e, jf, 0)),
+            pl.BlockSpec((1, bc, bd), lambda e, ic, jf, jd: (e, ic, jd)),
+            pl.BlockSpec((1, bd, bf), lambda e, ic, jf, jd: (e, jd, jf)),
+            pl.BlockSpec((1, bd, bf), lambda e, ic, jf, jd: (e, jd, jf)),
+            pl.BlockSpec((1, bf, d), lambda e, ic, jf, jd: (e, jf, 0)),
         ],
-        out_specs=pl.BlockSpec((1, bc, d), lambda e, ic, jf: (e, ic, 0)),
+        out_specs=pl.BlockSpec((1, bc, d), lambda e, ic, jf, jd: (e, ic, 0)),
         out_shape=jax.ShapeDtypeStruct((E, C, d), buf.dtype),
-        scratch_shapes=[pltpu.VMEM((bc, d), jnp.float32)],
+        scratch_shapes=[pltpu.VMEM((bc, d), jnp.float32),
+                        pltpu.VMEM((bc, bf), jnp.float32),
+                        pltpu.VMEM((bc, bf), jnp.float32)],
         interpret=interpret,
     )(buf, w_gate, w_up, w_down)

@@ -21,14 +21,46 @@ def _on_cpu() -> bool:
     return jax.default_backend() == "cpu"
 
 
+def _largest_divisor(n: int, pref: int, align: int = 8) -> int:
+    """Largest block <= pref that divides n (the kernels assert exact
+    tiling), preferring multiples of ``align`` — TPU f32 tiles want
+    8-aligned sublane dims, and capacities are 8-aligned by construction
+    (e.g. C=136 tiles as 8, where the old ``min(128, C)`` choice asserted
+    out).  Falls back to the largest plain divisor when no aligned one
+    exists (tiny or odd n, exercised only in interpret mode)."""
+    b = min(pref, n)
+    b -= b % align
+    while b >= align and n % b:
+        b -= align
+    if b >= align:
+        return b
+    b = min(pref, n)
+    while n % b:
+        b -= 1
+    return max(b, 1)
+
+
 @partial(jax.jit, static_argnames=("act", "interpret"))
 def expert_ffn_pallas(buf, w_gate, w_up, w_down, *, act="silu",
                       interpret=None):
     interpret = _on_cpu() if interpret is None else interpret
     C = buf.shape[1]
+    d = buf.shape[2]
     f = w_gate.shape[-1]
+    if d <= 8192:
+        # d whole per tile (bit-identical to the pre-block_d kernel);
+        # weight tiles stay within the docstring's 16 MiB budget
+        block_c, block_f, block_d = 128, 512, None
+    else:
+        # VMEM budget for huge d: the d-wide tiles are the (bc, d) f32
+        # accumulator and the (bf, d) down tile, so both bc and bf shrink
+        # (d=16384: acc 4 MiB + wd 8 MiB) while block_d caps the x/gate/up
+        # tiles that no longer grow with d_model at all
+        block_c, block_f, block_d = 64, 128, _largest_divisor(d, 2048)
     return _expert_ffn(buf, w_gate, w_up, w_down, act=act,
-                       block_c=min(128, C), block_f=min(512, f),
+                       block_c=_largest_divisor(C, block_c),
+                       block_f=_largest_divisor(f, block_f),
+                       block_d=block_d,
                        interpret=interpret)
 
 

@@ -190,6 +190,11 @@ class CostTotals:
     flops: float = 0.0
     bytes: float = 0.0
     collective_bytes: Dict[str, float] = field(default_factory=dict)
+    # number of collective LAUNCHES per kind, loop multipliers applied
+    # ("-start" variants count once; "-done" never counts) — the quantity
+    # behind the ring-lowering check (2*(n-1) collective-permutes per MoE
+    # layer, zero all-to-alls; DESIGN.md Sec. 12)
+    collective_counts: Dict[str, float] = field(default_factory=dict)
     loops: List[Tuple[str, int]] = field(default_factory=list)
 
 
@@ -215,6 +220,8 @@ def _walk(comps: Dict[str, Computation], name: str, mult: float,
                 b *= 0.5
             totals.collective_bytes[op.coll_kind] = \
                 totals.collective_bytes.get(op.coll_kind, 0.0) + b
+            totals.collective_counts[op.coll_kind] = \
+                totals.collective_counts.get(op.coll_kind, 0.0) + mult
         if count_bytes and op.kind not in _SKIP_BYTES:
             # HBM-traffic model: every materialised buffer is written once
             # and read once by its consumers (2x result bytes); parameter /
@@ -261,3 +268,40 @@ def analyze(hlo_text: str) -> CostTotals:
         return totals
     _walk(comps, entry, 1.0, totals, {}, count_bytes=True)
     return totals
+
+
+def collective_counts(hlo_text: str) -> Dict[str, float]:
+    """Launch counts per collective kind, loop multipliers applied."""
+    return analyze(hlo_text).collective_counts
+
+
+def check_ring_lowering(hlo_text: str, *, n_dev: int,
+                        moe_layer_calls: int) -> Dict[str, float]:
+    """Verify the ring engine's HLO contract (DESIGN.md Sec. 12).
+
+    A ring-overlap step over an ``n_dev``-way ep axis must lower each of
+    its ``moe_layer_calls`` MoE layer executions to exactly
+    ``2 * (n_dev - 1)`` collective-permutes (the (n-1)-hop dispatch ring
+    plus its combine mirror) and NO residual all-to-all — the collective
+    the engine exists to decompose.  ``moe_layer_calls`` counts layer
+    executions in the traced step: ``num_moe_layers`` per model forward,
+    times two under classifier-free guidance, times two again for
+    staggered mode's half-batch calls.
+
+    Raises ``ValueError`` with the observed counts on violation; returns
+    the per-kind counts on success so callers can report them.
+    """
+    counts = collective_counts(hlo_text)
+    want = 2 * (n_dev - 1) * moe_layer_calls
+    got_cp = counts.get("collective-permute", 0.0)
+    got_a2a = counts.get("all-to-all", 0.0)
+    if got_a2a:
+        raise ValueError(
+            f"ring step still lowers {got_a2a:.0f} all-to-all(s); expected "
+            f"none (counts: {counts})")
+    if got_cp != want:
+        raise ValueError(
+            f"ring step lowers {got_cp:.0f} collective-permutes; expected "
+            f"2*(n-1)*layer_calls = 2*{n_dev - 1}*{moe_layer_calls} = "
+            f"{want} (counts: {counts})")
+    return counts

@@ -94,6 +94,20 @@ def modeled_step_latency(cfg: ModelConfig, dcfg: DiceConfig, *,
     all-to-all is 60-80% of step time and DICE's overlap pays 1.2-1.26x);
     pass hw=TPU_HW for the v5e target, where ICI bandwidth shrinks the
     communication share and with it the achievable overlap gain.
+
+    Execution-faithful since the ring engine (DESIGN.md Sec. 12): a
+    ``dcfg.overlap == "blocking"`` layer is modeled SERIAL
+    (``t_comp + t_comm`` — the two monolithic all-to-alls block, whatever
+    the staleness schedule does about when results are consumed), while
+    ``"ring"`` uses the per-hop pipeline bound
+
+        t_local + (n-1) * max(t_hop_comm, t_hop_comp)
+
+    (one chunk computed for free behind hop 1's wire, then n-1 hops each
+    bounded by the slower of one chunk transfer and one chunk FFN).  The
+    returned dict always carries BOTH bounds (``t_step_blocking_s`` /
+    ``t_step_ring_s``) plus ``overlap_efficiency`` — the fraction of the
+    step's communication time the selected mode hides.
     """
     hw = hw or PAPER_HW
     # steady-state StepPlan: the single source of truth for which layers
@@ -136,13 +150,36 @@ def modeled_step_latency(cfg: ModelConfig, dcfg: DiceConfig, *,
         t_comp = t_comp * eff(local_batch) / eff(max(1, local_batch // 2))
 
     sync_frac = steady.num_sync_layers / max(1, steady.num_layers)
-    # synchronous layers: compute + blocking full-volume comm;
-    # async layers: overlap, possibly reduced volume
-    t_layer_sync = t_comp + t_comm_full
-    t_layer_async = max(t_comp, t_comm_async)
-    t_step = cfg.num_layers * (sync_frac * t_layer_sync
-                               + (1 - sync_frac) * t_layer_async)
-    return {"t_step_s": t_step, "t_comp_layer": t_comp,
+
+    def ring_bound(tc: float, tm: float) -> float:
+        """Per-hop pipeline bound of the ring engine: the local chunk's
+        FFN hides behind hop 1's wire, then each of the n-1 hops costs
+        the slower of one chunk transfer and one chunk compute."""
+        if n_dev <= 1:
+            return tc + tm
+        t_local = tc / n_dev
+        return t_local + (n_dev - 1) * max(tm / (n_dev - 1), tc / n_dev)
+
+    def step_of(t_sync: float, t_async: float) -> float:
+        return cfg.num_layers * (sync_frac * t_sync
+                                 + (1 - sync_frac) * t_async)
+
+    # blocking: the monolithic all-to-alls serialize against compute —
+    # synchronized AND staleness layers alike (staleness only moves when
+    # results are consumed, never when the collectives block)
+    t_blocking = step_of(t_comp + t_comm_full, t_comp + t_comm_async)
+    t_ring = step_of(ring_bound(t_comp, t_comm_full),
+                     ring_bound(t_comp, t_comm_async))
+    t_step = t_ring if plan_lib.overlap_of(dcfg) else t_blocking
+    t_comm_step = cfg.num_layers * (sync_frac * t_comm_full
+                                    + (1 - sync_frac) * t_comm_async)
+    efficiency = ((t_blocking - t_step) / t_comm_step
+                  if t_comm_step > 0 else 0.0)
+    return {"t_step_s": t_step,
+            "t_step_blocking_s": t_blocking,
+            "t_step_ring_s": t_ring,
+            "overlap_efficiency": max(0.0, min(1.0, efficiency)),
+            "t_comp_layer": t_comp,
             "t_comm_layer": t_comm_async, "sync_frac": sync_frac,
             "a2a_bytes_layer": sync_frac * a2a_full
             + (1 - sync_frac) * a2a_async}
@@ -166,7 +203,8 @@ class DiceServer:
                  params=None, seed: int = 0, n_dev: Optional[int] = None,
                  mesh: Optional[jax.sharding.Mesh] = None,
                  ep_axis: str = "ep",
-                 compress: Optional[CompressConfig] = None):
+                 compress: Optional[CompressConfig] = None,
+                 overlap: Optional[str] = None):
         if mesh is not None and ep_axis not in mesh.axis_names:
             raise ValueError(f"mesh axes {mesh.axis_names} lack {ep_axis!r}")
         if compress is not None:
@@ -176,6 +214,12 @@ class DiceServer:
             # server
             dcfg = dataclasses.replace(
                 dcfg, compress=None if compress.codec == "none" else compress)
+        if overlap is not None:
+            # thread the a2a execution engine (Sec. 12) into the schedule
+            # config; the samplers normalize "ring" away when the server
+            # has no n>1 ep mesh, but the latency model keeps describing
+            # the REQUESTED engine on the target n_dev-device deployment
+            dcfg = dataclasses.replace(dcfg, overlap=overlap)
         if n_dev is None:
             n_dev = mesh.shape[ep_axis] if mesh is not None else 8
         if n_dev < 1:
@@ -219,6 +263,14 @@ class DiceServer:
             "wall_s_cpu": wall,
             "modeled_step_s_tpu8": lat["t_step_s"],
             "modeled_total_s_tpu8": lat["t_step_s"] * num_steps,
+            "modeled_step_blocking_s": lat["t_step_blocking_s"],
+            "modeled_step_ring_s": lat["t_step_ring_s"],
+            "modeled_overlap_efficiency": lat["overlap_efficiency"],
+            # ring execution stats (Sec. 12): collective-permutes per MoE
+            # layer actually lowered (0 on the blocking path) and the
+            # per-device one-hop wire total
+            "ring_hops": max(stats["hops"], default=0),
+            "hop_bytes_total": float(sum(stats["hop_bytes"])),
             "a2a_bytes_per_layer": lat["a2a_bytes_layer"],
             "buffer_bytes": stats["buffer_bytes"][-1] if stats["buffer_bytes"]
             else 0,
@@ -255,6 +307,10 @@ def serve_queue(server: "DiceServer", requests: List[Request], *,
                  # wire_bytes_total == dispatch_bytes_total; raw is what the
                  # same run would move losslessly, so ratio = raw / wire
                  "wire_bytes_total": 0.0, "raw_bytes_total": 0.0,
+                 # ring-overlap execution stats (Sec. 12): hop count is a
+                 # size (max), hop bytes are a flow (sum)
+                 "ring_hops": 0, "hop_bytes_total": 0.0,
+                 "modeled_overlap_efficiency": 0.0,
                  "num_plan_variants": 0, "jit_cache_size": 0}
     queue = list(requests)
     while queue:
@@ -285,6 +341,12 @@ def serve_queue(server: "DiceServer", requests: List[Request], *,
             sum(stats["dispatch_bytes_per_step"]))
         stats_acc["wire_bytes_total"] += stats["wire_bytes_total"]
         stats_acc["raw_bytes_total"] += stats["raw_bytes_total"]
+        stats_acc["ring_hops"] = max(stats_acc["ring_hops"],
+                                     int(stats["ring_hops"]))
+        stats_acc["hop_bytes_total"] += float(stats["hop_bytes_total"])
+        stats_acc["modeled_overlap_efficiency"] = max(
+            stats_acc["modeled_overlap_efficiency"],
+            float(stats["modeled_overlap_efficiency"]))
         stats_acc["num_plan_variants"] = max(stats_acc["num_plan_variants"],
                                              stats["num_plan_variants"])
         stats_acc["jit_cache_size"] = max(stats_acc["jit_cache_size"],
@@ -362,6 +424,12 @@ def serve_continuous(server: "DiceServer", requests: List[Request], *,
     cfg, dcfg = server.cfg, server.dcfg
     mesh = mesh if mesh is not None else server.mesh
     ep_axis = server.ep_axis if mesh is not None else None
+    # ring overlap needs an n>1 ep axis; normalize BEFORE planning so the
+    # compiled plans (and the jit-cache accounting below) match what the
+    # steps execute (DESIGN.md Sec. 12).  The latency model below keeps
+    # the un-normalized server.dcfg: it describes the target deployment.
+    dcfg = plan_lib.normalize_overlap(
+        dcfg, mesh.shape[ep_axis] if mesh is not None else 1)
     key = key if key is not None else jax.random.PRNGKey(0)
     noise_key, step_key = jax.random.split(key)
     B, Tp = max_batch, cfg.patch_tokens
@@ -409,6 +477,8 @@ def serve_continuous(server: "DiceServer", requests: List[Request], *,
     recycled_admissions = 0
     dispatch_bytes_total = 0.0
     raw_bytes_total = 0.0
+    hop_bytes_total = 0.0
+    ring_hops = 0
     buffer_bytes = 0
     t0 = time.time()
 
@@ -490,6 +560,8 @@ def serve_continuous(server: "DiceServer", requests: List[Request], *,
         padded_slot_steps += sum(not s.active for s in slots)
         dispatch_bytes_total += float(aux["dispatch_bytes"])
         raw_bytes_total += float(aux["raw_dispatch_bytes"])
+        hop_bytes_total += float(aux["hop_bytes"])
+        ring_hops = max(ring_hops, int(aux["hops"]))
         buffer_bytes = int(aux["buffer_bytes"])
 
         for i, slot in enumerate(slots):
@@ -502,7 +574,7 @@ def serve_continuous(server: "DiceServer", requests: List[Request], *,
                 classes[i] = cfg.num_classes
         tick += 1
 
-    lat = modeled_step_latency(cfg, dcfg, n_dev=server.n_dev,
+    lat = modeled_step_latency(cfg, server.dcfg, n_dev=server.n_dev,
                                local_batch=max(1, B // server.n_dev))
     stats = {
         "ticks": executed_ticks,
@@ -516,6 +588,11 @@ def serve_continuous(server: "DiceServer", requests: List[Request], *,
         "wall_s_cpu": time.time() - t0,
         "modeled_step_s_tpu8": lat["t_step_s"],
         "modeled_total_s_tpu8": lat["t_step_s"] * executed_ticks,
+        "modeled_step_blocking_s": lat["t_step_blocking_s"],
+        "modeled_step_ring_s": lat["t_step_ring_s"],
+        "modeled_overlap_efficiency": lat["overlap_efficiency"],
+        "ring_hops": ring_hops,
+        "hop_bytes_total": hop_bytes_total,
         "a2a_bytes_per_layer": lat["a2a_bytes_layer"],
         "buffer_bytes": buffer_bytes,
         "dispatch_bytes_total": dispatch_bytes_total,
@@ -553,6 +630,13 @@ def main():
     ap.add_argument("--topk-frac", type=float, default=0.125,
                     help="fraction of residual entries the topk_residual "
                          "codec keeps per token")
+    ap.add_argument("--overlap", choices=["blocking", "ring"],
+                    default="blocking",
+                    help="a2a execution engine (DESIGN.md Sec. 12): "
+                         "'ring' pipelines (n-1) chunked ppermute hops "
+                         "against the expert FFN instead of two blocking "
+                         "all-to-alls (executed when --ep > 1; always "
+                         "reflected in the modeled latency)")
     ap.add_argument("--continuous", action="store_true",
                     help="drain the requests through the continuous-"
                          "batching engine (--max-batch slots) instead of "
@@ -573,14 +657,16 @@ def main():
     server = DiceServer(cfg, dcfg, params=params, n_dev=args.n_dev,
                         mesh=mesh,
                         compress=CompressConfig(codec=args.codec,
-                                                topk_frac=args.topk_frac))
+                                                topk_frac=args.topk_frac),
+                        overlap=args.overlap)
     reqs = [Request(class_id=i % cfg.num_classes, rid=i)
             for i in range(args.requests)]
     splan = server.plan(args.steps)
     print(f"serving {len(reqs)} requests, schedule={args.schedule}, "
           f"{args.steps} steps, model={cfg.name}, n_dev={server.n_dev}"
           + (f", mesh-native {args.ep}-way ep" if mesh is not None else "")
-          + (f", wire codec {args.codec}" if args.codec != "none" else ""))
+          + (f", wire codec {args.codec}" if args.codec != "none" else "")
+          + (", ring overlap" if args.overlap == "ring" else ""))
     print(f"step plan: {splan.num_variants} compiled variants for "
           f"{splan.num_steps} steps "
           f"({[len(splan.steps_of_variant(v)) for v in range(splan.num_variants)]} "

@@ -121,6 +121,8 @@ def dit_forward(params, x, t, y, cfg: ModelConfig, dcfg: DiceConfig,
     total_lb = 0.0
     total_dispatch_bytes = 0.0
     total_raw_bytes = 0.0
+    total_hop_bytes = 0.0
+    ring_hops = jnp.asarray(0)
     dropped = 0.0
 
     for i, blk in enumerate(params["blocks"]):
@@ -160,6 +162,9 @@ def dit_forward(params, x, t, y, cfg: ModelConfig, dcfg: DiceConfig,
         total_lb += aux.lb_loss
         total_dispatch_bytes += aux.dispatch_bytes
         total_raw_bytes += aux.raw_dispatch_bytes
+        if aux.hops is not None:
+            ring_hops = jnp.maximum(ring_hops, aux.hops)
+            total_hop_bytes += aux.hop_bytes
         dropped += aux.dropped_frac
         h = h + g2[:, None, :] * moe_out.reshape(B, T, d).astype(h.dtype)
 
@@ -173,6 +178,11 @@ def dit_forward(params, x, t, y, cfg: ModelConfig, dcfg: DiceConfig,
         # the same payloads uncompressed — with a wire codec (Sec. 11) the
         # wire/raw pair makes the compression ratio visible in aggregates
         "raw_dispatch_bytes": total_raw_bytes,
+        # ring-overlap execution stats (DESIGN.md Sec. 12): collective-
+        # permutes per MoE layer (0 on the blocking path) and the summed
+        # per-device one-hop wire payload across layers
+        "hops": ring_hops,
+        "hop_bytes": jnp.asarray(total_hop_bytes),
         "dropped_frac": dropped / cfg.num_layers,
         "buffer_bytes": stale_lib.state_bytes(new_states)
         + sum(p.bytes() for p in new_patch.values()),

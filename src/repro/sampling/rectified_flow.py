@@ -176,6 +176,7 @@ def _make_mesh_rf_step(params, cfg: ModelConfig, dcfg: DiceConfig, *,
         stu_spec = stale_lib.state_specs(states_u, ep_axis=ep_axis)
         aux_spec = {"lb_loss": P(), "dispatch_bytes": P(),
                     "raw_dispatch_bytes": P(), "dropped_frac": P(),
+                    "hops": P(), "hop_bytes": P(),
                     "buffer_bytes": P()}
         ops = (params, x, classes, states, states_u, t, key)
         in_specs = (pspecs, P(ep_axis), P(ep_axis), st_spec, stu_spec,
@@ -257,6 +258,11 @@ def rf_sample(params, cfg: ModelConfig, dcfg: DiceConfig, *,
     """
     B = classes.shape[0]
     ep = ep_axis or ("ep" if mesh is not None else None)
+    # ring overlap is an n>1-mesh execution property: normalize it away
+    # here so a mesh-less (or 1-device-axis) run plans — and therefore
+    # samples — bit-identically to a blocking config (DESIGN.md Sec. 12)
+    dcfg = plan_lib.normalize_overlap(
+        dcfg, mesh.shape[ep] if mesh is not None else 1)
     x = jax.random.normal(key, (B, cfg.patch_tokens, cfg.in_channels))
     if mesh is not None:
         x = shard_lib.ep_place_batch(x, mesh, ep_axis=ep)
@@ -276,7 +282,8 @@ def rf_sample(params, cfg: ModelConfig, dcfg: DiceConfig, *,
     states_u = planned_init()
     patch_states: Dict = {}
     patch_states_u: Dict = {}
-    stats = {"dispatch_bytes": [], "raw_bytes": [], "buffer_bytes": []}
+    stats = {"dispatch_bytes": [], "raw_bytes": [], "buffer_bytes": [],
+             "hops": [], "hop_bytes": []}
 
     one_step = make_sample_step(params, cfg, dcfg, classes, dt=dt,
                                 guidance=guidance,
@@ -293,6 +300,8 @@ def rf_sample(params, cfg: ModelConfig, dcfg: DiceConfig, *,
             stats["dispatch_bytes"].append(float(aux["dispatch_bytes"]))
             stats["raw_bytes"].append(float(aux["raw_dispatch_bytes"]))
             stats["buffer_bytes"].append(float(aux["buffer_bytes"]))
+            stats["hops"].append(int(aux["hops"]))
+            stats["hop_bytes"].append(float(aux["hop_bytes"]))
     stats["num_plan_variants"] = splan.num_variants
     stats["jit_cache_size"] = int(one_step._cache_size())
     return x, stats

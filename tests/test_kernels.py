@@ -82,6 +82,58 @@ def test_flash_attention_odd_blocks():
                                rtol=1e-5, atol=1e-5)
 
 
+@pytest.mark.parametrize("C", [136, 200, 88, 24, 248])
+def test_expert_ffn_odd_capacity(C):
+    """8-aligned capacities that 128 does not divide (C in (128, 256) like
+    136 used to abort on the kernel's ``C % block_c == 0`` assert): the
+    public wrapper must pick an aligned block and match the oracle."""
+    E, d, f = 2, 64, 96
+    ks = jax.random.split(jax.random.PRNGKey(7), 4)
+    buf = jax.random.normal(ks[0], (E, C, d))
+    wg = jax.random.normal(ks[1], (E, d, f)) / np.sqrt(d)
+    wu = jax.random.normal(ks[2], (E, d, f)) / np.sqrt(d)
+    wd = jax.random.normal(ks[3], (E, f, d)) / np.sqrt(f)
+    got = expert_ffn_pallas(buf, wg, wu, wd, interpret=True)
+    want = expert_ffn_ref(buf, wg, wu, wd)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_expert_ffn_odd_hidden_dim():
+    """f in (512, 1024) not divisible by 512 had the same crash class as
+    odd capacities; the wrapper now picks an aligned f block too."""
+    E, C, d, f = 2, 16, 32, 768
+    ks = jax.random.split(jax.random.PRNGKey(8), 4)
+    buf = jax.random.normal(ks[0], (E, C, d))
+    wg = jax.random.normal(ks[1], (E, d, f)) / np.sqrt(d)
+    wu = jax.random.normal(ks[2], (E, d, f)) / np.sqrt(d)
+    wd = jax.random.normal(ks[3], (E, f, d)) / np.sqrt(f)
+    got = expert_ffn_pallas(buf, wg, wu, wd, interpret=True)
+    np.testing.assert_allclose(np.asarray(got),
+                               np.asarray(expert_ffn_ref(buf, wg, wu, wd)),
+                               rtol=1e-5, atol=1e-5)
+
+
+@pytest.mark.parametrize("block_d", [None, 16, 32, 64])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_expert_ffn_block_d_contraction_parity(block_d, dtype):
+    """block_d contraction tiling (d no longer whole per VMEM tile) must
+    match the oracle for every tiling, including the ``None`` default
+    that keeps the pre-tiling math bit-identical."""
+    from repro.kernels.expert_ffn import expert_ffn_pallas as raw_kernel
+    E, C, d, f = 2, 32, 64, 128
+    ks = jax.random.split(jax.random.PRNGKey(9), 4)
+    buf = jax.random.normal(ks[0], (E, C, d), dtype)
+    wg = (jax.random.normal(ks[1], (E, d, f)) / np.sqrt(d)).astype(dtype)
+    wu = (jax.random.normal(ks[2], (E, d, f)) / np.sqrt(d)).astype(dtype)
+    wd = (jax.random.normal(ks[3], (E, f, d)) / np.sqrt(f)).astype(dtype)
+    got = raw_kernel(buf, wg, wu, wd, block_c=16, block_f=64,
+                     block_d=block_d, interpret=True)
+    want = expert_ffn_ref(buf, wg, wu, wd)
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32), **_tol(dtype))
+
+
 # ---------------------------------------------------------------------------
 # rwkv6 recurrence kernel
 # ---------------------------------------------------------------------------
