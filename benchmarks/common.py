@@ -173,3 +173,28 @@ def modeled_speedup(cfg, method: str, *, local_batch=4, n_dev=8) -> float:
 
 def csv_row(name: str, us: float, derived: str):
     print(f"{name},{us:.1f},{derived}", flush=True)
+
+
+def write_bench_json(name: str, payload) -> str:
+    """Persist a benchmark's result dict as ``BENCH_<name>.json`` at the
+    repo root — the machine-readable artifact next to the CSV rows, so
+    drivers (CI, the paper-claims checker) diff structured numbers
+    instead of scraping stdout.  Returns the path written."""
+    import json
+
+    root = os.path.abspath(os.path.join(os.path.dirname(__file__), ".."))
+    path = os.path.join(root, f"BENCH_{name}.json")
+
+    def default(o):
+        if isinstance(o, (np.integer,)):
+            return int(o)
+        if isinstance(o, (np.floating,)):
+            return float(o)
+        if isinstance(o, np.ndarray):
+            return o.tolist()
+        return repr(o)
+
+    with open(path, "w") as f:
+        json.dump(payload, f, indent=2, sort_keys=True, default=default)
+        f.write("\n")
+    return path

@@ -39,7 +39,12 @@ def main() -> None:
             (t for t in TABLES if t.startswith(name)), name)
         t0 = time.time()
         mod = __import__(f"benchmarks.{key}", fromlist=["run"])
-        mod.run()
+        res = mod.run()
+        if res is not None:
+            # persist every table's structured result next to the CSV so
+            # drivers diff numbers instead of scraping stdout
+            from benchmarks.common import write_bench_json
+            write_bench_json(key, res)
         print(f"# {key} done in {time.time()-t0:.1f}s", file=sys.stderr)
 
 

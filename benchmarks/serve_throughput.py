@@ -22,19 +22,23 @@ count (acceptance criteria, ISSUE 2).
 from __future__ import annotations
 
 import argparse
+import dataclasses
 import os
 from typing import List, Tuple
 
 import jax
+import jax.numpy as jnp
 import numpy as np
 
 from benchmarks import common
 from repro.compress.codecs import CODEC_KINDS, CompressConfig
 from repro.configs.dit_moe_xl import tiny
+from repro.core import placement as placement_lib
 from repro.core.schedules import DiceConfig
 from repro.launch.serve import (DiceServer, Request, SCHEDULES,
                                 modeled_step_latency, serve_continuous,
                                 serve_queue)
+from repro.models.dit_moe import init_dit
 
 
 def poisson_arrivals(n: int, rate_per_step: float, seed: int) -> List[float]:
@@ -64,10 +68,29 @@ def fifo_schedule(arrivals: List[float], *, max_batch: int,
     return padded, t, batches
 
 
+def skewed_params(cfg, skew: str, *, seed: int = 0, strength: float = 2.0):
+    """Model params with the routing skew knob applied: ``zipf:a`` biases
+    every MoE layer's router logits by ``-strength * a * ln(rank + 1)``
+    (expert 0 hottest), emulating the skewed expert affinity the paper's
+    traces show; ``uniform`` leaves the router untouched."""
+    params = init_dit(jax.random.PRNGKey(seed), cfg)
+    if skew == "uniform":
+        return params
+    if not skew.startswith("zipf:"):
+        raise ValueError(f"skew must be 'uniform' or 'zipf:<a>', got "
+                         f"{skew!r}")
+    a = float(skew.split(":", 1)[1])
+    bias = -strength * a * np.log(np.arange(cfg.num_experts) + 1.0)
+    for blk in params["blocks"]:
+        blk["moe"]["router_bias"] = jnp.asarray(bias, jnp.float32)
+    return params
+
+
 def run(*, schedule: str = "dice", requests: int = 32, max_batch: int = 8,
         num_steps: int = 8, rate: float = 0.5, seed: int = 0,
         smoke: bool = False, ep: int = 0, codec: str = "none",
-        overlap: str = "blocking") -> dict:
+        overlap: str = "blocking", skew: str = "uniform",
+        placement: str = "identity", replicate_top: int = 0) -> dict:
     if os.environ.get("BENCH_SMOKE") == "1" and not smoke:
         # benchmarks.run --fast sets BENCH_SMOKE: shrink like the other tables
         smoke = True
@@ -77,6 +100,15 @@ def run(*, schedule: str = "dice", requests: int = 32, max_batch: int = 8,
     cfg = tiny()
     if smoke:
         cfg = common.smoke_cfg("dit-moe-serve-smoke")
+    if skew != "uniform" or placement != "identity":
+        # the placement-parity gate (placed run == single-device baseline
+        # to 1e-4) needs a drop-impossible capacity (C == T*K per shard),
+        # so that the identity-headroom-preserving cap_scale can shrink
+        # the wire without introducing capacity drops the baseline lacks;
+        # >= 32 tokens per shard keeps the 8-aligned scaled capacity fine-
+        # grained enough that cap_scale survives quantization
+        cfg = cfg.replace(name=cfg.name + "-skew", capacity_factor=8.0,
+                          patch_tokens=max(cfg.patch_tokens, 32))
     mesh = None
     if ep:
         # mesh-native continuous engine (DESIGN.md §10): slots shard over
@@ -86,7 +118,8 @@ def run(*, schedule: str = "dice", requests: int = 32, max_batch: int = 8,
         max_batch = max(max_batch, ep)
         max_batch -= max_batch % ep
     dcfg = SCHEDULES[schedule]()
-    server = DiceServer(cfg, dcfg, seed=0, mesh=mesh,
+    params = skewed_params(cfg, skew, seed=0)
+    server = DiceServer(cfg, dcfg, params=params, mesh=mesh,
                         compress=CompressConfig(codec=codec),
                         overlap=overlap)
     reqs = [Request(class_id=i % cfg.num_classes, rid=i)
@@ -108,6 +141,49 @@ def run(*, schedule: str = "dice", requests: int = 32, max_batch: int = 8,
     _, fstats = serve_queue(server, reqs, max_batch=max_batch,
                             num_steps=num_steps,
                             key=jax.random.PRNGKey(seed))
+
+    # ---- affinity-aware placement pass (DESIGN.md Sec. 13) ---------------
+    # two-pass flow: the identity run above doubles as the histogram probe
+    # (its stats carry the routing-share EMA); the optimizer turns that
+    # into per-layer placements + a hot-expert replica set, and a second
+    # placed run over the SAME request trace measures what the layout
+    # actually saves on the wire.  Parity gates against a mesh-less
+    # identity baseline of the same trace.
+    place_res = {}
+    if placement == "greedy" and ep > 1:
+        shares = np.asarray(cstats["routing_shares"])
+        pls = placement_lib.greedy_placements(shares, ep,
+                                              replicate_top=replicate_top)
+        dcfg_placed = dataclasses.replace(server.dcfg, placements=pls)
+        server_pl = DiceServer(cfg, dcfg_placed, params=params, mesh=mesh)
+        out_pl, pstats = serve_continuous(server_pl, reqs,
+                                          max_batch=max_batch,
+                                          num_steps=num_steps,
+                                          arrival_steps=arrivals,
+                                          key=jax.random.PRNGKey(seed))
+        server_1d = DiceServer(cfg, server.dcfg, params=params, n_dev=ep)
+        out_1d, _ = serve_continuous(server_1d, reqs, max_batch=max_batch,
+                                     num_steps=num_steps,
+                                     arrival_steps=arrivals,
+                                     key=jax.random.PRNGKey(seed))
+        parity = max(float(np.max(np.abs(out_pl[r] - out_1d[r])))
+                     for r in out_1d)
+        ident_hop = cstats["hop_bytes_total"]
+        place_res = {
+            "placement_hop_bytes_total": pstats["hop_bytes_total"],
+            "identity_hop_bytes_total": ident_hop,
+            "hop_bytes_reduction": 1.0 - pstats["hop_bytes_total"]
+            / max(ident_hop, 1.0),
+            "placement_parity_err": parity,
+            "placement_wire_scale": pstats["placement_wire_scale"],
+            "placement_replicated": [list(p.replicated) for p in pls],
+            "placement_cap_scales": [p.cap_scale for p in pls],
+            "placement_jit_cache_size": pstats["jit_cache_size"],
+            "placement_num_plan_variants": pstats["num_plan_variants"],
+            # modeled ring-step latency with vs without the placement
+            "modeled_step_ring_s_identity": cstats["modeled_step_ring_s"],
+            "modeled_step_ring_s_placed": pstats["modeled_step_ring_s"],
+        }
 
     # server.dcfg, not the local dcfg: DiceServer threads the CompressConfig
     # into its schedule config, and the codec-aware light_scale of the
@@ -148,10 +224,19 @@ def run(*, schedule: str = "dice", requests: int = 32, max_batch: int = 8,
         "modeled_overlap_efficiency": cstats["modeled_overlap_efficiency"],
         "modeled_step_blocking_s": cstats["modeled_step_blocking_s"],
         "modeled_step_ring_s": cstats["modeled_step_ring_s"],
+        # routing skew + placement (DESIGN.md Sec. 13)
+        "skew": skew,
+        "placement": placement,
+        "replicate_top": replicate_top,
+        "max_routing_share": float(
+            np.asarray(cstats["routing_shares"]).max()),
+        **place_res,
     }
     tag = f"serve_throughput/{schedule}" \
           + (f"+{codec}" if codec != "none" else "") \
           + (f"+{overlap}" if overlap != "blocking" else "") \
+          + (f"+{skew}" if skew != "uniform" else "") \
+          + (f"+{placement}" if placement != "identity" else "") \
           + f"/b{max_batch}"
     common.csv_row(
         tag,
@@ -161,7 +246,9 @@ def run(*, schedule: str = "dice", requests: int = 32, max_batch: int = 8,
         f"fifo_padded={res['fifo_padded_slot_steps']} "
         f"occupancy={res['cont_occupancy']:.3f} "
         f"compression={res['cont_compression_ratio']:.2f} "
-        f"overlap_eff={res['modeled_overlap_efficiency']:.2f}")
+        f"overlap_eff={res['modeled_overlap_efficiency']:.2f}"
+        + (f" hop_reduction={place_res['hop_bytes_reduction']:.2f}"
+           if place_res else ""))
     return res
 
 
@@ -188,6 +275,18 @@ def main():
                     help="a2a execution engine (DESIGN.md Sec. 12): ring "
                          "pipelines chunked ppermute hops against the "
                          "expert FFN (executed when --ep > 1)")
+    ap.add_argument("--skew", default="uniform",
+                    help="routing skew knob: 'uniform' or 'zipf:<a>' "
+                         "(biases router logits by -a*ln(rank+1), expert "
+                         "0 hottest — DESIGN.md Sec. 13)")
+    ap.add_argument("--placement", choices=["identity", "greedy"],
+                    default="identity",
+                    help="expert placement (Sec. 13): 'greedy' runs the "
+                         "two-pass flow — identity probe, then the "
+                         "affinity bin-pack layout — and compares "
+                         "hop_bytes_total between the runs")
+    ap.add_argument("--replicate-top", type=int, default=0,
+                    help="hottest experts replicated on every device")
     args = ap.parse_args()
     if args.smoke:
         args.requests = min(args.requests, 12)
@@ -197,7 +296,9 @@ def main():
     res = run(schedule=args.schedule, requests=args.requests,
               max_batch=args.max_batch, num_steps=args.steps,
               rate=args.rate, seed=args.seed, smoke=args.smoke, ep=args.ep,
-              codec=args.codec, overlap=args.overlap)
+              codec=args.codec, overlap=args.overlap, skew=args.skew,
+              placement=args.placement, replicate_top=args.replicate_top)
+    common.write_bench_json("serve_throughput", res)
     for k, v in res.items():
         print(f"  {k:28s} {v:.6g}" if isinstance(v, float)
               else f"  {k:28s} {v}")
@@ -227,12 +328,29 @@ def main():
             rings = 4 if args.schedule == "staggered_batch" else 2
             assert res["cont_ring_hops"] == rings * (args.ep - 1), res
             assert res["cont_hop_bytes_total"] > 0
+    if args.placement == "greedy" and args.ep > 1:
+        # affinity-aware placement acceptance (DESIGN.md Sec. 13): the
+        # placed run of the SAME request trace must put strictly fewer
+        # bytes on the ring than the identity probe — ≥20% with a
+        # replicated hot expert under zipf skew — while matching the
+        # single-device identity baseline and holding the jit-cache
+        # contract
+        assert res["placement_hop_bytes_total"] < \
+            res["identity_hop_bytes_total"], res
+        assert res["placement_parity_err"] <= 1e-4, res
+        assert res["placement_jit_cache_size"] == \
+            res["placement_num_plan_variants"], res
+        if args.replicate_top >= 1 and args.skew != "uniform":
+            assert res["hop_bytes_reduction"] >= 0.20, res
     print("OK: continuous < fifo padded-slot steps, jit cache == variants"
           + (f", wire compression {res['cont_compression_ratio']:.2f}x"
              if compresses else "")
           + (f", ring hops {res['cont_ring_hops']}, overlap efficiency "
              f"{res['modeled_overlap_efficiency']:.2f}"
-             if args.overlap == "ring" else ""))
+             if args.overlap == "ring" else "")
+          + (f", placement hop-bytes -{res['hop_bytes_reduction']:.0%} "
+             f"(parity {res['placement_parity_err']:.1e})"
+             if args.placement == "greedy" and args.ep > 1 else ""))
 
 
 if __name__ == "__main__":

@@ -31,6 +31,11 @@ def ep_param_specs(params, *, ep_axis: str = "ep"):
     """
     def spec_for(path):
         names = [str(getattr(k, "key", getattr(k, "idx", ""))) for k in path]
+        # hot-expert replica stacks (DESIGN.md Sec. 13, ``experts_*_rep``
+        # from ``repro.core.placement.place_moe_params``) live in full on
+        # EVERY device — that is the whole point of replication
+        if any(n.endswith("_rep") for n in names):
+            return P()
         if any(n.startswith("experts_") for n in names):
             return P(ep_axis)
         return P()

@@ -34,6 +34,7 @@ from repro.common import compat
 from repro.common.config import ModelConfig
 from repro.compress import codecs as codec_lib
 from repro.core import overlap as overlap_lib
+from repro.core.placement import Placement
 from repro.models.layers import dense_init
 
 
@@ -81,8 +82,16 @@ class DispatchPlan(NamedTuple):
 
 
 def route(p, x, cfg: ModelConfig, *, key=None):
-    """Router probabilities + top-k selection.  x: (T, d)."""
+    """Router probabilities + top-k selection.  x: (T, d).
+
+    An optional ``p["router_bias"]`` (E,) adds to the logits — the
+    routing-skew knob synthetic workloads use to shape the per-expert
+    traffic histogram (benchmarks' ``--skew zipf:a``); absent in real
+    checkpoints, where the trained router carries its own skew.
+    """
     logits = x.astype(jnp.float32) @ p["router"]
+    if "router_bias" in p:
+        logits = logits + p["router_bias"].astype(jnp.float32)[None, :]
     if key is not None and cfg.router_jitter > 0:
         logits += cfg.router_jitter * jax.random.normal(key, logits.shape)
     probs = jax.nn.softmax(logits, axis=-1)
@@ -210,6 +219,15 @@ class MoEAux(NamedTuple):
     #                                like dispatch_bytes, counted under the
     #                                Sec.-11 wire model where BOTH directions
     #                                carry codec'd residuals
+    counts: Optional[jnp.ndarray] = None  # (E,) fresh pairs ROUTED per
+    #                                expert (expert-id space, post-mask,
+    #                                PRE-capacity-drop — demand)
+    served_counts: Optional[jnp.ndarray] = None  # (E,) fresh pairs actually
+    #                                SERVED per expert (post-capacity-drop,
+    #                                wire-kept + replica-served) — what the
+    #                                placement histogram accumulates, so
+    #                                dropped tokens never inflate a hot
+    #                                expert's score (Sec. 13)
 
 
 def moe_forward(p, x, cfg: ModelConfig, *,
@@ -222,7 +240,8 @@ def moe_forward(p, x, cfg: ModelConfig, *,
                 want_pair_vals: bool = False,
                 codec: Optional[codec_lib.CodecSpec] = None,
                 dispatch_base: Optional[jnp.ndarray] = None,
-                overlap: bool = False):
+                overlap: bool = False,
+                placement: Optional[Placement] = None):
     """MoE layer forward.  x: (T, d) flat tokens (per-device shard if EP).
 
     ``ep_axis``: mesh axis name for expert parallelism — call inside
@@ -255,13 +274,45 @@ def moe_forward(p, x, cfg: ModelConfig, *,
     and outputs stay bit-identical); the total wire volume and
     ``aux.dispatch_bytes`` are unchanged — only the collective shape is
     (``aux.hops`` / ``aux.hop_bytes`` report the decomposition).
+
+    ``placement`` (DESIGN.md Sec. 13): the dispatch buffer indexes
+    experts in the placement's device-major wire order (the expert
+    stacks in ``p`` must already be permuted to match —
+    :func:`repro.core.placement.placed_params`), and pairs routed to a
+    replicated expert never enter it: they dispatch into a small LOCAL
+    buffer served by the ``experts_*_rep`` replica stacks (the identical
+    per-row math, so outputs match the identity layout bit-for-bit),
+    riding the ring's hop-1 wire time as its prelude.  The caller passes
+    the placement-scaled ``capacity`` (``LayerAction.dispatch_capacity``)
+    — that scaling, not the masking, is what shrinks the statically
+    shaped wire payload.  Identity placements must be passed as ``None``
+    (the StepPlan engine normalizes them away).
     """
     T, d = x.shape
     E = cfg.num_experts
     probs, scores, idx = route(p, x, cfg, key=key)
+    K = idx.shape[1]
+    pl = placement if (placement is not None
+                      and not placement.is_identity) else None
     if capacity is None:
         capacity = default_capacity(T, cfg)
-    plan = make_plan(idx, E, capacity, fresh_mask=fresh_mask)
+        if pl is not None:
+            capacity = pl.scaled_capacity(capacity)
+
+    # ---- placement: replicated pairs leave the wire entirely; the rest
+    # scatter at the placement's wire positions so each device's buffer
+    # chunk addresses the experts it (post-permutation) owns
+    rep_mask = None
+    wire_fresh = fresh_mask
+    wire_idx = idx
+    if pl is not None:
+        if pl.replicated:
+            rep_ids = jnp.asarray(pl.replicated)
+            rep_mask = (idx[..., None] == rep_ids[None, None, :]).any(-1)
+            wire_fresh = ~rep_mask if fresh_mask is None \
+                else (fresh_mask & ~rep_mask)
+        wire_idx = jnp.asarray(pl.inv_perm())[idx]
+    plan = make_plan(wire_idx, E, capacity, fresh_mask=wire_fresh)
     # ---- wire codec, dispatch direction: the (E, C, d) buffer scattered
     # below holds rows of x_wire, so encoding per token before the scatter
     # is exactly encoding the buffer the all-to-all moves
@@ -272,9 +323,37 @@ def moe_forward(p, x, cfg: ModelConfig, *,
         x_wire = codec_lib.apply(codec, x, base, use_pallas=use_pallas)
     buf = dispatch(x_wire, plan, E, capacity)                   # (E, C, d)
 
+    # ---- replica-served pairs: dispatch the SAME wire payload (x_wire —
+    # codec'd rows stay codec'd, keeping parity with the identity layout,
+    # which quantizes every fresh pair) into a local (R, C_loc, d) buffer.
+    # C_loc covers all T*K pairs: replicas hold the HOT experts, whose
+    # identity-capacity headroom the scaled wire buffer gave away.
+    loc_plan = loc_buf = loc_ffn = None
+    if rep_mask is not None:
+        R = len(pl.replicated)
+        pos_of = [R] * E
+        for j, e in enumerate(pl.replicated):
+            pos_of[e] = j
+        loc_idx = jnp.asarray(pos_of)[idx]
+        loc_fresh = rep_mask if fresh_mask is None \
+            else (fresh_mask & rep_mask)
+        loc_cap = -(-(T * K) // 8) * 8
+        loc_plan = make_plan(loc_idx, R, loc_cap, fresh_mask=loc_fresh)
+        loc_buf = dispatch(x_wire, loc_plan, R, loc_cap)
+        rep_p = {"experts_gate": p["experts_gate_rep"],
+                 "experts_up": p["experts_up_rep"],
+                 "experts_down": p["experts_down_rep"]}
+
+        def loc_ffn():
+            return expert_ffn(rep_p, loc_buf, act=cfg.act,
+                              use_pallas=use_pallas)
+
     n_dev = 1
+    loc_out = None
     if ep_axis is None:
         buf_out = expert_ffn(p, buf, act=cfg.act, use_pallas=use_pallas)
+        if loc_ffn is not None:
+            loc_out = loc_ffn()
     else:
         n = compat.axis_size(ep_axis)
         if E % n:
@@ -283,16 +362,23 @@ def moe_forward(p, x, cfg: ModelConfig, *,
                 f"{ep_axis!r} mesh axis for expert parallelism")
         n_dev = n
         e_loc = E // n
-        local = {k: v for k, v in p.items() if k.startswith("experts_")}
+        local = {k: v for k, v in p.items()
+                 if k.startswith("experts_") and not k.endswith("_rep")}
         if overlap and n > 1:
             # ---- ring engine (DESIGN.md Sec. 12): 2*(n-1) ppermutes whose
             # chunk transfers overlap the per-chunk expert FFN; same wire
-            # volume as the all-to-alls, decomposed so XLA can hide it
+            # volume as the all-to-alls, decomposed so XLA can hide it.
+            # The replica FFN rides as the ring's prelude: issued behind
+            # hop 1's wire transfer, so serving hot experts locally costs
+            # no additional exposed time (Sec. 13).
             b = overlap_lib.ring_expert_exchange(
                 buf.reshape(n, e_loc, capacity, d),
                 lambda c: expert_ffn(local, c, act=cfg.act,
                                      use_pallas=use_pallas),
-                ep_axis=ep_axis, n=n, wire_dtype=x.dtype)
+                ep_axis=ep_axis, n=n, wire_dtype=x.dtype,
+                prelude_fn=loc_ffn)
+            if loc_ffn is not None:
+                b, loc_out = b
             buf_out = b.reshape(E, capacity, d)
         else:
             # ---- dispatch all-to-all (collective #1) ---------------------
@@ -312,9 +398,27 @@ def moe_forward(p, x, cfg: ModelConfig, *,
             b = jax.lax.all_to_all(b.astype(x.dtype), ep_axis, split_axis=0,
                                    concat_axis=0, tiled=True)
             buf_out = b.reshape(E, capacity, d)
+            if loc_ffn is not None:
+                loc_out = loc_ffn()
 
-    y, pair_vals, pair_keep = combine(buf_out, plan, scores, T,
-                                      h_cache=h_cache, fresh_mask=fresh_mask)
+    if rep_mask is not None:
+        # merge wire and replica outputs per (token, rank) pair, then apply
+        # the conditional-communication cache exactly as ``combine`` would:
+        # same select order, same dtypes — bit-identical to the identity
+        # layout's path for every pair
+        _, wire_vals, wire_keep = combine(buf_out, plan, scores, T)
+        _, loc_vals, loc_keep = combine(loc_out, loc_plan, scores, T)
+        pair_vals = jnp.where(rep_mask[..., None], loc_vals, wire_vals)
+        pair_keep = jnp.where(rep_mask, loc_keep, wire_keep)
+        if h_cache is not None and fresh_mask is not None:
+            pair_vals = jnp.where(fresh_mask[..., None], pair_vals,
+                                  h_cache.astype(pair_vals.dtype))
+        y = jnp.einsum("tk,tkd->td", scores.astype(jnp.float32),
+                       pair_vals.astype(jnp.float32))
+    else:
+        y, pair_vals, pair_keep = combine(buf_out, plan, scores, T,
+                                          h_cache=h_cache,
+                                          fresh_mask=fresh_mask)
     if codec is not None and h_cache is not None:
         # ---- wire codec, combine direction: freshly transmitted pairs
         # arrive as residuals against the shared (token, rank) cache; the
@@ -334,11 +438,28 @@ def moe_forward(p, x, cfg: ModelConfig, *,
     if cfg.num_shared_experts:
         y = y + shared_expert(p, x, act=cfg.act).astype(y.dtype)
 
+    # ---- per-expert accounting (expert-ID space, whatever the wire
+    # layout): ``counts`` is routed demand (post-mask, PRE-drop);
+    # ``served_counts`` the pairs actually computed fresh this step —
+    # wire-kept plus replica-served — the post-drop histogram the
+    # placement optimizer consumes (Sec. 13)
+    if pl is None:
+        counts = plan.counts                    # wire space == expert space
+    else:
+        flat_e = idx.reshape(-1)
+        if fresh_mask is not None:
+            flat_e = jnp.where(fresh_mask.reshape(-1), flat_e, E)
+        counts = jnp.bincount(jnp.clip(flat_e, 0, E), length=E + 1)[:E]
+    served_counts = jnp.bincount(
+        idx.reshape(-1), weights=pair_keep.reshape(-1).astype(jnp.float32),
+        length=E)
+
     # capacity-drop rate over pairs that were actually dispatched: pairs a
     # conditional-communication mask routed to the virtual expert E are not
-    # drops, they are deliberately-cached pairs (Sec. 4.3)
-    dispatched = plan.counts.sum().astype(jnp.float32)
-    kept = plan.keep.sum().astype(jnp.float32)
+    # drops, they are deliberately-cached pairs (Sec. 4.3); replica-served
+    # pairs count as dispatched-and-kept (their local buffer cannot drop)
+    dispatched = counts.sum().astype(jnp.float32)
+    kept = pair_keep.sum().astype(jnp.float32)
     dropped_frac = jnp.where(dispatched > 0,
                              1.0 - kept / jnp.maximum(dispatched, 1.0), 0.0)
     itemsize = jnp.dtype(x.dtype).itemsize
@@ -359,5 +480,7 @@ def moe_forward(p, x, cfg: ModelConfig, *,
         hops=jnp.asarray(2 * (n_dev - 1) if ring else 0),
         hop_bytes=jnp.asarray((E // n_dev) * capacity * per_row
                               if ring else 0),
+        counts=counts,
+        served_counts=served_counts,
     )
     return y.astype(x.dtype), aux

@@ -47,7 +47,7 @@ splits across hops — ``hop_bytes == e_loc * C * wire_bytes_per_row``.
 """
 from __future__ import annotations
 
-from typing import Callable
+from typing import Callable, Optional
 
 import jax
 import jax.ad_checkpoint
@@ -67,7 +67,9 @@ def ring_shift(x: jnp.ndarray, ep_axis: str, n: int, shift: int) -> jnp.ndarray:
 def ring_expert_exchange(chunks: jnp.ndarray,
                          expert_fn: Callable[[jnp.ndarray], jnp.ndarray],
                          *, ep_axis: str, n: int,
-                         wire_dtype=None) -> jnp.ndarray:
+                         wire_dtype=None,
+                         prelude_fn: Optional[Callable[[], jnp.ndarray]]
+                         = None):
     """Dispatch ring -> per-chunk expert FFN -> combine ring.
 
     chunks
@@ -80,15 +82,22 @@ def ring_expert_exchange(chunks: jnp.ndarray,
         dtype of the combine-direction payload (the blocking path casts
         expert outputs to the activation dtype before the second
         all-to-all); defaults to ``chunks.dtype``.
+    prelude_fn
+        optional wire-free local compute (the hot-expert replica FFN of
+        DESIGN.md Sec. 13) issued right after hop 1's send: it depends on
+        no ring dataflow, so XLA is free to run it — like the resident
+        chunk's FFN — entirely behind the first wire transfer.  When
+        given, the return value becomes ``(out, prelude_out)``.
 
     Returns (n, e_loc, C, d) where piece j holds the expert outputs for
     the rows this device sent toward device j — bit-for-bit the layout of
     the blocking combine all-to-all's result, ready for
-    ``.reshape(E, C, d)``.
+    ``.reshape(E, C, d)``.  With ``prelude_fn``: ``(out, prelude_out)``.
     """
     if n == 1:
         # ring of one: the local chunk is the whole exchange
-        return expert_fn(chunks[0])[None].astype(wire_dtype or chunks.dtype)
+        out1 = expert_fn(chunks[0])[None].astype(wire_dtype or chunks.dtype)
+        return (out1, prelude_fn()) if prelude_fn is not None else out1
     wire_dtype = wire_dtype or chunks.dtype
     idx = jax.lax.axis_index(ep_axis)
 
@@ -101,8 +110,11 @@ def ring_expert_exchange(chunks: jnp.ndarray,
     out = jnp.zeros(chunks.shape, wire_dtype)
 
     # prefetch hop 1 BEFORE the local compute: the first wire transfer is
-    # in flight while the MXU chews the resident chunk (hop 0)
+    # in flight while the MXU chews the resident chunk (hop 0) — and, when
+    # present, the replica prelude (both depend only on this device's
+    # dispatch buffers, never on the wire)
     in_flight = ring_shift(chunk_for_hop(1), ep_axis, n, 1)
+    prelude_out = prelude_fn() if prelude_fn is not None else None
     local_out = expert_fn(chunk_for_hop(0)).astype(wire_dtype)
     out = jax.lax.dynamic_update_index_in_dim(out, local_out, idx, axis=0)
 
@@ -124,4 +136,4 @@ def ring_expert_exchange(chunks: jnp.ndarray,
         back = ring_shift(o, ep_axis, n, -h)
         out = jax.lax.dynamic_update_index_in_dim(out, back, (idx + h) % n,
                                                   axis=0)
-    return out
+    return (out, prelude_out) if prelude_fn is not None else out

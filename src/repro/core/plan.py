@@ -34,6 +34,7 @@ from typing import Callable, Dict, List, Optional, Tuple
 
 from repro.compress.codecs import CodecSpec
 from repro.core import conditional
+from repro.core.placement import Placement
 from repro.core.selective import sync_layer_mask
 
 
@@ -84,6 +85,15 @@ class LayerAction:
         normalize it away when no ep mesh (or a 1-device axis) backs the
         run (:func:`normalize_overlap`), so single-device plan variants
         and outputs stay bit-identical to blocking.
+    placement
+        this layer's expert layout (DESIGN.md Sec. 13): the dispatch
+        buffer's expert order, the replica set served locally off the
+        wire, and the histogram-informed capacity scale.  Hashable and
+        planned like ``codec``; the caller contract is that the expert
+        params were re-laid-out with
+        :func:`repro.core.placement.placed_params` to match.  Identity
+        placements normalize to ``None`` so plans — and outputs — stay
+        bit-identical to pre-placement configs.
     """
     mode: str = "sync"
     store_y: bool = False
@@ -94,6 +104,7 @@ class LayerAction:
     codec: Optional[CodecSpec] = None
     store_base: bool = False
     overlap: bool = False
+    placement: Optional[Placement] = None
 
     def __post_init__(self):
         if self.mode not in ("sync", "displaced", "interweaved", "staggered"):
@@ -106,6 +117,11 @@ class LayerAction:
             raise ValueError("staggered mode does not support a wire codec "
                              "(half-batch payloads have no per-batch "
                              "residual base)")
+        if self.placement is not None and self.placement.is_identity:
+            # normalize: the identity placement IS the pre-placement layout
+            # and must be indistinguishable from no placement (bit-identity
+            # + plan equality, like codec="none" / overlap on one device)
+            object.__setattr__(self, "placement", None)
 
     # -- buffer read/write accounting (drives the derived properties) -------
     @property
@@ -153,9 +169,19 @@ class LayerAction:
         a mesh the plan sizes the buffer from the LOCAL shard, so a
         Conditional-Communication light step (``effective_k < K``) shrinks
         the payload actually on the wire, not just a mask over it.
+
+        A placement with replicas additionally scales the buffer by its
+        histogram-informed ``cap_scale`` (DESIGN.md Sec. 13): with the
+        hottest experts served off-wire by local replicas, the static
+        per-expert capacity only needs the hottest *remaining* expert's
+        headroom — this is where replication turns into genuinely fewer
+        wire bytes rather than a mask over the same buffer.
         """
         from repro.core.moe import default_capacity
-        return default_capacity(num_local_tokens, cfg, k=self.effective_k)
+        cap = default_capacity(num_local_tokens, cfg, k=self.effective_k)
+        if self.placement is not None:
+            cap = self.placement.scaled_capacity(cap)
+        return cap
 
     def dispatch_bytes(self, num_local_tokens: int, cfg, *,
                        itemsize: int = 4) -> int:
@@ -278,13 +304,26 @@ def plan_for_step(dcfg, num_moe_layers: int, step_idx: int, *,
 
     A ``dcfg.overlap == "ring"`` config stamps ``LayerAction.overlap`` on
     every action here, after the planner ran — one point of truth, so
-    third-party registered schedules ride the ring engine for free.
+    third-party registered schedules ride the ring engine for free.  A
+    ``dcfg.placements`` tuple stamps each layer's expert placement the
+    same way (identity entries normalize back to ``None`` inside
+    ``LayerAction``), so every registered schedule gets affinity-aware
+    placement without planner changes.
     """
     planner = get_planner(dcfg.schedule)
     plan = planner(dcfg, num_moe_layers, step_idx, experts_per_token)
     if overlap_of(dcfg) and not all(a.overlap for a in plan.actions):
         plan = dataclasses.replace(plan, actions=tuple(
             dataclasses.replace(a, overlap=True) for a in plan.actions))
+    placements = placements_of(dcfg)
+    if placements is not None:
+        if len(placements) != len(plan.actions):
+            raise ValueError(
+                f"dcfg.placements has {len(placements)} entries for "
+                f"{len(plan.actions)} MoE layers")
+        plan = dataclasses.replace(plan, actions=tuple(
+            dataclasses.replace(a, placement=pl)
+            for a, pl in zip(plan.actions, placements)))
     return plan
 
 
@@ -339,6 +378,42 @@ def normalize_overlap(dcfg, n_dev: int):
     if n_dev > 1 or not overlap_of(dcfg):
         return dcfg
     return dataclasses.replace(dcfg, overlap="blocking")
+
+
+def placements_of(dcfg) -> Optional[Tuple[Placement, ...]]:
+    """The per-layer expert placements of ``dcfg``, or None.  ``getattr``
+    so pre-placement config objects (and test doubles) keep planning
+    unchanged."""
+    return getattr(dcfg, "placements", None)
+
+
+def normalize_placement(dcfg, n_dev: int):
+    """Strip ``dcfg.placements`` when no multi-device ep axis backs the run.
+
+    A placement permutes the expert stacks into device-major wire order
+    and serves replicas locally — properties of an n>1 mesh axis.  On one
+    device every expert is already local, the caller's params are in the
+    ORIGINAL layout (``placed_params`` only runs on the mesh path), and a
+    plan that still carried placements would both mis-index the experts
+    and key extra jit entries.  Samplers and the serving engine call this
+    with the mesh's ep size (1 when mesh-less) before compiling plans —
+    exactly like :func:`normalize_overlap` — so single-device plan
+    variants and outputs stay bit-identical to pre-placement configs.
+    """
+    if n_dev > 1 or placements_of(dcfg) is None:
+        return dcfg
+    return dataclasses.replace(dcfg, placements=None)
+
+
+def placement_wire_scale(dcfg) -> float:
+    """Mean planned capacity scale over layers (1.0 without placements) —
+    the factor by which placement shrinks every capacity-sized wire
+    payload; the serving latency model scales its a2a volume by it."""
+    placements = placements_of(dcfg)
+    if not placements:
+        return 1.0
+    return sum(p.cap_scale if p is not None else 1.0
+               for p in placements) / len(placements)
 
 
 def codec_spec_of(dcfg) -> Optional[CodecSpec]:

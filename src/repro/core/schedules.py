@@ -18,9 +18,10 @@ from __future__ import annotations
 
 import enum
 from dataclasses import dataclass
-from typing import Optional, Union
+from typing import Optional, Tuple, Union
 
 from repro.compress.codecs import CompressConfig
+from repro.core.placement import Placement
 
 
 class Schedule(enum.Enum):
@@ -70,6 +71,14 @@ class DiceConfig:
     # each hop's wire time behind the expert GEMMs.  Normalized back to
     # "blocking" by the entry points when no n>1 ep mesh backs the run.
     overlap: str = "blocking"
+    # -- expert level: affinity-aware placement + hot-expert replication ------
+    # (DESIGN.md Sec. 13) one Placement per MoE layer, stamped onto every
+    # LayerAction by the plan compiler; the caller re-lays-out the expert
+    # params to match (repro.core.placement.placed_params).  None — or a
+    # tuple of identity placements, which normalize away — is the
+    # pre-placement layout.  Normalized to None by the entry points when
+    # no n>1 ep mesh backs the run (plan.normalize_placement).
+    placements: Optional[Tuple[Optional[Placement], ...]] = None
 
     def __post_init__(self):
         if self.overlap not in ("blocking", "ring"):

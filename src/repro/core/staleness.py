@@ -210,7 +210,8 @@ def apply_layer_action(p, x, cfg: ModelConfig, action: LayerAction,
                            h_cache=cache, ep_axis=ep_axis, key=key,
                            use_pallas=use_pallas, want_pair_vals=want_cache,
                            codec=action.codec, dispatch_base=state.c_base,
-                           overlap=action.overlap)
+                           overlap=action.overlap,
+                           placement=action.placement)
 
     def next_base(payload, aux):
         """Residual base for the next wire transmission (Sec. 11): the
@@ -276,7 +277,9 @@ def apply_layer_action(p, x, cfg: ModelConfig, action: LayerAction,
                      # layer lowers both rings' permutes (4*(n-1) total),
                      # each hop moving one half-batch chunk
                      hops=aux0.hops + aux1.hops,
-                     hop_bytes=aux0.hop_bytes)
+                     hop_bytes=aux0.hop_bytes,
+                     counts=aux0.counts + aux1.counts,
+                     served_counts=aux0.served_counts + aux1.served_counts)
         return out, new, aux
 
     # "interweaved": dispatch of x(s) completes within step s (overlapped

@@ -32,6 +32,7 @@ from repro.common.config import HW, ModelConfig
 from repro.compress.codecs import CODEC_KINDS, CompressConfig
 from repro.configs.dit_moe_xl import config as xl_config, tiny
 from repro.core import conditional
+from repro.core import placement as placement_lib
 from repro.core import plan as plan_lib
 from repro.core import staleness as stale_lib
 from repro.core.schedules import DiceConfig
@@ -120,6 +121,11 @@ def modeled_step_latency(cfg: ModelConfig, dcfg: DiceConfig, *,
     # per-layer all-to-all: dispatch + combine of the capacity buffer
     cap_tokens = tokens * cfg.experts_per_token * cfg.capacity_factor
     a2a_full = 2 * cap_tokens * d * 2 * (n_dev - 1) / n_dev
+    # affinity-aware placement (Sec. 13): hot replicated experts serve
+    # their tokens locally and the dispatch capacity scales down with
+    # them, shrinking every capacity-sized wire payload by the planned
+    # mean per-layer capacity scale (1.0 without placements)
+    a2a_full *= plan_lib.placement_wire_scale(dcfg)
     a2a_async = a2a_full
     # wire codec (Sec. 11): light-step payloads shrink by the codec's
     # ratio at the 2-byte (bf16/fp16) wire dtype the model counts in
@@ -204,7 +210,8 @@ class DiceServer:
                  mesh: Optional[jax.sharding.Mesh] = None,
                  ep_axis: str = "ep",
                  compress: Optional[CompressConfig] = None,
-                 overlap: Optional[str] = None):
+                 overlap: Optional[str] = None,
+                 placement: Optional[placement_lib.PlacementConfig] = None):
         if mesh is not None and ep_axis not in mesh.axis_names:
             raise ValueError(f"mesh axes {mesh.axis_names} lack {ep_axis!r}")
         if compress is not None:
@@ -229,6 +236,11 @@ class DiceServer:
         self.n_dev = n_dev
         self.mesh = mesh
         self.ep_axis = ep_axis
+        # online affinity-aware placement (Sec. 13): "greedy" mode makes
+        # serve_continuous accumulate a routing histogram and re-layout
+        # the experts when it drifts; None / "identity" leaves the layout
+        # alone (any dcfg.placements the caller pre-planned still apply)
+        self.placement = placement
         self.params = params if params is not None else init_dit(
             jax.random.PRNGKey(seed), cfg)
         if mesh is not None:
@@ -430,6 +442,10 @@ def serve_continuous(server: "DiceServer", requests: List[Request], *,
     # the un-normalized server.dcfg: it describes the target deployment.
     dcfg = plan_lib.normalize_overlap(
         dcfg, mesh.shape[ep_axis] if mesh is not None else 1)
+    # placement likewise is an n>1-mesh layout property (Sec. 13): the
+    # single-device server's params are unpermuted, so placements strip
+    dcfg = plan_lib.normalize_placement(
+        dcfg, mesh.shape[ep_axis] if mesh is not None else 1)
     key = key if key is not None else jax.random.PRNGKey(0)
     noise_key, step_key = jax.random.split(key)
     B, Tp = max_batch, cfg.patch_tokens
@@ -446,15 +462,38 @@ def serve_continuous(server: "DiceServer", requests: List[Request], *,
         from repro.common.sharding import ep_place_batch
         return ep_place_batch(a, mesh, ep_axis=ep_axis)
 
-    splan = plan_lib.compile_step_plans(dcfg, cfg.num_layers, num_steps,
-                                        experts_per_token=k_exp)
+    def _build(dcfg):
+        """Compile plans + step function for one placement epoch.  A
+        drift-triggered re-shard swaps ``dcfg.placements`` and rebuilds —
+        always from ``server.params`` (the ORIGINAL, identity-layout
+        tree), which ``_make_mesh_rf_step`` re-lays-out per placement."""
+        splan = plan_lib.compile_step_plans(dcfg, cfg.num_layers, num_steps,
+                                            experts_per_token=k_exp)
+        merge_plan = plan_lib.slotted_merge_plan(dcfg, cfg.num_layers,
+                                                 experts_per_token=k_exp)
+        rf_step = make_rf_step(server.params, cfg, dcfg, dt=dt,
+                               guidance=guidance, mesh=mesh, ep_axis=ep_axis)
+        return splan, merge_plan, rf_step
+
+    splan, merge_plan, rf_step = _build(dcfg)
     period = plan_lib.steady_period(dcfg, cfg.num_layers,
                                     experts_per_token=k_exp)
-    merge_plan = plan_lib.slotted_merge_plan(dcfg, cfg.num_layers,
-                                             experts_per_token=k_exp)
     merge_wants_cache = any(a.want_cache for a in merge_plan.actions)
-    rf_step = make_rf_step(server.params, cfg, dcfg, dt=dt,
-                           guidance=guidance, mesh=mesh, ep_axis=ep_axis)
+
+    # ---- online affinity-aware placement (DESIGN.md Sec. 13) -------------
+    # the histogram always accumulates (it is the probe the two-pass
+    # benchmark reads back); re-sharding only triggers in "greedy" mode on
+    # an n>1 ep mesh, at admission-aligned boundaries, after warmup
+    pcfg = server.placement
+    n_place = mesh.shape[ep_axis] if mesh is not None else 1
+    place_online = (pcfg is not None and pcfg.mode == "greedy"
+                    and n_place > 1)
+    hist = placement_lib.RoutingHistogram(
+        cfg.num_layers, cfg.num_experts,
+        decay=pcfg.ema_decay if pcfg is not None else 0.9)
+    placed_shares = None      # shares snapshot behind the live placements
+    placement_reshards = 0
+    jit_cache_peak = 0
     planned_init = partial(stale_lib.init_planned_states, splan,
                            num_tokens=B * Tp, d_model=cfg.d_model,
                            k=k_exp, dtype=jnp.float32, mesh=mesh,
@@ -487,6 +526,30 @@ def serve_continuous(server: "DiceServer", requests: List[Request], *,
         return g + (-g) % period
 
     while pending or any(s.active for s in slots):
+        # ---- drift-triggered re-shard at aligned boundaries --------------
+        # (same cadence as admission: every established slot is at a plan-
+        # cycle boundary, so swapping the placement epoch never splits a
+        # step sequence mid-cycle; staleness caches carry over untouched —
+        # their rows follow tokens, not experts)
+        if (place_online and tick % period == 0
+                and hist.updates >= pcfg.warmup_ticks):
+            base = (placed_shares if placed_shares is not None
+                    else np.full((cfg.num_layers, cfg.num_experts),
+                                 1.0 / cfg.num_experts))
+            if placement_lib.drift(base, hist.shares) > pcfg.drift_threshold:
+                new_pl = placement_lib.greedy_placements(
+                    hist.shares, n_place,
+                    replicate_top=pcfg.replicate_top)
+                if all(p.is_identity for p in new_pl):
+                    new_pl = None
+                if new_pl != plan_lib.placements_of(dcfg):
+                    jit_cache_peak = max(jit_cache_peak,
+                                         int(rf_step._cache_size()))
+                    dcfg = dataclasses.replace(dcfg, placements=new_pl)
+                    splan, merge_plan, rf_step = _build(dcfg)
+                    placement_reshards += 1
+                placed_shares = hist.shares
+
         # ---- admission at plan-variant-aligned boundaries ----------------
         if tick % period == 0:
             recycle = np.zeros(B, bool)
@@ -558,6 +621,7 @@ def serve_continuous(server: "DiceServer", requests: List[Request], *,
         executed_ticks += 1
         slotted_ticks += int(slotted)
         padded_slot_steps += sum(not s.active for s in slots)
+        hist.update(np.asarray(aux["expert_counts"]))
         dispatch_bytes_total += float(aux["dispatch_bytes"])
         raw_bytes_total += float(aux["raw_dispatch_bytes"])
         hop_bytes_total += float(aux["hop_bytes"])
@@ -574,7 +638,14 @@ def serve_continuous(server: "DiceServer", requests: List[Request], *,
                 classes[i] = cfg.num_classes
         tick += 1
 
-    lat = modeled_step_latency(cfg, server.dcfg, n_dev=server.n_dev,
+    # the latency model describes the REQUESTED deployment (server.dcfg,
+    # un-normalized) but with whatever placements the run ended on — an
+    # online re-shard changes the modeled wire volume going forward
+    lat_dcfg = server.dcfg
+    live_placements = plan_lib.placements_of(dcfg)
+    if live_placements is not None:
+        lat_dcfg = dataclasses.replace(lat_dcfg, placements=live_placements)
+    lat = modeled_step_latency(cfg, lat_dcfg, n_dev=server.n_dev,
                                local_batch=max(1, B // server.n_dev))
     stats = {
         "ticks": executed_ticks,
@@ -600,7 +671,18 @@ def serve_continuous(server: "DiceServer", requests: List[Request], *,
         "wire_bytes_total": dispatch_bytes_total,
         "raw_bytes_total": raw_bytes_total,
         "num_plan_variants": splan.num_variants,
-        "jit_cache_size": int(rf_step._cache_size()),
+        # max over placement epochs: each epoch's fresh step function
+        # holds at most one entry per plan variant, and the peak is the
+        # contract the benchmark asserts (== variants when no re-shard)
+        "jit_cache_size": max(jit_cache_peak, int(rf_step._cache_size())),
+        # online placement observability (Sec. 13): the EMA the optimizer
+        # would consume — the two-pass benchmark's identity run reads
+        # this back as its histogram probe — plus the re-shard count and
+        # the planned wire scale the run ended on
+        "routing_shares": hist.shares.tolist(),
+        "hist_updates": hist.updates,
+        "placement_reshards": placement_reshards,
+        "placement_wire_scale": plan_lib.placement_wire_scale(dcfg),
     }
     return out, stats
 
@@ -637,6 +719,16 @@ def main():
                          "against the expert FFN instead of two blocking "
                          "all-to-alls (executed when --ep > 1; always "
                          "reflected in the modeled latency)")
+    ap.add_argument("--placement", choices=["identity", "greedy"],
+                    default="identity",
+                    help="expert placement policy (DESIGN.md Sec. 13): "
+                         "'greedy' makes the continuous engine accumulate "
+                         "a routing histogram and re-layout the experts "
+                         "(affinity bin-pack + hot-expert replication) "
+                         "when it drifts past the threshold")
+    ap.add_argument("--replicate-top", type=int, default=0,
+                    help="hottest experts replicated on every device "
+                         "(served locally, off the wire); 0 disables")
     ap.add_argument("--continuous", action="store_true",
                     help="drain the requests through the continuous-"
                          "batching engine (--max-batch slots) instead of "
@@ -658,7 +750,10 @@ def main():
                         mesh=mesh,
                         compress=CompressConfig(codec=args.codec,
                                                 topk_frac=args.topk_frac),
-                        overlap=args.overlap)
+                        overlap=args.overlap,
+                        placement=placement_lib.PlacementConfig(
+                            mode=args.placement,
+                            replicate_top=args.replicate_top))
     reqs = [Request(class_id=i % cfg.num_classes, rid=i)
             for i in range(args.requests)]
     splan = server.plan(args.steps)
@@ -679,6 +774,10 @@ def main():
         finite = all(bool(np.isfinite(s).all()) for s in out.values())
         print(f"served {len(out)} requests continuously, finite={finite}")
         for k, v in stats.items():
+            if k == "routing_shares":
+                flat = np.asarray(v)
+                v = (f"(L={flat.shape[0]}, E={flat.shape[1]}) "
+                     f"max_share={flat.max():.3f}")
             print(f"  {k:26s} {v:.6g}" if isinstance(v, float)
                   else f"  {k:26s} {v}")
         return

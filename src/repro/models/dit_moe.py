@@ -124,6 +124,7 @@ def dit_forward(params, x, t, y, cfg: ModelConfig, dcfg: DiceConfig,
     total_hop_bytes = 0.0
     ring_hops = jnp.asarray(0)
     dropped = 0.0
+    served_counts = []
 
     for i, blk in enumerate(params["blocks"]):
         mod = jax.nn.silu(c) @ blk["adaln"]         # (B, 6d)
@@ -166,6 +167,7 @@ def dit_forward(params, x, t, y, cfg: ModelConfig, dcfg: DiceConfig,
             ring_hops = jnp.maximum(ring_hops, aux.hops)
             total_hop_bytes += aux.hop_bytes
         dropped += aux.dropped_frac
+        served_counts.append(aux.served_counts)
         h = h + g2[:, None, :] * moe_out.reshape(B, T, d).astype(h.dtype)
 
     fmod = jax.nn.silu(c) @ params["final_mod"]
@@ -186,6 +188,9 @@ def dit_forward(params, x, t, y, cfg: ModelConfig, dcfg: DiceConfig,
         "dropped_frac": dropped / cfg.num_layers,
         "buffer_bytes": stale_lib.state_bytes(new_states)
         + sum(p.bytes() for p in new_patch.values()),
+        # (L, E) per-layer post-drop served-pair histogram — the routing
+        # signal the placement optimizer accumulates (DESIGN.md Sec. 13)
+        "expert_counts": jnp.stack(served_counts).astype(jnp.float32),
     }
     if ep_axis is not None:
         # mesh-native execution (inside shard_map): token-mean quantities
@@ -197,6 +202,11 @@ def dit_forward(params, x, t, y, cfg: ModelConfig, dcfg: DiceConfig,
         aux_out["lb_loss"] = jax.lax.pmean(aux_out["lb_loss"], ep_axis)
         aux_out["dropped_frac"] = jax.lax.pmean(aux_out["dropped_frac"],
                                                 ep_axis)
+        # pmean, not psum: the placement histogram normalizes each layer
+        # to shares, so the mean over equal-sized token shards carries the
+        # identical signal while staying replicated like the other aux
+        aux_out["expert_counts"] = jax.lax.pmean(aux_out["expert_counts"],
+                                                 ep_axis)
         aux_out["buffer_bytes"] = (aux_out["buffer_bytes"]
                                    * compat.axis_size(ep_axis))
     return v, new_states, new_patch, aux_out

@@ -162,6 +162,14 @@ def _make_mesh_rf_step(params, cfg: ModelConfig, dcfg: DiceConfig, *,
     if cfg.num_experts % n:
         raise ValueError(f"num_experts={cfg.num_experts} must divide the "
                          f"{n}-way {ep_axis!r} axis")
+    placements = plan_lib.placements_of(dcfg)
+    if placements is not None:
+        # affinity-aware layout (DESIGN.md Sec. 13): permute each layer's
+        # expert stacks to the placement order and append the hot-expert
+        # replica leaves BEFORE sharding — the ep shards then hold the
+        # placed experts and every device carries the replica stack
+        from repro.core import placement as placement_lib
+        params = placement_lib.placed_params(params, placements)
     params = shard_lib.ep_shard_params(params, mesh, ep_axis=ep_axis)
     pspecs = shard_lib.ep_param_specs(params, ep_axis=ep_axis)
 
@@ -177,7 +185,7 @@ def _make_mesh_rf_step(params, cfg: ModelConfig, dcfg: DiceConfig, *,
         aux_spec = {"lb_loss": P(), "dispatch_bytes": P(),
                     "raw_dispatch_bytes": P(), "dropped_frac": P(),
                     "hops": P(), "hop_bytes": P(),
-                    "buffer_bytes": P()}
+                    "buffer_bytes": P(), "expert_counts": P()}
         ops = (params, x, classes, states, states_u, t, key)
         in_specs = (pspecs, P(ep_axis), P(ep_axis), st_spec, stu_spec,
                     P(ep_axis), P())
@@ -262,6 +270,11 @@ def rf_sample(params, cfg: ModelConfig, dcfg: DiceConfig, *,
     # here so a mesh-less (or 1-device-axis) run plans — and therefore
     # samples — bit-identically to a blocking config (DESIGN.md Sec. 12)
     dcfg = plan_lib.normalize_overlap(
+        dcfg, mesh.shape[ep] if mesh is not None else 1)
+    # likewise placement: on a single device the params are unpermuted, so
+    # a placement-bearing config must fall back to the identity layout to
+    # stay bit-identical with its mesh-less baseline (DESIGN.md Sec. 13)
+    dcfg = plan_lib.normalize_placement(
         dcfg, mesh.shape[ep] if mesh is not None else 1)
     x = jax.random.normal(key, (B, cfg.patch_tokens, cfg.in_channels))
     if mesh is not None:

@@ -64,12 +64,17 @@ PROG = textwrap.dedent("""
                                  cond_comm=False)),
         ("dice", DiceConfig.dice(sync_policy="deep")),
     ]
+    refs = {}
+    sync_bytes = None
     for name, dcfg in SCHEDULES:
         ref, _ = rf_sample(params, cfg, dcfg, num_steps=NUM_STEPS,
                            classes=classes, key=key, guidance=1.0)
+        refs[name] = ref
         out, stats = rf_sample(params, cfg, dcfg, num_steps=NUM_STEPS,
                                classes=classes, key=key, guidance=1.0,
                                mesh=mesh)
+        if name == "sync":
+            sync_bytes = sum(stats["dispatch_bytes"])
         err = float(jnp.max(jnp.abs(out.astype(jnp.float32)
                                     - ref.astype(jnp.float32))))
         assert err < 0.1, (name, err)
@@ -117,6 +122,46 @@ PROG = textwrap.dedent("""
     # refresh steps stay lossless and full-size
     assert stats_c["dispatch_bytes"][w] == stats_c["raw_bytes"][w]
     print("COMPRESS", light_c, dice_light_uncompressed, err_c)
+
+    # ---- affinity-aware placement on the mesh path (Sec. 13) -----------
+    # a non-identity placement with a replicated hot expert must keep the
+    # distributed run equal to the UNPLACED single-device reference for
+    # every schedule — the layout is an execution detail, never math —
+    # and must not grow the jit cache past the plan-variant count
+    import dataclasses
+    from repro.core.placement import Placement
+    pl = Placement(perm=(3, 1, 0, 2, 5, 4, 7, 6), replicated=(2,),
+                   cap_scale=1.0)
+    for name, dcfg in SCHEDULES:
+        dcfg_p = dataclasses.replace(dcfg,
+                                     placements=(pl,) * cfg.num_layers)
+        out_p, stats_p = rf_sample(params, cfg, dcfg_p,
+                                   num_steps=NUM_STEPS, classes=classes,
+                                   key=key, guidance=1.0, mesh=mesh)
+        err_p = float(jnp.max(jnp.abs(out_p.astype(jnp.float32)
+                                      - refs[name].astype(jnp.float32))))
+        assert err_p < 0.1, (name, err_p)
+        splan_p = plan_lib.compile_step_plans(
+            dcfg_p, cfg.num_layers, NUM_STEPS,
+            experts_per_token=cfg.experts_per_token)
+        assert stats_p["jit_cache_size"] == splan_p.num_variants, (
+            name, stats_p["jit_cache_size"], splan_p.num_variants)
+        print("PLACED", name, err_p)
+
+    # cap_scale < 1 genuinely shrinks the sharded wire payload (the whole
+    # point of replication) while parity holds in this drop-free config
+    pl_s = Placement(perm=tuple(range(8)), replicated=(0,), cap_scale=0.5)
+    dcfg_s = dataclasses.replace(
+        DiceConfig.sync_ep(), placements=(pl_s,) * cfg.num_layers)
+    out_s, stats_s = rf_sample(params, cfg, dcfg_s, num_steps=NUM_STEPS,
+                               classes=classes, key=key, guidance=1.0,
+                               mesh=mesh)
+    err_s = float(jnp.max(jnp.abs(out_s.astype(jnp.float32)
+                                  - refs["sync"].astype(jnp.float32))))
+    assert err_s < 0.1, err_s
+    scaled_bytes = sum(stats_s["dispatch_bytes"])
+    assert scaled_bytes < sync_bytes, (scaled_bytes, sync_bytes)
+    print("CAPSCALE", scaled_bytes, sync_bytes, err_s)
     print("EPDICE-OK")
 """)
 
@@ -132,3 +177,7 @@ def test_ep_dice_distributed_parity_all_schedules():
         assert f"PARITY {name}" in r.stdout, (name, r.stdout[-2000:])
     # the compressed-DICE wire-bytes case actually ran
     assert "COMPRESS" in r.stdout, r.stdout[-2000:]
+    # the placement conformance cases actually ran, for every schedule
+    for name in ("sync", "displaced", "interweaved", "selective", "dice"):
+        assert f"PLACED {name}" in r.stdout, (name, r.stdout[-2000:])
+    assert "CAPSCALE" in r.stdout, r.stdout[-2000:]
