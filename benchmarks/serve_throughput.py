@@ -88,7 +88,8 @@ def skewed_params(cfg, skew: str, *, seed: int = 0, strength: float = 2.0):
 
 def run(*, schedule: str = "dice", requests: int = 32, max_batch: int = 8,
         num_steps: int = 8, rate: float = 0.5, seed: int = 0,
-        smoke: bool = False, ep: int = 0, codec: str = "none",
+        smoke: bool = False, ep: int = 0, dp: int = 1, patch: int = 1,
+        codec: str = "none",
         overlap: str = "blocking", skew: str = "uniform",
         placement: str = "identity", replicate_top: int = 0) -> dict:
     if os.environ.get("BENCH_SMOKE") == "1" and not smoke:
@@ -110,13 +111,14 @@ def run(*, schedule: str = "dice", requests: int = 32, max_batch: int = 8,
         cfg = cfg.replace(name=cfg.name + "-skew", capacity_factor=8.0,
                           patch_tokens=max(cfg.patch_tokens, 32))
     mesh = None
-    if ep:
-        # mesh-native continuous engine (DESIGN.md §10): slots shard over
-        # the ep axis, so the slot count must divide it
-        from repro.launch.mesh import make_ep_mesh
-        mesh = make_ep_mesh(ep)
-        max_batch = max(max_batch, ep)
-        max_batch -= max_batch % ep
+    if ep or dp > 1 or patch > 1:
+        # mesh-native continuous engine (DESIGN.md §10/§14): slots shard
+        # over the dp x ep batch axes, so the slot count must divide them
+        from repro.launch.mesh import make_mesh
+        mesh = make_mesh(ep=max(1, ep), dp=dp, patch=patch)
+        lanes = max(1, dp) * max(1, ep)
+        max_batch = max(max_batch, lanes)
+        max_batch -= max_batch % lanes
     dcfg = SCHEDULES[schedule]()
     params = skewed_params(cfg, skew, seed=0)
     server = DiceServer(cfg, dcfg, params=params, mesh=mesh,
@@ -195,6 +197,10 @@ def run(*, schedule: str = "dice", requests: int = 32, max_batch: int = 8,
     res = {
         "schedule": schedule,
         "requests": requests,
+        # the hierarchical mesh shape of the run (DESIGN.md §14); all-1
+        # with the sentinel ep size when mesh-less
+        "mesh": {"ep": max(1, ep), "dp": max(1, dp), "patch": max(1, patch),
+                 "native": mesh is not None},
         "fifo_padded_slot_steps": fifo_padded,
         "cont_padded_slot_steps": cstats["padded_slot_steps"],
         "fifo_occupancy": 1.0 - fifo_padded / max(1, fifo_slot_steps),
@@ -267,6 +273,15 @@ def main():
                     help="run mesh-native over an N-way 'ep' axis (needs N "
                          "devices, e.g. XLA_FLAGS="
                          "--xla_force_host_platform_device_count=N)")
+    ap.add_argument("--dp", type=int, default=1,
+                    help="data-parallel replica groups of the hierarchical "
+                         "dp x ep x patch mesh (DESIGN.md §14); needs "
+                         "dp*ep*patch devices")
+    ap.add_argument("--patch", type=int, default=1,
+                    help="patch-parallel split of the image-token dim "
+                         "(§14); the continuous engine refuses it — use "
+                         "repro.launch.serve rigid batches for patch "
+                         "meshes")
     ap.add_argument("--codec", choices=list(CODEC_KINDS), default="none",
                     help="wire codec for staleness-era payloads "
                          "(DESIGN.md Sec. 11)")
@@ -296,6 +311,7 @@ def main():
     res = run(schedule=args.schedule, requests=args.requests,
               max_batch=args.max_batch, num_steps=args.steps,
               rate=args.rate, seed=args.seed, smoke=args.smoke, ep=args.ep,
+              dp=args.dp, patch=args.patch,
               codec=args.codec, overlap=args.overlap, skew=args.skew,
               placement=args.placement, replicate_top=args.replicate_top)
     common.write_bench_json("serve_throughput", res)

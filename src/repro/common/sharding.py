@@ -8,18 +8,63 @@ Conventions (see DESIGN.md §6):
 """
 from __future__ import annotations
 
-from typing import Any, Optional
+from typing import Any, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 from jax.sharding import NamedSharding, PartitionSpec as P
+
+# hierarchical serving mesh axes, outermost first (DESIGN.md §14)
+HIER_AXES = ("dp", "ep", "patch")
 
 
 def batch_spec(mesh) -> Any:
     return ("pod", "data") if "pod" in mesh.axis_names else "data"
 
 
-def ep_param_specs(params, *, ep_axis: str = "ep"):
+def batch_shard_axes(mesh) -> Tuple[str, ...]:
+    """Hierarchical axes the request batch shards over: dp replica groups
+    first, then the per-group ep split.  ``patch`` never shards batch —
+    it shards the image-token dim (DESIGN.md §14)."""
+    return tuple(a for a in ("dp", "ep") if a in mesh.axis_names)
+
+
+def data_shard_axes(mesh) -> Tuple[str, ...]:
+    """Every hierarchical axis data tensors shard over — the axis subset
+    batch-mean reductions (lb loss, aux stats) must span."""
+    return tuple(a for a in HIER_AXES if a in mesh.axis_names)
+
+
+def _one_dim(axes: Tuple[str, ...]):
+    """PartitionSpec entry for one tensor dim sharded over ``axes``:
+    the bare name for a single axis (the historical flat-ep spec, kept
+    bit-identical), a tuple for several, None for none."""
+    if not axes:
+        return None
+    return axes[0] if len(axes) == 1 else tuple(axes)
+
+
+def hier_batch_spec(mesh) -> P:
+    """Spec of a batch-leading array (classes, per-slot selectors) on the
+    hierarchical mesh.  On a flat ``("ep",)`` mesh this is exactly the
+    historical ``P("ep")``."""
+    return P(_one_dim(batch_shard_axes(mesh)))
+
+
+def hier_token_spec(mesh) -> P:
+    """Spec of a (batch, tokens, ...) activation: batch over dp x ep,
+    image tokens over patch when the axis exists."""
+    patch = "patch" if "patch" in mesh.axis_names else None
+    return P(_one_dim(batch_shard_axes(mesh)), patch)
+
+
+def hier_place_batch(a, mesh):
+    """Place a batch-leading array under :func:`hier_batch_spec` — the
+    hierarchical generalization of :func:`ep_place_batch`."""
+    return jax.device_put(a, NamedSharding(mesh, hier_batch_spec(mesh)))
+
+
+def ep_param_specs(params, *, ep_axis: Optional[str] = "ep"):
     """PartitionSpec pytree for expert-parallel serving (DESIGN.md §10).
 
     Routed-expert weights — every leaf whose name starts with ``experts_``,
@@ -27,9 +72,14 @@ def ep_param_specs(params, *, ep_axis: str = "ep"):
     shard their expert dim over ``ep_axis``; everything else (router,
     shared experts, attention, embeddings) is replicated.  This is the
     single source of truth the mesh-native sampler, the serving engine and
-    the multi-device example all use.
+    the multi-device example all use.  ``ep_axis=None`` (an ep-less
+    dp/patch mesh) replicates the expert stacks too — every device then
+    serves all experts locally; implicit replication over any OTHER mesh
+    axis (dp, patch) is what the unmentioned axes already give us.
     """
     def spec_for(path):
+        if ep_axis is None:
+            return P()
         names = [str(getattr(k, "key", getattr(k, "idx", ""))) for k in path]
         # hot-expert replica stacks (DESIGN.md Sec. 13, ``experts_*_rep``
         # from ``repro.core.placement.place_moe_params``) live in full on

@@ -183,7 +183,16 @@ def shared_expert(p, x, *, act: str = "silu"):
 # ---------------------------------------------------------------------------
 # load-balance aux loss (switch-style)
 # ---------------------------------------------------------------------------
-def load_balance_loss(probs, idx, E: int, ep_axis: Optional[str] = None):
+def load_balance_loss(probs, idx, E: int, ep_axis=None):
+    """Switch-style aux loss.  ``ep_axis`` is the axis (or tuple of axes
+    — the hierarchical dp x ep x patch mesh shards tokens over several)
+    the token batch is sharded over; ``None`` means unsharded.
+
+    Reducing over a tuple is dp-invariant by construction: pmean over
+    identical dp replicas is exact in floating point ((x + x) / 2 == x),
+    so the dp=2 loss on per-replica-identical batches equals the dp=1
+    loss bit-for-bit (the property test in test_mesh_hierarchy.py).
+    """
     T, K = idx.shape
     frac_routed = jnp.mean(
         jax.nn.one_hot(idx, E, dtype=jnp.float32).sum(1), axis=0)  # (E,)
@@ -241,7 +250,9 @@ def moe_forward(p, x, cfg: ModelConfig, *,
                 codec: Optional[codec_lib.CodecSpec] = None,
                 dispatch_base: Optional[jnp.ndarray] = None,
                 overlap: bool = False,
-                placement: Optional[Placement] = None):
+                placement: Optional[Placement] = None,
+                reduce_axes=None,
+                hop_schedule=None):
     """MoE layer forward.  x: (T, d) flat tokens (per-device shard if EP).
 
     ``ep_axis``: mesh axis name for expert parallelism — call inside
@@ -287,6 +298,14 @@ def moe_forward(p, x, cfg: ModelConfig, *,
     — that scaling, not the masking, is what shrinks the statically
     shaped wire payload.  Identity placements must be passed as ``None``
     (the StepPlan engine normalizes them away).
+
+    ``reduce_axes`` (DESIGN.md §14): on a hierarchical dp x ep x patch
+    mesh the token batch shards over MORE axes than the all-to-alls run
+    on; the tuple names every token-sharding axis so the lb loss averages
+    the true global batch.  ``None`` keeps the historical flat-ep
+    behaviour (reduce over ``ep_axis`` alone).  ``hop_schedule`` is the
+    topology-aware hop order :func:`repro.core.overlap.ring_hop_schedule`
+    derives; ``None`` is the natural ring order.
     """
     T, d = x.shape
     E = cfg.num_experts
@@ -376,7 +395,7 @@ def moe_forward(p, x, cfg: ModelConfig, *,
                 lambda c: expert_ffn(local, c, act=cfg.act,
                                      use_pallas=use_pallas),
                 ep_axis=ep_axis, n=n, wire_dtype=x.dtype,
-                prelude_fn=loc_ffn)
+                prelude_fn=loc_ffn, hop_schedule=hop_schedule)
             if loc_ffn is not None:
                 b, loc_out = b
             buf_out = b.reshape(E, capacity, d)
@@ -469,7 +488,9 @@ def moe_forward(p, x, cfg: ModelConfig, *,
     # across 2*(n-1) collective-permutes of one (e_loc, C, d) chunk each
     ring = bool(overlap and n_dev > 1)
     aux = MoEAux(
-        lb_loss=load_balance_loss(probs, idx, E, ep_axis=ep_axis),
+        lb_loss=load_balance_loss(
+            probs, idx, E,
+            ep_axis=reduce_axes if reduce_axes is not None else ep_axis),
         dropped_frac=dropped_frac,
         dispatch_bytes=jnp.asarray(E * capacity * per_row),
         pair_vals=pair_vals if (want_pair_vals or fresh_mask is not None) else None,

@@ -47,11 +47,48 @@ splits across hops — ``hop_bytes == e_loc * C * wire_bytes_per_row``.
 """
 from __future__ import annotations
 
-from typing import Callable, Optional
+from typing import Callable, Optional, Tuple
 
 import jax
 import jax.ad_checkpoint
 import jax.numpy as jnp
+
+
+def hop_crossings(shift: int, n: int, devices_per_host: int) -> int:
+    """How many of the n ring edges of a shift-``shift`` permute cross a
+    host boundary, for ``n`` devices packed contiguously ``H`` per host.
+
+    Per host, the senders whose destination ``(j + shift) % n`` lands on
+    another host are the last ``min(shift, H)`` ranks (and symmetrically
+    ``min(n - shift, H)`` for the wrap direction), giving the closed form
+    ``min(shift, n - shift, H)``.  Crossing edges share the host NIC, so
+    the hop's wire time scales with this count (DESIGN.md §14).
+    """
+    if devices_per_host <= 0 or devices_per_host >= n:
+        return 0
+    return min(shift % n, (n - shift) % n, devices_per_host)
+
+
+def ring_hop_schedule(n: int, *, devices_per_host: Optional[int] = None
+                      ) -> Tuple[int, ...]:
+    """Topology-aware order for the (n-1) ring hops: shifts sorted by how
+    many inter-host edges they cross (``hop_crossings``), cheapest first,
+    ties by shift.  Front-loading the intra-host hops lets the pipeline
+    bank compute headroom before the slow inter-host transfers land — the
+    flow-shop makespan of the sorted order lower-bounds every other
+    permutation (DESIGN.md §14).  With no topology (``devices_per_host``
+    unset, or one host) this is the natural order ``(1, ..., n-1)`` and
+    the engine behaves exactly as before.
+    """
+    shifts = list(range(1, n))
+    if devices_per_host is None or devices_per_host >= n:
+        return tuple(shifts)
+    if n % devices_per_host != 0:
+        raise ValueError(f"devices_per_host={devices_per_host} must divide "
+                         f"the ring size n={n}")
+    return tuple(sorted(shifts,
+                        key=lambda h: (hop_crossings(h, n, devices_per_host),
+                                       h)))
 
 
 def ring_shift(x: jnp.ndarray, ep_axis: str, n: int, shift: int) -> jnp.ndarray:
@@ -69,7 +106,8 @@ def ring_expert_exchange(chunks: jnp.ndarray,
                          *, ep_axis: str, n: int,
                          wire_dtype=None,
                          prelude_fn: Optional[Callable[[], jnp.ndarray]]
-                         = None):
+                         = None,
+                         hop_schedule: Optional[Tuple[int, ...]] = None):
     """Dispatch ring -> per-chunk expert FFN -> combine ring.
 
     chunks
@@ -88,6 +126,15 @@ def ring_expert_exchange(chunks: jnp.ndarray,
         no ring dataflow, so XLA is free to run it — like the resident
         chunk's FFN — entirely behind the first wire transfer.  When
         given, the return value becomes ``(out, prelude_out)``.
+    hop_schedule
+        order in which the (n-1) non-resident hops run — a permutation of
+        ``(1, ..., n-1)``, normally from :func:`ring_hop_schedule` so
+        intra-host shifts go first on a multi-host mesh.  Purely an
+        execution reordering: every chunk still moves by its OWN shift in
+        one direct permute and returns by the inverse, so the lowered HLO
+        keeps exactly 2*(n-1) collective-permutes, the per-hop payload is
+        unchanged, and the numerics are bit-for-bit those of the natural
+        order.  ``None`` means the natural order ``(1, ..., n-1)``.
 
     Returns (n, e_loc, C, d) where piece j holds the expert outputs for
     the rows this device sent toward device j — bit-for-bit the layout of
@@ -98,6 +145,11 @@ def ring_expert_exchange(chunks: jnp.ndarray,
         # ring of one: the local chunk is the whole exchange
         out1 = expert_fn(chunks[0])[None].astype(wire_dtype or chunks.dtype)
         return (out1, prelude_fn()) if prelude_fn is not None else out1
+    sched = (tuple(hop_schedule) if hop_schedule is not None
+             else tuple(range(1, n)))
+    if sorted(sched) != list(range(1, n)):
+        raise ValueError(f"hop_schedule {sched} must be a permutation of "
+                         f"1..{n - 1}")
     wire_dtype = wire_dtype or chunks.dtype
     idx = jax.lax.axis_index(ep_axis)
 
@@ -109,22 +161,23 @@ def ring_expert_exchange(chunks: jnp.ndarray,
 
     out = jnp.zeros(chunks.shape, wire_dtype)
 
-    # prefetch hop 1 BEFORE the local compute: the first wire transfer is
-    # in flight while the MXU chews the resident chunk (hop 0) — and, when
-    # present, the replica prelude (both depend only on this device's
-    # dispatch buffers, never on the wire)
-    in_flight = ring_shift(chunk_for_hop(1), ep_axis, n, 1)
+    # prefetch the first scheduled hop BEFORE the local compute: its wire
+    # transfer is in flight while the MXU chews the resident chunk (hop 0)
+    # — and, when present, the replica prelude (both depend only on this
+    # device's dispatch buffers, never on the wire)
+    in_flight = ring_shift(chunk_for_hop(sched[0]), ep_axis, n, sched[0])
     prelude_out = prelude_fn() if prelude_fn is not None else None
     local_out = expert_fn(chunk_for_hop(0)).astype(wire_dtype)
     out = jax.lax.dynamic_update_index_in_dim(out, local_out, idx, axis=0)
 
-    for h in range(1, n):
+    for i, h in enumerate(sched):
         arrived = in_flight
-        if h + 1 < n:
-            # double buffer: issue hop h+1's transfer before computing on
-            # hop h's chunk — the send depends only on `chunks`, so XLA
-            # may overlap it with every FFN below
-            in_flight = ring_shift(chunk_for_hop(h + 1), ep_axis, n, h + 1)
+        if i + 1 < len(sched):
+            # double buffer: issue the next scheduled hop's transfer
+            # before computing on this hop's chunk — the send depends only
+            # on `chunks`, so XLA may overlap it with every FFN below
+            nxt = sched[i + 1]
+            in_flight = ring_shift(chunk_for_hop(nxt), ep_axis, n, nxt)
         # named so remat policies can keep the received chunk and avoid
         # re-running the wire transfer during the backward pass
         arrived = jax.ad_checkpoint.checkpoint_name(arrived, "ep_recv")

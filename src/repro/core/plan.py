@@ -405,6 +405,27 @@ def normalize_placement(dcfg, n_dev: int):
     return dataclasses.replace(dcfg, placements=None)
 
 
+def normalize_hop_schedule(hop_schedule, n_dev: int):
+    """Canonicalize a ring hop order against the live ep axis size.
+
+    A hop schedule is a pure permutation of the ring shifts ``1..n-1`` —
+    it reorders the all-to-all's collective-permutes without changing
+    what any device receives, so numerics are identical by construction.
+    Normalizing the natural order (and anything on a <=1-device axis)
+    to ``None`` keeps mesh-less and oblivious-ring runs on the exact
+    historical code path, mirroring :func:`normalize_overlap`.
+    """
+    if hop_schedule is None or n_dev <= 1:
+        return None
+    sched = tuple(int(h) for h in hop_schedule)
+    if sorted(sched) != list(range(1, n_dev)):
+        raise ValueError(
+            f"hop_schedule {sched} is not a permutation of 1..{n_dev - 1}")
+    if sched == tuple(range(1, n_dev)):
+        return None
+    return sched
+
+
 def placement_wire_scale(dcfg) -> float:
     """Mean planned capacity scale over layers (1.0 without placements) —
     the factor by which placement shrinks every capacity-sized wire

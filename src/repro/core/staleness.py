@@ -64,7 +64,9 @@ def init_layer_states(num_moe_layers: int) -> Dict[int, MoELayerState]:
 
 def init_planned_states(splan, *, num_tokens: int, d_model: int, k: int,
                         dtype=jnp.float32, mesh=None,
-                        ep_axis: str = "ep") -> Dict[int, MoELayerState]:
+                        ep_axis: str = "ep",
+                        patch_axis: Optional[str] = None,
+                        token_shape=None) -> Dict[int, MoELayerState]:
     """Pre-allocate exactly the buffers a SchedulePlan will ever write.
 
     Zero-filled buffers are never *read* before a warmup step overwrites
@@ -77,35 +79,55 @@ def init_planned_states(splan, *, num_tokens: int, d_model: int, k: int,
     axis (token dim 0 — the sharding of the activations they cache,
     DESIGN.md §10), so the mesh-native step function starts from the
     layout its shard_map expects instead of paying a reshard on first use.
+
+    ``token_shape`` selects the buffer layout: ``None`` keeps the
+    historical flat ``(num_tokens, ...)`` rows (correct whenever only
+    batch-sharding axes are in play — flat rows are batch-major, so
+    contiguous chunks ARE batch shards), while a ``(B, T)`` tuple
+    allocates batch-and-token-factored ``(B, T, ...)`` buffers, the only
+    layout whose shards line up with a mesh that ALSO splits the image-
+    token dim over ``"patch"`` (DESIGN.md §14).  With ``mesh``, specs
+    follow the layout via :func:`state_specs`.
     """
     states = {}
+    lead = tuple(token_shape) if token_shape is not None else (num_tokens,)
     num_layers = splan.steps[0].num_layers if splan.steps else 0
     for i in range(num_layers):
         acts = [p.actions[i] for p in splan.variants]
         states[i] = MoELayerState(
-            y_buf=jnp.zeros((num_tokens, d_model), dtype)
+            y_buf=jnp.zeros(lead + (d_model,), dtype)
             if any(a.writes_y_buf for a in acts) else None,
-            x_prev=jnp.zeros((num_tokens, d_model), dtype)
+            x_prev=jnp.zeros(lead + (d_model,), dtype)
             if any(a.writes_x_prev for a in acts) else None,
-            h_cache=jnp.zeros((num_tokens, k, d_model), dtype)
+            h_cache=jnp.zeros(lead + (k, d_model), dtype)
             if any(a.want_cache for a in acts) else None,
-            c_base=jnp.zeros((num_tokens, d_model), dtype)
+            c_base=jnp.zeros(lead + (d_model,), dtype)
             if any(a.writes_c_base for a in acts) else None)
     if mesh is not None:
-        states = shard_states(states, mesh, ep_axis=ep_axis)
+        states = shard_states(states, mesh, ep_axis=ep_axis,
+                              patch_axis=patch_axis)
     return states
 
 
-def state_specs(states, *, ep_axis: str = "ep"):
-    """PartitionSpec pytree matching ``states``: every staleness buffer
-    (``y_buf`` (T, d), ``x_prev`` (T, d), ``h_cache`` (T, K, d)) shards its
-    leading token dim over ``ep_axis`` and replicates the rest — the
-    in/out specs of the mesh-native step function's shard_map."""
+def state_specs(states, *, ep_axis="ep", patch_axis: Optional[str] = None):
+    """PartitionSpec pytree matching ``states`` — the in/out specs of the
+    mesh-native step function's shard_map.
+
+    Flat layout (``patch_axis=None``): every buffer (``y_buf`` (T, d),
+    ``h_cache`` (T, K, d), ...) shards its leading token dim over
+    ``ep_axis`` — a single axis name or, on a hierarchical mesh, the
+    tuple of batch-sharding axes — and replicates the rest.  Factored
+    layout (``patch_axis`` given): buffers are (B, T, ...) with batch
+    over ``ep_axis`` and the token dim over ``patch_axis``.
+    """
     from jax.sharding import PartitionSpec as P
-    return jax.tree.map(lambda _: P(ep_axis), states)
+    if patch_axis is None:
+        return jax.tree.map(lambda _: P(ep_axis), states)
+    return jax.tree.map(lambda _: P(ep_axis, patch_axis), states)
 
 
-def shard_states(states, mesh, *, ep_axis: str = "ep"):
+def shard_states(states, mesh, *, ep_axis="ep",
+                 patch_axis: Optional[str] = None):
     """Place staleness state on ``mesh`` under :func:`state_specs`.
 
     Used at init and after any host-side surgery (e.g. the continuous
@@ -116,7 +138,25 @@ def shard_states(states, mesh, *, ep_axis: str = "ep"):
     from jax.sharding import NamedSharding
     return jax.tree.map(
         lambda a, sp: jax.device_put(a, NamedSharding(mesh, sp)),
-        states, state_specs(states, ep_axis=ep_axis))
+        states, state_specs(states, ep_axis=ep_axis, patch_axis=patch_axis))
+
+
+def flatten_state(s: MoELayerState) -> MoELayerState:
+    """(B, T, ...) factored buffers -> flat (B*T, ...) local rows, the
+    shape :func:`apply_layer_action` computes in.  Batch-major, matching
+    ``hn.reshape(B*T, d)`` in the model forward."""
+    def _f(a):
+        return None if a is None else a.reshape((-1,) + a.shape[2:])
+    return MoELayerState(y_buf=_f(s.y_buf), x_prev=_f(s.x_prev),
+                         h_cache=_f(s.h_cache), c_base=_f(s.c_base))
+
+
+def unflatten_state(s: MoELayerState, b: int, t: int) -> MoELayerState:
+    """Inverse of :func:`flatten_state`."""
+    def _u(a):
+        return None if a is None else a.reshape((b, t) + a.shape[1:])
+    return MoELayerState(y_buf=_u(s.y_buf), x_prev=_u(s.x_prev),
+                         h_cache=_u(s.h_cache), c_base=_u(s.c_base))
 
 
 def state_bytes(states: Dict[int, MoELayerState]) -> int:
@@ -133,13 +173,19 @@ def reset_slots(states: Dict[int, MoELayerState], slot_mask, *,
     activation from a completed request leaks into its successor's sample
     — a recycled slot starts from exactly the all-zeros planned-init state
     a fresh batch would have (DESIGN.md Sec. 9).
+
+    Handles both buffer layouts: flat ``(B * tokens_per_slot, ...)`` rows
+    (slot tokens are consecutive) and the factored ``(B, T, ...)`` layout
+    of patch-sharded runs, where the leading dim IS the slot dim.
     """
-    tok = jnp.repeat(jnp.asarray(slot_mask, bool), tokens_per_slot)
+    slot = jnp.asarray(slot_mask, bool)
+    tok = jnp.repeat(slot, tokens_per_slot)
 
     def _zero(buf):
         if buf is None:
             return None
-        m = tok.reshape((-1,) + (1,) * (buf.ndim - 1))
+        m = slot if buf.shape[0] == slot.shape[0] else tok
+        m = m.reshape((-1,) + (1,) * (buf.ndim - 1))
         return jnp.where(m, jnp.zeros_like(buf), buf)
 
     return {i: MoELayerState(y_buf=_zero(s.y_buf), x_prev=_zero(s.x_prev),
@@ -163,7 +209,8 @@ def apply_layer_action(p, x, cfg: ModelConfig, action: LayerAction,
                        state: MoELayerState, *,
                        key=None, ep_axis: Optional[str] = None,
                        use_pallas: bool = False,
-                       slot_fresh=None, consume_mask=None):
+                       slot_fresh=None, consume_mask=None,
+                       reduce_axes=None, hop_schedule=None):
     """Execute one MoE layer under a planned :class:`LayerAction`.
 
     x: (T, d) flat tokens.  All schedule decisions (mode, mask, capacity,
@@ -185,11 +232,15 @@ def apply_layer_action(p, x, cfg: ModelConfig, action: LayerAction,
     if action.mask_policy is not None:
         k = cfg.experts_per_token
         mkey = key
-        if mkey is not None and ep_axis is not None:
-            # a "random" policy mask must differ per device: the global
-            # mask is the concatenation of independent per-device draws,
-            # not one draw repeated across the ep axis
-            mkey = jax.random.fold_in(mkey, jax.lax.axis_index(ep_axis))
+        # a "random" policy mask must differ per token shard: the global
+        # mask is the concatenation of independent per-device draws, not
+        # one draw repeated across the mesh — fold in the device index of
+        # every axis the tokens shard over (just ep on the flat mesh)
+        fold_axes = reduce_axes if reduce_axes is not None else (
+            (ep_axis,) if ep_axis is not None else ())
+        if mkey is not None:
+            for ax in fold_axes:
+                mkey = jax.random.fold_in(mkey, jax.lax.axis_index(ax))
         mask = conditional.policy_mask(action.mask_policy, x.shape[0], k,
                                        key=mkey)
     if slot_fresh is not None and consume_mask is not None \
@@ -211,7 +262,9 @@ def apply_layer_action(p, x, cfg: ModelConfig, action: LayerAction,
                            use_pallas=use_pallas, want_pair_vals=want_cache,
                            codec=action.codec, dispatch_base=state.c_base,
                            overlap=action.overlap,
-                           placement=action.placement)
+                           placement=action.placement,
+                           reduce_axes=reduce_axes,
+                           hop_schedule=hop_schedule)
 
     def next_base(payload, aux):
         """Residual base for the next wire transmission (Sec. 11): the

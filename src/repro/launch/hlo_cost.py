@@ -275,6 +275,51 @@ def collective_counts(hlo_text: str) -> Dict[str, float]:
     return analyze(hlo_text).collective_counts
 
 
+def hetero_wire_seconds(totals: CostTotals, *, n_dev: int, link_bw: float,
+                        devices_per_host: int = 0,
+                        inter_host_bw: Optional[float] = None,
+                        hop_schedule: Optional[Tuple[int, ...]] = None
+                        ) -> Dict[str, float]:
+    """Price the module's collective launches on a (possibly two-tier)
+    fabric — the heterogeneous counterpart of ``bytes / link_bw``.
+
+    Homogeneous (``devices_per_host`` 0, or no ``inter_host_bw``): every
+    kind costs its counted wire bytes over ``link_bw``.  Two-tier
+    (DESIGN.md §14): collective-permute launches are ring hops — rings of
+    ``n_dev - 1`` launches walk ``hop_schedule`` (natural order when None)
+    and each hop pays the slower of one chunk on the intra-host links and
+    its ``hop_crossings`` chunks serialized through the inter-host trunk.
+    Monolithic collectives pay ``max(intra share / link_bw, cross share /
+    inter_host_bw)`` with cross share ``(n - H) / (n - 1)`` of the payload
+    — the fraction of a uniform exchange that leaves the host.
+    """
+    from repro.core.overlap import hop_crossings
+
+    H = devices_per_host
+    hetero = (inter_host_bw is not None and 0 < H < n_dev
+              and n_dev % H == 0 and inter_host_bw < link_bw)
+    out: Dict[str, float] = {}
+    for kind, byts in totals.collective_bytes.items():
+        if not hetero:
+            out[kind] = byts / link_bw
+            continue
+        launches = totals.collective_counts.get(kind, 0.0)
+        if kind == "collective-permute" and launches and n_dev > 1:
+            sched = (tuple(hop_schedule) if hop_schedule
+                     else tuple(range(1, n_dev)))
+            b_hop = byts / launches
+            per_ring = sum(
+                max(b_hop / link_bw,
+                    hop_crossings(h, n_dev, H) * b_hop / inter_host_bw)
+                for h in sched)
+            out[kind] = per_ring * launches / len(sched)
+        else:
+            cross = (n_dev - H) / max(1, n_dev - 1)
+            out[kind] = max((1.0 - cross) * byts / link_bw,
+                            cross * byts / inter_host_bw)
+    return out
+
+
 def check_ring_lowering(hlo_text: str, *, n_dev: int,
                         moe_layer_calls: int) -> Dict[str, float]:
     """Verify the ring engine's HLO contract (DESIGN.md Sec. 12).

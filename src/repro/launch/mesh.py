@@ -1,22 +1,83 @@
-"""Mesh construction for the production TPU v5e deployment.
+"""Mesh construction: hierarchical ep x dp x patch and the legacy shapes.
 
 Everything is a function (never module-level jax state) so importing this
 module does not initialise the backend — required because the dry-run sets
 ``XLA_FLAGS=--xla_force_host_platform_device_count=512`` before first init
 while tests/benches must see the single real CPU device.
+
+The DICE serving stack lowers onto a hierarchical mesh (DESIGN.md §14):
+
+  * ``dp``    — data-parallel replica groups; the batch shards over it and
+                every expert shard is replicated once per group;
+  * ``ep``    — expert parallelism; dispatch/combine all-to-alls run over
+                this axis only, within each (dp, patch) slice;
+  * ``patch`` — DistriFusion-style patch parallelism; the image-token dim
+                shards over it and stale remote KV is exchanged on it.
+
+``make_mesh`` is the one validated factory; the historical helpers
+(``make_production_mesh``/``make_local_mesh``/``make_ep_mesh``) remain as
+thin wrappers so ``launch/dryrun.py`` and ``launch/train.py`` keep
+working unchanged.  Axes of size 1 are dropped (a flat ``--ep N`` run
+builds the exact 1-D ``("ep",)`` mesh it always did, bit-identical).
 """
 from __future__ import annotations
 
+from typing import Optional
+
 import jax
 
-from repro.common.compat import make_mesh
+from repro.common.compat import make_mesh as _compat_make_mesh
+from repro.common.sharding import batch_shard_axes, data_shard_axes  # noqa: F401
 
+# hierarchical axis order: dp outermost (replica groups span hosts), then
+# ep (the all-to-all axis), then patch innermost (tightest coupling: the
+# per-layer KV exchange wants the fastest links)
+MESH_AXES = ("dp", "ep", "patch")
+
+
+def make_mesh(*, ep: int = 1, dp: int = 1, patch: int = 1
+              ) -> jax.sharding.Mesh:
+    """Validated hierarchical mesh over ``dp x ep x patch`` devices.
+
+    Axes of size 1 are omitted so the degenerate shapes reduce to the
+    historical ones: ``make_mesh(ep=8)`` is the flat 1-D ``("ep",)`` mesh
+    (bit-identical to the pre-hierarchy ``make_ep_mesh(8)``), and a
+    fully-degenerate call builds a single-device ``("ep",)`` mesh of
+    size 1.
+    """
+    sizes = {"dp": dp, "ep": ep, "patch": patch}
+    for name, size in sizes.items():
+        if not isinstance(size, int) or size < 1:
+            raise ValueError(f"{name}={size!r}: axis sizes must be "
+                             f"integers >= 1")
+    n = len(jax.devices())
+    want = dp * ep * patch
+    if want > n:
+        raise ValueError(f"mesh dp={dp} x ep={ep} x patch={patch} = {want} "
+                         f"devices exceeds the {n} available")
+    axes = tuple(a for a in MESH_AXES if sizes[a] > 1)
+    if not axes:
+        axes = ("ep",)
+    shape = tuple(sizes[a] for a in axes)
+    return _compat_make_mesh(shape, axes)
+
+
+def axis_size(mesh: Optional[jax.sharding.Mesh], name: str) -> int:
+    """Size of a named axis, 1 when absent (size-1 axes are dropped)."""
+    if mesh is None or name not in mesh.axis_names:
+        return 1
+    return mesh.shape[name]
+
+
+# ---------------------------------------------------------------------------
+# legacy shapes (training dry-run path) — unchanged behaviour
+# ---------------------------------------------------------------------------
 
 def make_production_mesh(*, multi_pod: bool = False) -> jax.sharding.Mesh:
     """16x16 single-pod (256 chips) or 2x16x16 two-pod (512 chips) mesh."""
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return make_mesh(shape, axes)
+    return _compat_make_mesh(shape, axes)
 
 
 def make_local_mesh(data: int = 1, model: int = 1) -> jax.sharding.Mesh:
@@ -24,7 +85,7 @@ def make_local_mesh(data: int = 1, model: int = 1) -> jax.sharding.Mesh:
     n = len(jax.devices())
     if data * model > n:
         data, model = 1, min(model, n)
-    return make_mesh((data, model), ("data", "model"))
+    return _compat_make_mesh((data, model), ("data", "model"))
 
 
 def make_ep_mesh(ep: int = 0) -> jax.sharding.Mesh:
@@ -35,7 +96,7 @@ def make_ep_mesh(ep: int = 0) -> jax.sharding.Mesh:
     ep = n if ep <= 0 else ep
     if ep > n:
         raise ValueError(f"ep={ep} exceeds the {n} available devices")
-    return make_mesh((ep,), ("ep",))
+    return make_mesh(ep=ep)
 
 
 def batch_axes(mesh: jax.sharding.Mesh):

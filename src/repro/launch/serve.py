@@ -32,6 +32,7 @@ from repro.common.config import HW, ModelConfig
 from repro.compress.codecs import CODEC_KINDS, CompressConfig
 from repro.configs.dit_moe_xl import config as xl_config, tiny
 from repro.core import conditional
+from repro.core import overlap as overlap_lib
 from repro.core import placement as placement_lib
 from repro.core import plan as plan_lib
 from repro.core import staleness as stale_lib
@@ -86,9 +87,44 @@ def layer_compute_flops(cfg: ModelConfig, tokens: int) -> float:
     return attn_flops + moe_flops
 
 
+def hop_wire_times(t_comm: float, n_dev: int, sched, *,
+                   devices_per_host: int, link_bw: float,
+                   inter_host_bw: float) -> List[float]:
+    """Per-hop wire seconds of a chunked ring a2a on a two-tier fabric.
+
+    ``t_comm / (n-1)`` is the homogeneous per-hop chunk time.  A shift-h
+    hop pushes ``hop_crossings(h, n, H)`` of each host's H chunks through
+    the single inter-host trunk (they contend; intra-host links run in
+    parallel), so its time is the slower of the trunk serialisation and
+    one intra-host chunk transfer (DESIGN.md §14).
+    """
+    base = t_comm / max(1, n_dev - 1)
+    out = []
+    for h in sched:
+        c = overlap_lib.hop_crossings(h, n_dev, devices_per_host)
+        out.append(max(base, c * base * (link_bw / inter_host_bw)))
+    return out
+
+
+def _ring_pipeline_bound(chunk_comp: float, wire_times) -> float:
+    """Flow-shop recurrence of the ring engine over explicit per-hop wire
+    times: the local chunk's FFN runs behind hop 1's wire, then each
+    arriving chunk computes as soon as BOTH its data has landed and the
+    previous chunk's FFN is done.  With equal wire times this reduces
+    exactly to the closed form ``t_local + (n-1) * max(w, c)``."""
+    done = chunk_comp                 # local chunk, free behind hop 1
+    wire = 0.0
+    for w in wire_times:
+        wire += w
+        done = max(done, wire) + chunk_comp
+    return done
+
+
 def modeled_step_latency(cfg: ModelConfig, dcfg: DiceConfig, *,
                          local_batch: int, n_dev: int = 8,
-                         hw: Optional[dict] = None) -> dict:
+                         hw: Optional[dict] = None,
+                         devices_per_host: int = 0,
+                         inter_host_bw: Optional[float] = None) -> dict:
     """Seconds per diffusion step on n_dev devices.
 
     Defaults to the paper's hardware point (8x RTX 4090 over PCIe, where
@@ -102,15 +138,28 @@ def modeled_step_latency(cfg: ModelConfig, dcfg: DiceConfig, *,
     the staleness schedule does about when results are consumed), while
     ``"ring"`` uses the per-hop pipeline bound
 
-        t_local + (n-1) * max(t_hop_comm, t_hop_comp)
+        t_local + Σ_h max(t_hop_comm(h), t_hop_comp)
 
-    (one chunk computed for free behind hop 1's wire, then n-1 hops each
-    bounded by the slower of one chunk transfer and one chunk FFN).  The
-    returned dict always carries BOTH bounds (``t_step_blocking_s`` /
+    — the flow-shop recurrence over the hop schedule, which on a
+    homogeneous fabric reduces exactly to the closed form
+    ``t_local + (n-1) * max(t_hop_comm, t_hop_comp)``.  The returned dict
+    always carries BOTH bounds (``t_step_blocking_s`` /
     ``t_step_ring_s``) plus ``overlap_efficiency`` — the fraction of the
     step's communication time the selected mode hides.
+
+    ``devices_per_host`` H with ``inter_host_bw`` < link_bw models the
+    two-tier fabric of DESIGN.md §14: hops whose shift crosses host
+    boundaries serialise their crossing chunks through the inter-host
+    trunk.  The ring bound then follows the TOPOLOGY-AWARE hop order
+    (``repro.core.overlap.ring_hop_schedule`` — cheap intra-host hops
+    first, the flow-shop optimum), and ``t_step_ring_oblivious_s``
+    additionally reports the natural-order schedule for comparison.
     """
     hw = hw or PAPER_HW
+    hetero = (0 < devices_per_host < n_dev
+              and inter_host_bw is not None
+              and inter_host_bw < hw["link_bw"]
+              and n_dev % max(1, devices_per_host) == 0)
     # steady-state StepPlan: the single source of truth for which layers
     # block (replaces the per-schedule if/elif that used to live here)
     steady = plan_lib.steady_state_plan_for(dcfg, cfg.num_layers,
@@ -157,14 +206,36 @@ def modeled_step_latency(cfg: ModelConfig, dcfg: DiceConfig, *,
 
     sync_frac = steady.num_sync_layers / max(1, steady.num_layers)
 
-    def ring_bound(tc: float, tm: float) -> float:
+    aware_sched = oblivious_sched = tuple(range(1, n_dev))
+    if hetero:
+        aware_sched = overlap_lib.ring_hop_schedule(
+            n_dev, devices_per_host=devices_per_host)
+
+    def _wire(tm, sched):
+        return hop_wire_times(tm, n_dev, sched,
+                              devices_per_host=devices_per_host,
+                              link_bw=hw["link_bw"],
+                              inter_host_bw=inter_host_bw)
+
+    def ring_bound(tc: float, tm: float, sched=None) -> float:
         """Per-hop pipeline bound of the ring engine: the local chunk's
         FFN hides behind hop 1's wire, then each of the n-1 hops costs
-        the slower of one chunk transfer and one chunk compute."""
+        the slower of one chunk transfer and one chunk compute.  On a
+        homogeneous fabric the exact closed form; on a two-tier one the
+        flow-shop recurrence over the given hop order."""
         if n_dev <= 1:
             return tc + tm
         t_local = tc / n_dev
-        return t_local + (n_dev - 1) * max(tm / (n_dev - 1), tc / n_dev)
+        if not hetero:
+            return t_local + (n_dev - 1) * max(tm / (n_dev - 1), tc / n_dev)
+        return _ring_pipeline_bound(
+            t_local, _wire(tm, aware_sched if sched is None else sched))
+
+    def _comm(tm: float) -> float:
+        """Wire time of one monolithic a2a: Σ per-hop times (the blocking
+        collective moves every hop's payload with nothing to hide behind;
+        order-invariant).  Homogeneous: exactly ``tm``."""
+        return sum(_wire(tm, oblivious_sched)) if hetero else tm
 
     def step_of(t_sync: float, t_async: float) -> float:
         return cfg.num_layers * (sync_frac * t_sync
@@ -173,17 +244,23 @@ def modeled_step_latency(cfg: ModelConfig, dcfg: DiceConfig, *,
     # blocking: the monolithic all-to-alls serialize against compute —
     # synchronized AND staleness layers alike (staleness only moves when
     # results are consumed, never when the collectives block)
-    t_blocking = step_of(t_comp + t_comm_full, t_comp + t_comm_async)
+    t_blocking = step_of(t_comp + _comm(t_comm_full),
+                         t_comp + _comm(t_comm_async))
     t_ring = step_of(ring_bound(t_comp, t_comm_full),
                      ring_bound(t_comp, t_comm_async))
+    t_ring_obl = (step_of(ring_bound(t_comp, t_comm_full, oblivious_sched),
+                          ring_bound(t_comp, t_comm_async, oblivious_sched))
+                  if hetero else t_ring)
     t_step = t_ring if plan_lib.overlap_of(dcfg) else t_blocking
-    t_comm_step = cfg.num_layers * (sync_frac * t_comm_full
-                                    + (1 - sync_frac) * t_comm_async)
+    t_comm_step = cfg.num_layers * (sync_frac * _comm(t_comm_full)
+                                    + (1 - sync_frac) * _comm(t_comm_async))
     efficiency = ((t_blocking - t_step) / t_comm_step
                   if t_comm_step > 0 else 0.0)
     return {"t_step_s": t_step,
             "t_step_blocking_s": t_blocking,
             "t_step_ring_s": t_ring,
+            "t_step_ring_oblivious_s": t_ring_obl,
+            "hop_schedule": aware_sched if hetero else None,
             "overlap_efficiency": max(0.0, min(1.0, efficiency)),
             "t_comp_layer": t_comp,
             "t_comm_layer": t_comm_async, "sync_frac": sync_frac,
@@ -195,15 +272,19 @@ def modeled_step_latency(cfg: ModelConfig, dcfg: DiceConfig, *,
 # engine
 # ---------------------------------------------------------------------------
 class DiceServer:
-    """``n_dev`` is the serving mesh size; it feeds both the per-device
-    local batch and the all-to-all fan-out of the latency model.
+    """``n_dev`` is the ep fan-out of the serving mesh; it feeds both the
+    per-device local batch and the all-to-all fan-out of the latency model.
 
-    ``mesh`` (an ``"ep"``-axis mesh, ``launch.mesh.make_ep_mesh``) makes
-    the server mesh-native: ``generate`` and :func:`serve_continuous`
-    execute the real sharded dispatch/combine all-to-alls via the
-    shard_map-lowered step functions (DESIGN.md §10), and ``n_dev``
-    defaults to the mesh's ep size so the latency model describes the
-    mesh actually running."""
+    ``mesh`` (any hierarchical dp x ep x patch mesh from
+    ``launch.mesh.make_mesh``, incl. the flat ``make_ep_mesh``) makes the
+    server mesh-native: ``generate`` and :func:`serve_continuous` execute
+    the real sharded dispatch/combine all-to-alls via the shard_map-
+    lowered step functions (DESIGN.md §10/§14), and ``n_dev`` defaults to
+    the mesh's ep size (1 on an ep-less mesh) so the latency model
+    describes the mesh actually running.  ``devices_per_host`` declares
+    the two-tier fabric: the ring engine then runs the topology-aware hop
+    schedule and the latency model prices inter-host hops at
+    ``inter_host_bw``."""
 
     def __init__(self, cfg: ModelConfig, dcfg: DiceConfig, *,
                  params=None, seed: int = 0, n_dev: Optional[int] = None,
@@ -211,9 +292,9 @@ class DiceServer:
                  ep_axis: str = "ep",
                  compress: Optional[CompressConfig] = None,
                  overlap: Optional[str] = None,
-                 placement: Optional[placement_lib.PlacementConfig] = None):
-        if mesh is not None and ep_axis not in mesh.axis_names:
-            raise ValueError(f"mesh axes {mesh.axis_names} lack {ep_axis!r}")
+                 placement: Optional[placement_lib.PlacementConfig] = None,
+                 devices_per_host: int = 0,
+                 inter_host_bw: Optional[float] = None):
         if compress is not None:
             # thread the wire codec into the schedule config (Sec. 11);
             # codec="none" normalizes to no compression so plans — and
@@ -227,8 +308,10 @@ class DiceServer:
             # has no n>1 ep mesh, but the latency model keeps describing
             # the REQUESTED engine on the target n_dev-device deployment
             dcfg = dataclasses.replace(dcfg, overlap=overlap)
+        n_ep = (mesh.shape[ep_axis]
+                if mesh is not None and ep_axis in mesh.axis_names else 1)
         if n_dev is None:
-            n_dev = mesh.shape[ep_axis] if mesh is not None else 8
+            n_dev = n_ep if mesh is not None else 8
         if n_dev < 1:
             raise ValueError(f"n_dev must be >= 1, got {n_dev}")
         self.cfg = cfg
@@ -236,6 +319,19 @@ class DiceServer:
         self.n_dev = n_dev
         self.mesh = mesh
         self.ep_axis = ep_axis
+        self.devices_per_host = devices_per_host
+        self.inter_host_bw = inter_host_bw
+        # topology-aware ring hop order (DESIGN.md §14): cheap intra-host
+        # shifts first.  A pure permutation of the oblivious 1..n-1 order,
+        # so numerics are identical; None (== natural order) off topology
+        # or off the ring engine keeps the historical lowering.
+        self.hop_schedule = None
+        if (plan_lib.overlap_of(dcfg) and n_ep > 1
+                and 0 < devices_per_host < n_ep
+                and n_ep % devices_per_host == 0):
+            self.hop_schedule = plan_lib.normalize_hop_schedule(
+                overlap_lib.ring_hop_schedule(
+                    n_ep, devices_per_host=devices_per_host), n_ep)
         # online affinity-aware placement (Sec. 13): "greedy" mode makes
         # serve_continuous accumulate a routing histogram and re-layout
         # the experts when it drifts; None / "identity" leaves the layout
@@ -248,7 +344,9 @@ class DiceServer:
             # inside make_rf_step then sees an already-sharded tree and
             # device_put is a no-op (no host->device re-transfer per batch)
             from repro.common.sharding import ep_shard_params
-            self.params = ep_shard_params(self.params, mesh, ep_axis=ep_axis)
+            self.params = ep_shard_params(
+                self.params, mesh,
+                ep_axis=ep_axis if ep_axis in mesh.axis_names else None)
 
     def plan(self, num_steps: int) -> plan_lib.SchedulePlan:
         """The compile-once schedule plan a ``generate`` call will run."""
@@ -266,11 +364,14 @@ class DiceServer:
                                    key=key, guidance=guidance,
                                    mesh=self.mesh,
                                    ep_axis=self.ep_axis if self.mesh
-                                   is not None else None)
+                                   is not None else None,
+                                   hop_schedule=self.hop_schedule)
         wall = time.time() - t0
         lat = modeled_step_latency(
             self.cfg, self.dcfg, n_dev=self.n_dev,
-            local_batch=max(1, len(requests) // self.n_dev))
+            local_batch=max(1, len(requests) // self.n_dev),
+            devices_per_host=self.devices_per_host,
+            inter_host_bw=self.inter_host_bw)
         return samples, {
             "wall_s_cpu": wall,
             "modeled_step_s_tpu8": lat["t_step_s"],
@@ -436,31 +537,46 @@ def serve_continuous(server: "DiceServer", requests: List[Request], *,
     cfg, dcfg = server.cfg, server.dcfg
     mesh = mesh if mesh is not None else server.mesh
     ep_axis = server.ep_axis if mesh is not None else None
+    if mesh is not None and "patch" in mesh.axis_names:
+        raise ValueError(
+            "continuous batching does not compose with a 'patch' mesh axis "
+            "(slot surgery assumes batch-only sharding); use rigid batches "
+            "via DiceServer.generate on patch meshes")
+    n_ep = (mesh.shape[ep_axis]
+            if mesh is not None and ep_axis in mesh.axis_names else 1)
     # ring overlap needs an n>1 ep axis; normalize BEFORE planning so the
     # compiled plans (and the jit-cache accounting below) match what the
     # steps execute (DESIGN.md Sec. 12).  The latency model below keeps
     # the un-normalized server.dcfg: it describes the target deployment.
-    dcfg = plan_lib.normalize_overlap(
-        dcfg, mesh.shape[ep_axis] if mesh is not None else 1)
+    dcfg = plan_lib.normalize_overlap(dcfg, n_ep)
     # placement likewise is an n>1-mesh layout property (Sec. 13): the
     # single-device server's params are unpermuted, so placements strip
-    dcfg = plan_lib.normalize_placement(
-        dcfg, mesh.shape[ep_axis] if mesh is not None else 1)
+    dcfg = plan_lib.normalize_placement(dcfg, n_ep)
     key = key if key is not None else jax.random.PRNGKey(0)
     noise_key, step_key = jax.random.split(key)
     B, Tp = max_batch, cfg.patch_tokens
     dt = 1.0 / num_steps
     k_exp = cfg.experts_per_token
-    if mesh is not None and B % mesh.shape[ep_axis]:
-        raise ValueError(f"max_batch={B} must divide over the "
-                         f"{mesh.shape[ep_axis]}-way {ep_axis!r} axis")
+    b_dim = None
+    if mesh is not None:
+        from repro.common import sharding as shard_lib
+        bax = shard_lib.batch_shard_axes(mesh)
+        n_batch = 1
+        for a in bax:
+            n_batch *= mesh.shape[a]
+        if n_batch and B % n_batch:
+            raise ValueError(f"max_batch={B} must divide over the "
+                             f"{n_batch}-way {bax} batch axes")
+        bsp = shard_lib.hier_batch_spec(mesh)
+        b_dim = bsp[0] if len(bsp) else None
 
     def _place(a):
-        """Pin the batch to its ep sharding after host-side slot surgery."""
+        """Pin the batch to its dp x ep sharding after host-side slot
+        surgery."""
         if mesh is None:
             return a
-        from repro.common.sharding import ep_place_batch
-        return ep_place_batch(a, mesh, ep_axis=ep_axis)
+        from repro.common.sharding import hier_place_batch
+        return hier_place_batch(a, mesh)
 
     def _build(dcfg):
         """Compile plans + step function for one placement epoch.  A
@@ -472,7 +588,8 @@ def serve_continuous(server: "DiceServer", requests: List[Request], *,
         merge_plan = plan_lib.slotted_merge_plan(dcfg, cfg.num_layers,
                                                  experts_per_token=k_exp)
         rf_step = make_rf_step(server.params, cfg, dcfg, dt=dt,
-                               guidance=guidance, mesh=mesh, ep_axis=ep_axis)
+                               guidance=guidance, mesh=mesh, ep_axis=ep_axis,
+                               hop_schedule=server.hop_schedule)
         return splan, merge_plan, rf_step
 
     splan, merge_plan, rf_step = _build(dcfg)
@@ -485,7 +602,7 @@ def serve_continuous(server: "DiceServer", requests: List[Request], *,
     # benchmark reads back); re-sharding only triggers in "greedy" mode on
     # an n>1 ep mesh, at admission-aligned boundaries, after warmup
     pcfg = server.placement
-    n_place = mesh.shape[ep_axis] if mesh is not None else 1
+    n_place = n_ep
     place_online = (pcfg is not None and pcfg.mode == "greedy"
                     and n_place > 1)
     hist = placement_lib.RoutingHistogram(
@@ -497,7 +614,7 @@ def serve_continuous(server: "DiceServer", requests: List[Request], *,
     planned_init = partial(stale_lib.init_planned_states, splan,
                            num_tokens=B * Tp, d_model=cfg.d_model,
                            k=k_exp, dtype=jnp.float32, mesh=mesh,
-                           ep_axis=ep_axis or "ep")
+                           ep_axis=(b_dim if mesh is not None else "ep"))
     states, states_u = planned_init(), planned_init()
     x = _place(jnp.zeros((B, Tp, cfg.in_channels), jnp.float32))
     classes = np.full((B,), cfg.num_classes, np.int32)   # null = free slot
@@ -575,9 +692,9 @@ def serve_continuous(server: "DiceServer", requests: List[Request], *,
                     # re-place after host-side surgery: a drifted layout
                     # would key extra jit-cache entries
                     states = stale_lib.shard_states(states, mesh,
-                                                    ep_axis=ep_axis)
+                                                    ep_axis=b_dim)
                     states_u = stale_lib.shard_states(states_u, mesh,
-                                                      ep_axis=ep_axis)
+                                                      ep_axis=b_dim)
                     x = _place(x)
         if not any(s.active for s in slots):
             # fully idle: jump to the next aligned tick with an arrival
@@ -646,7 +763,9 @@ def serve_continuous(server: "DiceServer", requests: List[Request], *,
     if live_placements is not None:
         lat_dcfg = dataclasses.replace(lat_dcfg, placements=live_placements)
     lat = modeled_step_latency(cfg, lat_dcfg, n_dev=server.n_dev,
-                               local_batch=max(1, B // server.n_dev))
+                               local_batch=max(1, B // server.n_dev),
+                               devices_per_host=server.devices_per_host,
+                               inter_host_bw=server.inter_host_bw)
     stats = {
         "ticks": executed_ticks,
         "makespan_steps": tick,
@@ -704,6 +823,25 @@ def main():
                     help="run mesh-native over an N-way 'ep' axis "
                          "(DESIGN.md §10; needs N devices, e.g. XLA_FLAGS="
                          "--xla_force_host_platform_device_count=N)")
+    ap.add_argument("--dp", type=int, default=1,
+                    help="data-parallel replica groups of the hierarchical "
+                         "dp x ep x patch mesh (DESIGN.md §14): experts "
+                         "replicate per group, the batch shards over "
+                         "dp x ep")
+    ap.add_argument("--patch", type=int, default=1,
+                    help="patch-parallel split of the image-token dim "
+                         "(DESIGN.md §14): displaced patch attention runs "
+                         "sharded, KV freshness follows the warmup "
+                         "schedule")
+    ap.add_argument("--devices-per-host", type=int, default=0,
+                    help="two-tier fabric: devices per host H (0 = flat). "
+                         "The ring engine then orders hops intra-host "
+                         "first (topology-aware schedule, §14) and the "
+                         "latency model prices host-crossing hops at "
+                         "--inter-host-bw")
+    ap.add_argument("--inter-host-bw", type=float, default=0.2e9,
+                    help="effective inter-host trunk bandwidth B/s for "
+                         "the two-tier latency model (default 0.2 GB/s)")
     ap.add_argument("--codec", choices=list(CODEC_KINDS), default="none",
                     help="wire codec for staleness-era payloads (Sec. 11): "
                          "light/stale steps transmit quantized residuals "
@@ -743,9 +881,9 @@ def main():
         params = load_checkpoint(args.ckpt,
                                  init_dit(jax.random.PRNGKey(0), cfg))
     mesh = None
-    if args.ep:
-        from repro.launch.mesh import make_ep_mesh
-        mesh = make_ep_mesh(args.ep)
+    if args.ep or args.dp > 1 or args.patch > 1:
+        from repro.launch.mesh import make_mesh
+        mesh = make_mesh(ep=max(1, args.ep), dp=args.dp, patch=args.patch)
     server = DiceServer(cfg, dcfg, params=params, n_dev=args.n_dev,
                         mesh=mesh,
                         compress=CompressConfig(codec=args.codec,
@@ -753,13 +891,19 @@ def main():
                         overlap=args.overlap,
                         placement=placement_lib.PlacementConfig(
                             mode=args.placement,
-                            replicate_top=args.replicate_top))
+                            replicate_top=args.replicate_top),
+                        devices_per_host=args.devices_per_host,
+                        inter_host_bw=args.inter_host_bw)
     reqs = [Request(class_id=i % cfg.num_classes, rid=i)
             for i in range(args.requests)]
     splan = server.plan(args.steps)
+    mesh_tag = ""
+    if mesh is not None:
+        mesh_tag = ", mesh-native " + " x ".join(
+            f"{mesh.shape[a]}-way {a}" for a in mesh.axis_names)
     print(f"serving {len(reqs)} requests, schedule={args.schedule}, "
           f"{args.steps} steps, model={cfg.name}, n_dev={server.n_dev}"
-          + (f", mesh-native {args.ep}-way ep" if mesh is not None else "")
+          + mesh_tag
           + (f", wire codec {args.codec}" if args.codec != "none" else "")
           + (", ring overlap" if args.overlap == "ring" else ""))
     print(f"step plan: {splan.num_variants} compiled variants for "

@@ -23,7 +23,9 @@ import jax.numpy as jnp
 from repro.common.config import ModelConfig
 from repro.core import plan as plan_lib
 from repro.core import staleness as stale_lib
-from repro.core.patch_parallel import PatchParallelState, displaced_patch_attention
+from repro.core.patch_parallel import (PatchParallelState,
+                                       displaced_patch_attention,
+                                       sharded_patch_attention)
 from repro.core.schedules import DiceConfig, Schedule
 from repro.core import moe as moe_lib
 from repro.models import layers as L
@@ -90,7 +92,12 @@ def dit_forward(params, x, t, y, cfg: ModelConfig, dcfg: DiceConfig,
                 key=None,
                 use_pallas: bool = False,
                 slot_fresh=None,
-                consume_mask=None):
+                consume_mask=None,
+                patch_axis: Optional[str] = None,
+                patch_fresh=None,
+                patch_compose: bool = False,
+                reduce_axes=None,
+                hop_schedule=None):
     """Velocity prediction.
 
     x: (B, T, C_in) latents; t: (B,) times; y: (B,) class ids
@@ -101,6 +108,25 @@ def dit_forward(params, x, t, y, cfg: ModelConfig, dcfg: DiceConfig,
     ``slot_fresh`` (B*T,) / ``consume_mask`` (B*T, K) are the continuous-
     batching engine's traced per-slot warmup-replay selectors (DESIGN.md
     Sec. 9), forwarded to every MoE layer.
+
+    Patch parallelism comes in three flavours (DESIGN.md §14):
+
+      * ``patch_parallel_ndev`` alone — the replicated DistriFusion
+        simulation: displaced patch attention, MoE locally fresh (the
+        whole model replicated; the historical baseline);
+      * ``patch_parallel_ndev`` + ``patch_compose`` — the same replicated
+        attention simulation COMPOSED with the staleness schedule's MoE
+        path: the single-device numerics reference for the sharded axis;
+      * ``patch_axis`` (inside shard_map) — the genuinely sharded axis:
+        x is this device's (B_loc, T_loc, C) patch shard,
+        :func:`sharded_patch_attention` exchanges KV on the mesh, and
+        the MoE runs the schedule over ``ep_axis`` within the patch
+        group.  ``patch_fresh`` is the traced per-row freshness selector
+        (warmup / step 0); staleness buffers arrive factored (B, T, ...)
+        and are flattened locally around each layer action.
+
+    ``reduce_axes`` / ``hop_schedule`` thread through to the MoE layers
+    (see :func:`repro.core.moe.moe_forward`).
     Returns (v, new_states, new_patch_states, aux dict).
     """
     if plan is None:
@@ -110,7 +136,12 @@ def dit_forward(params, x, t, y, cfg: ModelConfig, dcfg: DiceConfig,
                                       experts_per_token=cfg.experts_per_token)
     B, T, _ = x.shape
     d = cfg.d_model
-    h = x @ params["patch_embed"] + params["pos_embed"][None]
+    pos_embed = params["pos_embed"]
+    if patch_axis is not None:
+        # this device's patch shard covers tokens [idx*T_loc, (idx+1)*T_loc)
+        pos_embed = jax.lax.dynamic_slice_in_dim(
+            pos_embed, jax.lax.axis_index(patch_axis) * T, T, axis=0)
+    h = x @ params["patch_embed"] + pos_embed[None]
     temb = timestep_embedding(t) @ params["t_mlp1"]
     temb = jax.nn.silu(temb) @ params["t_mlp2"]
     c = temb + params["class_embed"][y]             # (B, d)
@@ -131,14 +162,19 @@ def dit_forward(params, x, t, y, cfg: ModelConfig, dcfg: DiceConfig,
         s1, sc1, g1, s2, sc2, g2 = jnp.split(mod, 6, axis=-1)
 
         hn = _modulate(L.rmsnorm(blk["ln1"], h, eps=cfg.norm_eps), s1, sc1)
-        if patch_parallel_ndev:
+        if patch_parallel_ndev or patch_axis is not None:
             q = (hn @ blk["attn"]["wq"]).reshape(B, T, cfg.num_heads, cfg.head_dim)
             k = (hn @ blk["attn"]["wk"]).reshape(B, T, cfg.num_kv_heads, cfg.head_dim)
             v = (hn @ blk["attn"]["wv"]).reshape(B, T, cfg.num_kv_heads, cfg.head_dim)
             pstate = patch_states.get(i, PatchParallelState()) if patch_states else PatchParallelState()
-            attn, pnew = displaced_patch_attention(
-                q, k, v, pstate, n_dev=patch_parallel_ndev,
-                warmup=plan.is_warmup)
+            if patch_axis is not None:
+                attn, pnew = sharded_patch_attention(
+                    q, k, v, pstate, patch_axis=patch_axis,
+                    fresh=patch_fresh)
+            else:
+                attn, pnew = displaced_patch_attention(
+                    q, k, v, pstate, n_dev=patch_parallel_ndev,
+                    warmup=plan.is_warmup)
             attn = attn.reshape(B, T, -1) @ blk["attn"]["wo"]
             new_patch[i] = pnew
         else:
@@ -147,7 +183,7 @@ def dit_forward(params, x, t, y, cfg: ModelConfig, dcfg: DiceConfig,
         h = h + g1[:, None, :] * attn
 
         hn = _modulate(L.rmsnorm(blk["ln2"], h, eps=cfg.norm_eps), s2, sc2)
-        if patch_parallel_ndev:
+        if patch_parallel_ndev and not patch_compose:
             # DistriFusion replicates the model: MoE runs locally + fresh.
             flat = hn.reshape(B * T, d)
             moe_out, aux = moe_lib.moe_forward(blk["moe"], flat, cfg,
@@ -155,10 +191,19 @@ def dit_forward(params, x, t, y, cfg: ModelConfig, dcfg: DiceConfig,
             new_st = stale_lib.MoELayerState()
         else:
             flat = hn.reshape(B * T, d)
+            st = states[i]
+            if patch_axis is not None:
+                # factored (B, T, ...) buffers (the only layout that
+                # shards over patch) -> local flat rows, batch-major like
+                # ``flat`` above
+                st = stale_lib.flatten_state(st)
             moe_out, new_st, aux = stale_lib.apply_layer_action(
-                blk["moe"], flat, cfg, plan.actions[i], states[i],
+                blk["moe"], flat, cfg, plan.actions[i], st,
                 key=key, ep_axis=ep_axis, use_pallas=use_pallas,
-                slot_fresh=slot_fresh, consume_mask=consume_mask)
+                slot_fresh=slot_fresh, consume_mask=consume_mask,
+                reduce_axes=reduce_axes, hop_schedule=hop_schedule)
+            if patch_axis is not None:
+                new_st = stale_lib.unflatten_state(new_st, B, T)
         new_states[i] = new_st
         total_lb += aux.lb_loss
         total_dispatch_bytes += aux.dispatch_bytes
@@ -192,23 +237,29 @@ def dit_forward(params, x, t, y, cfg: ModelConfig, dcfg: DiceConfig,
         # signal the placement optimizer accumulates (DESIGN.md Sec. 13)
         "expert_counts": jnp.stack(served_counts).astype(jnp.float32),
     }
-    if ep_axis is not None:
+    mean_axes = reduce_axes if reduce_axes is not None else ep_axis
+    if mean_axes is not None:
         # mesh-native execution (inside shard_map): token-mean quantities
-        # average over the ep axis so the reported aux is replicated;
-        # buffer_bytes scales to the GLOBAL persistent footprint while
-        # dispatch_bytes stays the PER-DEVICE wire payload — the quantity
-        # the paper's all-to-all claim is about (DESIGN.md §10)
+        # average over every token-sharding axis (just ep on the flat
+        # mesh; dp/ep/patch subsets on the hierarchical one, DESIGN.md
+        # §14) so the reported aux is replicated; buffer_bytes scales to
+        # the GLOBAL persistent footprint while dispatch_bytes stays the
+        # PER-DEVICE wire payload — the quantity the paper's all-to-all
+        # claim is about (DESIGN.md §10)
         from repro.common import compat
-        aux_out["lb_loss"] = jax.lax.pmean(aux_out["lb_loss"], ep_axis)
+        aux_out["lb_loss"] = jax.lax.pmean(aux_out["lb_loss"], mean_axes)
         aux_out["dropped_frac"] = jax.lax.pmean(aux_out["dropped_frac"],
-                                                ep_axis)
+                                                mean_axes)
         # pmean, not psum: the placement histogram normalizes each layer
         # to shares, so the mean over equal-sized token shards carries the
         # identical signal while staying replicated like the other aux
         aux_out["expert_counts"] = jax.lax.pmean(aux_out["expert_counts"],
-                                                 ep_axis)
-        aux_out["buffer_bytes"] = (aux_out["buffer_bytes"]
-                                   * compat.axis_size(ep_axis))
+                                                 mean_axes)
+        scale = 1
+        for ax in ((mean_axes,) if isinstance(mean_axes, str)
+                   else tuple(mean_axes)):
+            scale *= compat.axis_size(ax)
+        aux_out["buffer_bytes"] = aux_out["buffer_bytes"] * scale
     return v, new_states, new_patch, aux_out
 
 

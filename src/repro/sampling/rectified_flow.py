@@ -27,6 +27,7 @@ from repro.common import sharding as shard_lib
 from repro.common.config import ModelConfig
 from repro.core import plan as plan_lib
 from repro.core import staleness as stale_lib
+from repro.core.patch_parallel import PatchParallelState
 from repro.core.schedules import DiceConfig
 from repro.models.dit_moe import dit_forward, dit_train_forward
 from repro.optim.adamw import adamw_update, clip_by_global_norm, cosine_schedule
@@ -67,23 +68,35 @@ def rf_train_step(params, opt_state, batch, key, cfg: ModelConfig):
 def _euler_step(params, cfg: ModelConfig, dcfg: DiceConfig,
                 x, classes, states, states_u, patch_states, patch_states_u,
                 t, key, *, plan, dt, guidance, patch_parallel_ndev=0,
-                ep_axis=None, slot_fresh=None, consume_mask=None):
+                ep_axis=None, slot_fresh=None, consume_mask=None,
+                patch_axis=None, patch_fresh=None, patch_compose=False,
+                reduce_axes=None, hop_schedule=None):
     """One CFG-guided Euler step — the schedule-agnostic core both the
     single-device and the mesh-native (shard_map-ped) step functions trace.
-    Inside shard_map every operand is the per-device shard and ``ep_axis``
-    names the live mesh axis the MoE all-to-alls run over."""
+    Inside shard_map every operand is the per-device shard, ``ep_axis``
+    names the live mesh axis the MoE all-to-alls run over and
+    ``patch_axis`` the axis the image-token dim shards over (DESIGN.md
+    §14); ``patch_compose`` selects the replicated patch simulation
+    COMPOSED with the staleness MoE path — the single-device reference of
+    the sharded patch axis."""
     null = jnp.full_like(classes, cfg.num_classes)
     v_c, ns, nps, aux = dit_forward(
         params, x, t, classes, cfg, dcfg, states, plan=plan,
         patch_states=patch_states or None,
         patch_parallel_ndev=patch_parallel_ndev, ep_axis=ep_axis, key=key,
-        slot_fresh=slot_fresh, consume_mask=consume_mask)
+        slot_fresh=slot_fresh, consume_mask=consume_mask,
+        patch_axis=patch_axis, patch_fresh=patch_fresh,
+        patch_compose=patch_compose, reduce_axes=reduce_axes,
+        hop_schedule=hop_schedule)
     if guidance != 1.0:
         v_u, nsu, npsu, _ = dit_forward(
             params, x, t, null, cfg, dcfg, states_u, plan=plan,
             patch_states=patch_states_u or None,
             patch_parallel_ndev=patch_parallel_ndev, ep_axis=ep_axis,
-            key=key, slot_fresh=slot_fresh, consume_mask=consume_mask)
+            key=key, slot_fresh=slot_fresh, consume_mask=consume_mask,
+            patch_axis=patch_axis, patch_fresh=patch_fresh,
+            patch_compose=patch_compose, reduce_axes=reduce_axes,
+            hop_schedule=hop_schedule)
         v = v_u + guidance * (v_c - v_u)
     else:
         v, nsu, npsu = v_c, states_u, patch_states_u
@@ -94,7 +107,9 @@ def make_rf_step(params, cfg: ModelConfig, dcfg: DiceConfig, *,
                  dt: float, guidance: float = 1.5,
                  patch_parallel_ndev: int = 0,
                  ep_axis: Optional[str] = None,
-                 mesh: Optional[jax.sharding.Mesh] = None):
+                 mesh: Optional[jax.sharding.Mesh] = None,
+                 patch_compose: bool = False,
+                 hop_schedule=None):
     """The reusable single-Euler-step callable behind both :func:`rf_sample`
     and the continuous-batching serving engine (DESIGN.md Sec. 9).
 
@@ -114,29 +129,36 @@ def make_rf_step(params, cfg: ModelConfig, dcfg: DiceConfig, *,
     so every warmup/steady mixture shares one compiled entry per
     (plan, slotted) pair.
 
-    With ``mesh`` (an ``"ep"``-axis mesh, see ``launch.mesh.make_ep_mesh``)
-    each plan variant lowers to ONE shard_map-ped step: the batch, the
-    staleness state and the per-slot selectors shard over the ep axis,
-    expert params shard under ``common.sharding.ep_param_specs``, and the
-    dispatch/combine all-to-alls of every MoE layer run over the axis
-    (DESIGN.md §10).  The jit-cache contract is unchanged — one entry per
-    (plan, slotted) pair, mesh-independent.
+    With ``mesh`` each plan variant lowers to ONE shard_map-ped step over
+    the hierarchical dp x ep x patch axes (any subset may be present —
+    ``launch.mesh.make_mesh``): the batch shards over dp x ep, the image-
+    token dim over patch, staleness state and per-slot selectors follow
+    the batch layout, expert params shard under
+    ``common.sharding.ep_param_specs`` (replicated per dp/patch group),
+    and the dispatch/combine all-to-alls of every MoE layer run over the
+    ep axis within each (dp, patch) slice (DESIGN.md §10/§14).  The
+    jit-cache contract is unchanged — one entry per (plan, slotted) pair,
+    mesh-independent.  ``hop_schedule`` orders the ring engine's hops
+    (``repro.core.overlap.ring_hop_schedule``); ``patch_compose`` runs the
+    replicated patch simulation composed with the staleness MoE path (the
+    mesh-less numerics reference of the sharded patch axis).
     """
     if mesh is not None:
         return _make_mesh_rf_step(
             params, cfg, dcfg, dt=dt, guidance=guidance,
             patch_parallel_ndev=patch_parallel_ndev, mesh=mesh,
-            ep_axis=ep_axis or "ep")
+            ep_axis=ep_axis or "ep", hop_schedule=hop_schedule)
 
     @partial(jax.jit, static_argnames=("plan", "slotted"))
     def rf_step(x, classes, states, states_u, patch_states, patch_states_u,
                 t, key, *, plan, slotted=False,
-                slot_fresh=None, consume_mask=None):
+                slot_fresh=None, consume_mask=None, patch_fresh=None):
+        del patch_fresh                # mesh-only selector; inert here
         return _euler_step(
             params, cfg, dcfg, x, classes, states, states_u,
             patch_states, patch_states_u, t, key, plan=plan, dt=dt,
             guidance=guidance, patch_parallel_ndev=patch_parallel_ndev,
-            ep_axis=ep_axis,
+            ep_axis=ep_axis, patch_compose=patch_compose,
             slot_fresh=slot_fresh if slotted else None,
             consume_mask=consume_mask if slotted else None)
 
@@ -145,67 +167,119 @@ def make_rf_step(params, cfg: ModelConfig, dcfg: DiceConfig, *,
 
 def _make_mesh_rf_step(params, cfg: ModelConfig, dcfg: DiceConfig, *,
                        dt: float, guidance: float, patch_parallel_ndev: int,
-                       mesh: jax.sharding.Mesh, ep_axis: str):
-    """Mesh-native lowering of :func:`make_rf_step` (DESIGN.md §10).
+                       mesh: jax.sharding.Mesh, ep_axis: str,
+                       hop_schedule=None):
+    """Mesh-native lowering of :func:`make_rf_step` (DESIGN.md §10/§14).
 
-    One ``shard_map`` per plan variant: batch/state/selectors shard over
-    ``ep_axis``, experts shard under ``ep_param_specs``, aux is reduced to
-    replicated values inside the mapped body (``dispatch_bytes`` stays the
-    per-device wire payload).  Params are placed on the mesh once, here.
+    One ``shard_map`` per plan variant over the hierarchical
+    dp x ep x patch mesh (any axis subset): the batch shards over
+    dp x ep, the image-token dim over patch, staleness state and per-slot
+    selectors follow the batch layout, experts shard under
+    ``ep_param_specs`` (implicitly replicated per dp/patch group), and
+    aux is reduced to replicated values inside the mapped body
+    (``dispatch_bytes`` stays the per-device wire payload).  Params are
+    placed on the mesh once, here.  On a flat ``("ep",)`` mesh every
+    spec below degenerates to the historical single-axis form.
     """
     if patch_parallel_ndev:
-        raise ValueError("patch-parallel attention does not compose with "
-                         "the mesh-native expert-parallel path")
-    if ep_axis not in mesh.axis_names:
-        raise ValueError(f"mesh axes {mesh.axis_names} lack {ep_axis!r}")
-    n = mesh.shape[ep_axis]
-    if cfg.num_experts % n:
+        raise ValueError("the replicated patch-parallel simulation does "
+                         "not compose with the mesh-native path; build "
+                         "the mesh with a 'patch' axis instead")
+    patch_axis = "patch" if "patch" in mesh.axis_names else None
+    bax = shard_lib.batch_shard_axes(mesh)
+    dax = shard_lib.data_shard_axes(mesh)
+    if not dax:
+        raise ValueError(f"mesh axes {mesh.axis_names} carry none of the "
+                         f"hierarchical dp/ep/patch axes")
+    live_ep = ep_axis if ep_axis in mesh.axis_names else None
+    n_ep = mesh.shape[ep_axis] if live_ep else 1
+    if live_ep and cfg.num_experts % n_ep:
         raise ValueError(f"num_experts={cfg.num_experts} must divide the "
-                         f"{n}-way {ep_axis!r} axis")
+                         f"{n_ep}-way {ep_axis!r} axis")
+    n_patch = mesh.shape[patch_axis] if patch_axis else 1
+    if patch_axis and cfg.patch_tokens % n_patch:
+        raise ValueError(f"patch_tokens={cfg.patch_tokens} must divide "
+                         f"over the {n_patch}-way patch axis")
+    n_batch = 1
+    for a in bax:
+        n_batch *= mesh.shape[a]
+    # flat-ep meshes keep the legacy single-axis reductions (bit-safe);
+    # hierarchical meshes reduce token means over every data axis
+    reduce_axes = None if dax == (ep_axis,) else dax
+    hop_schedule = plan_lib.normalize_hop_schedule(hop_schedule, n_ep)
+    b_spec = shard_lib.hier_batch_spec(mesh)
+    x_spec = shard_lib.hier_token_spec(mesh) if patch_axis else b_spec
+    b_dim = b_spec[0] if len(b_spec) else None
     placements = plan_lib.placements_of(dcfg)
-    if placements is not None:
+    if placements is not None and live_ep:
         # affinity-aware layout (DESIGN.md Sec. 13): permute each layer's
         # expert stacks to the placement order and append the hot-expert
         # replica leaves BEFORE sharding — the ep shards then hold the
         # placed experts and every device carries the replica stack
         from repro.core import placement as placement_lib
         params = placement_lib.placed_params(params, placements)
-    params = shard_lib.ep_shard_params(params, mesh, ep_axis=ep_axis)
-    pspecs = shard_lib.ep_param_specs(params, ep_axis=ep_axis)
+    params = shard_lib.ep_shard_params(params, mesh, ep_axis=live_ep)
+    pspecs = shard_lib.ep_param_specs(params, ep_axis=live_ep)
 
     @partial(jax.jit, static_argnames=("plan", "slotted"))
     def rf_step(x, classes, states, states_u, patch_states, patch_states_u,
                 t, key, *, plan, slotted=False,
-                slot_fresh=None, consume_mask=None):
-        if x.shape[0] % n:
+                slot_fresh=None, consume_mask=None, patch_fresh=None):
+        if x.shape[0] % max(n_batch, 1):
             raise ValueError(f"batch {x.shape[0]} must divide over the "
-                             f"{n}-way {ep_axis!r} axis")
-        st_spec = stale_lib.state_specs(states, ep_axis=ep_axis)
-        stu_spec = stale_lib.state_specs(states_u, ep_axis=ep_axis)
+                             f"{n_batch}-way {bax} batch axes")
+        if patch_axis and patch_fresh is None:
+            raise ValueError("a patch-axis mesh step needs the traced "
+                             "patch_fresh selector (warmup/step-0 rows)")
+        st_spec = stale_lib.state_specs(states, ep_axis=b_dim,
+                                        patch_axis=patch_axis)
+        stu_spec = stale_lib.state_specs(states_u, ep_axis=b_dim,
+                                         patch_axis=patch_axis)
+        # patch KV buffers: batch-sharded, full sequence per device (the
+        # DistriFusion memory cost), identical across the patch group
+        pst_spec = jax.tree.map(lambda _: P(b_dim), patch_states)
+        pstu_spec = jax.tree.map(lambda _: P(b_dim), patch_states_u)
         aux_spec = {"lb_loss": P(), "dispatch_bytes": P(),
                     "raw_dispatch_bytes": P(), "dropped_frac": P(),
                     "hops": P(), "hop_bytes": P(),
                     "buffer_bytes": P(), "expert_counts": P()}
-        ops = (params, x, classes, states, states_u, t, key)
-        in_specs = (pspecs, P(ep_axis), P(ep_axis), st_spec, stu_spec,
-                    P(ep_axis), P())
+        ops = (params, x, classes, states, states_u, patch_states,
+               patch_states_u, t, key, patch_fresh)
+        in_specs = (pspecs, x_spec, b_spec, st_spec, stu_spec, pst_spec,
+                    pstu_spec, b_spec, P(), b_spec)
         if slotted:
+            if patch_axis:
+                # per-token selectors must follow the factored (B, T)
+                # layout to shard over patch; re-flattened inside
+                slot_fresh = slot_fresh.reshape(x.shape[0], -1)
+                consume_mask = consume_mask.reshape(
+                    x.shape[0], -1, consume_mask.shape[-1])
+                sl_spec = shard_lib.hier_token_spec(mesh)
+            else:
+                sl_spec = b_spec
             ops += (slot_fresh, consume_mask)
-            in_specs += (P(ep_axis), P(ep_axis))
+            in_specs += (sl_spec, sl_spec)
 
-        def inner(p_l, x_l, cls_l, st_l, stu_l, t_l, key_l, *slot_ops):
+        def inner(p_l, x_l, cls_l, st_l, stu_l, pst_l, pstu_l, t_l, key_l,
+                  pf_l, *slot_ops):
             sf, cm = slot_ops if slotted else (None, None)
-            x_new, ns, nsu, _, _, aux = _euler_step(
-                p_l, cfg, dcfg, x_l, cls_l, st_l, stu_l, {}, {}, t_l, key_l,
-                plan=plan, dt=dt, guidance=guidance, ep_axis=ep_axis,
-                slot_fresh=sf, consume_mask=cm)
+            if slotted and patch_axis:
+                sf = sf.reshape(-1)
+                cm = cm.reshape(-1, cm.shape[-1])
+            x_new, ns, nsu, nps, npsu, aux = _euler_step(
+                p_l, cfg, dcfg, x_l, cls_l, st_l, stu_l, pst_l, pstu_l,
+                t_l, key_l, plan=plan, dt=dt, guidance=guidance,
+                ep_axis=live_ep, slot_fresh=sf, consume_mask=cm,
+                patch_axis=patch_axis, patch_fresh=pf_l,
+                reduce_axes=reduce_axes, hop_schedule=hop_schedule)
             aux = dict(aux, buffer_bytes=jnp.asarray(aux["buffer_bytes"]))
-            return x_new, ns, nsu, aux
+            return x_new, ns, nsu, nps, npsu, aux
 
-        x_new, ns, nsu, aux = compat.shard_map(
+        x_new, ns, nsu, nps, npsu, aux = compat.shard_map(
             inner, mesh=mesh, in_specs=in_specs,
-            out_specs=(P(ep_axis), st_spec, stu_spec, aux_spec))(*ops)
-        return x_new, ns, nsu, patch_states, patch_states_u, aux
+            out_specs=(x_spec, st_spec, stu_spec, pst_spec, pstu_spec,
+                       aux_spec))(*ops)
+        return x_new, ns, nsu, nps, npsu, aux
 
     return rf_step
 
@@ -214,7 +288,9 @@ def make_sample_step(params, cfg: ModelConfig, dcfg: DiceConfig, classes, *,
                      dt: float, guidance: float = 1.5,
                      patch_parallel_ndev: int = 0,
                      ep_axis: Optional[str] = None,
-                     mesh: Optional[jax.sharding.Mesh] = None):
+                     mesh: Optional[jax.sharding.Mesh] = None,
+                     patch_compose: bool = False,
+                     hop_schedule=None):
     """One jitted Euler step with ``classes`` bound — the whole-loop
     sampler's view of :func:`make_rf_step`.
 
@@ -225,16 +301,18 @@ def make_sample_step(params, cfg: ModelConfig, dcfg: DiceConfig, classes, *,
     """
     classes = jnp.asarray(classes, jnp.int32)
     if mesh is not None:
-        classes = shard_lib.ep_place_batch(classes, mesh,
-                                           ep_axis=ep_axis or "ep")
+        classes = shard_lib.hier_place_batch(classes, mesh)
     rf_step = make_rf_step(params, cfg, dcfg, dt=dt, guidance=guidance,
                            patch_parallel_ndev=patch_parallel_ndev,
-                           ep_axis=ep_axis, mesh=mesh)
+                           ep_axis=ep_axis, mesh=mesh,
+                           patch_compose=patch_compose,
+                           hop_schedule=hop_schedule)
 
     def one_step(x, states, states_u, patch_states, patch_states_u, t, key,
-                 *, plan):
+                 *, plan, patch_fresh=None):
         return rf_step(x, classes, states, states_u, patch_states,
-                       patch_states_u, t, key, plan=plan)
+                       patch_states_u, t, key, plan=plan,
+                       patch_fresh=patch_fresh)
 
     one_step._cache_size = rf_step._cache_size
     return one_step
@@ -246,6 +324,8 @@ def rf_sample(params, cfg: ModelConfig, dcfg: DiceConfig, *,
               patch_parallel_ndev: int = 0,
               ep_axis: Optional[str] = None,
               mesh: Optional[jax.sharding.Mesh] = None,
+              patch_compose: bool = False,
+              hop_schedule=None,
               collect_stats: bool = True):
     """Generate latents (B, T, C) for ``classes`` under a schedule.
 
@@ -266,49 +346,84 @@ def rf_sample(params, cfg: ModelConfig, dcfg: DiceConfig, *,
     """
     B = classes.shape[0]
     ep = ep_axis or ("ep" if mesh is not None else None)
+    n_ep = (mesh.shape[ep] if mesh is not None and ep in mesh.axis_names
+            else 1)
+    patch_axis = ("patch" if mesh is not None
+                  and "patch" in mesh.axis_names else None)
     # ring overlap is an n>1-mesh execution property: normalize it away
     # here so a mesh-less (or 1-device-axis) run plans — and therefore
     # samples — bit-identically to a blocking config (DESIGN.md Sec. 12)
-    dcfg = plan_lib.normalize_overlap(
-        dcfg, mesh.shape[ep] if mesh is not None else 1)
+    dcfg = plan_lib.normalize_overlap(dcfg, n_ep)
     # likewise placement: on a single device the params are unpermuted, so
     # a placement-bearing config must fall back to the identity layout to
     # stay bit-identical with its mesh-less baseline (DESIGN.md Sec. 13)
-    dcfg = plan_lib.normalize_placement(
-        dcfg, mesh.shape[ep] if mesh is not None else 1)
+    dcfg = plan_lib.normalize_placement(dcfg, n_ep)
     x = jax.random.normal(key, (B, cfg.patch_tokens, cfg.in_channels))
     if mesh is not None:
-        x = shard_lib.ep_place_batch(x, mesh, ep_axis=ep)
+        x = jax.device_put(x, jax.sharding.NamedSharding(
+            mesh, shard_lib.hier_token_spec(mesh) if patch_axis
+            else shard_lib.hier_batch_spec(mesh)))
     dt = 1.0 / num_steps
     splan = plan_lib.compile_step_plans(
         dcfg, cfg.num_layers, num_steps,
         experts_per_token=cfg.experts_per_token)
     # plan-aware init: allocate exactly the buffers the run will write, so
     # the state pytree signature is constant and the jit cache holds
-    # exactly one entry per plan variant (sharded over ep under a mesh)
+    # exactly one entry per plan variant (sharded over ep under a mesh).
+    # On a patch-axis mesh the buffers factor to (B, T, ...) — the only
+    # layout whose shards line up with the token split (DESIGN.md §14).
+    b_dim = None
+    if mesh is not None:
+        bsp = shard_lib.hier_batch_spec(mesh)
+        b_dim = bsp[0] if len(bsp) else None
     planned_init = partial(stale_lib.init_planned_states, splan,
                            num_tokens=B * cfg.patch_tokens,
                            d_model=cfg.d_model, k=cfg.experts_per_token,
                            dtype=x.dtype, mesh=mesh,
-                           ep_axis=ep or "ep")
+                           ep_axis=(b_dim if mesh is not None else "ep"),
+                           patch_axis=patch_axis,
+                           token_shape=((B, cfg.patch_tokens)
+                                        if patch_axis else None))
     states = planned_init()
     states_u = planned_init()
     patch_states: Dict = {}
     patch_states_u: Dict = {}
+    if patch_axis:
+        # constant-structure patch KV buffers: full-sequence per device
+        # (DistriFusion's memory cost), batch-sharded, zero-filled — never
+        # read before the traced patch_fresh selector stops masking them
+        def _patch_init():
+            z = jnp.zeros((B, cfg.patch_tokens, cfg.num_kv_heads,
+                           cfg.head_dim), x.dtype)
+            st = {i: PatchParallelState(
+                k_prev=shard_lib.hier_place_batch(z, mesh),
+                v_prev=shard_lib.hier_place_batch(z, mesh))
+                for i in range(cfg.num_layers)}
+            return st
+        patch_states = _patch_init()
+        patch_states_u = _patch_init()
     stats = {"dispatch_bytes": [], "raw_bytes": [], "buffer_bytes": [],
              "hops": [], "hop_bytes": []}
 
     one_step = make_sample_step(params, cfg, dcfg, classes, dt=dt,
                                 guidance=guidance,
                                 patch_parallel_ndev=patch_parallel_ndev,
-                                ep_axis=ep, mesh=mesh)
+                                ep_axis=ep, mesh=mesh,
+                                patch_compose=patch_compose,
+                                hop_schedule=hop_schedule)
 
     for s in range(num_steps):
         key, k = jax.random.split(key)
         t = jnp.full((B,), s * dt)
+        pf = None
+        if patch_axis:
+            # fresh remote KV exactly where the replicated baseline is
+            # fresh: warmup steps, and step 0 (its stale buffer is unborn)
+            pf = jnp.full((B,), bool(s == 0 or splan.steps[s].is_warmup))
+            pf = shard_lib.hier_place_batch(pf, mesh)
         x, states, states_u, patch_states, patch_states_u, aux = one_step(
             x, states, states_u, patch_states, patch_states_u, t, k,
-            plan=splan.steps[s])
+            plan=splan.steps[s], patch_fresh=pf)
         if collect_stats:
             stats["dispatch_bytes"].append(float(aux["dispatch_bytes"]))
             stats["raw_bytes"].append(float(aux["raw_dispatch_bytes"]))

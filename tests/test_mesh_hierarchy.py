@@ -1,0 +1,381 @@
+"""Hierarchical ep x dp x patch mesh conformance (ISSUE 7; DESIGN.md §14).
+
+In-process (single real CPU device): topology/hop-schedule units
+(``hop_crossings`` / ``ring_hop_schedule`` / ``normalize_hop_schedule``),
+``make_mesh`` validation, the balanced ``shard_owner`` map on uneven
+sequence lengths, and dense-reference parity for
+``displaced_patch_attention`` under warmup and staleness.
+
+Subprocess (8 host devices, like test_ep_dice.py): all FIVE schedules
+sampled on ``ep4 x dp2``, flat ``ep8`` and ``ep2 x dp2 x patch2`` meshes
+must match their single-device references within 1e-4 with jit cache ==
+plan-variant count on every shape; the flat ``make_mesh(ep=8)`` run must
+be BIT-identical to the legacy ``make_ep_mesh(8)``; and the aux
+reductions (``load_balance_loss`` and the served-counts pmean) must be
+dp-invariant bit-for-bit — dp=2 on per-replica-identical batches equals
+dp=1 exactly.
+"""
+import math
+import os
+import subprocess
+import sys
+import textwrap
+
+import numpy as np
+import pytest
+
+from repro.core.overlap import hop_crossings, ring_hop_schedule
+from repro.core.patch_parallel import (PatchParallelState,
+                                       displaced_patch_attention,
+                                       shard_owner)
+from repro.core.plan import normalize_hop_schedule
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+# ---------------------------------------------------------------------------
+# topology-aware hop schedule units (DESIGN.md §14)
+# ---------------------------------------------------------------------------
+
+def test_hop_crossings_flat_topology_is_zero():
+    # one host (H >= n) or no topology info (H <= 0): nothing crosses
+    for h in range(1, 8):
+        assert hop_crossings(h, 8, 0) == 0
+        assert hop_crossings(h, 8, 8) == 0
+        assert hop_crossings(h, 8, 16) == 0
+
+
+def test_hop_crossings_closed_form():
+    # n=8, H=4: min(shift, n-shift, H)
+    assert [hop_crossings(h, 8, 4) for h in range(1, 8)] == \
+        [1, 2, 3, 4, 3, 2, 1]
+    # n=4, H=2
+    assert [hop_crossings(h, 4, 2) for h in range(1, 4)] == [1, 2, 1]
+    # n=8, H=2: saturates at H
+    assert [hop_crossings(h, 8, 2) for h in range(1, 8)] == \
+        [1, 2, 2, 2, 2, 2, 1]
+
+
+def test_ring_hop_schedule_flat_is_natural_order():
+    assert ring_hop_schedule(8) == tuple(range(1, 8))
+    assert ring_hop_schedule(8, devices_per_host=8) == tuple(range(1, 8))
+    assert ring_hop_schedule(1) == ()
+
+
+def test_ring_hop_schedule_topology_sorted_permutation():
+    s = ring_hop_schedule(8, devices_per_host=4)
+    assert sorted(s) == list(range(1, 8))          # a pure permutation
+    assert s == (1, 7, 2, 6, 3, 5, 4)              # cheapest crossings first
+    crossings = [hop_crossings(h, 8, 4) for h in s]
+    assert crossings == sorted(crossings)
+    assert ring_hop_schedule(4, devices_per_host=2) == (1, 3, 2)
+
+
+def test_ring_hop_schedule_rejects_non_dividing_hosts():
+    with pytest.raises(ValueError):
+        ring_hop_schedule(8, devices_per_host=3)
+
+
+def test_normalize_hop_schedule():
+    # degenerate rings and the natural order normalize to None so the
+    # mesh-less / oblivious paths stay bit-identical (same trace)
+    assert normalize_hop_schedule(None, 8) is None
+    assert normalize_hop_schedule((1, 7, 2, 6, 3, 5, 4), 1) is None
+    assert normalize_hop_schedule(tuple(range(1, 8)), 8) is None
+    assert normalize_hop_schedule([1, 7, 2, 6, 3, 5, 4], 8) == \
+        (1, 7, 2, 6, 3, 5, 4)
+    with pytest.raises(ValueError):
+        normalize_hop_schedule((1, 2, 3), 8)       # wrong length
+    with pytest.raises(ValueError):
+        normalize_hop_schedule((0, 1, 2, 3, 4, 5, 6), 8)  # shift 0 illegal
+
+
+# ---------------------------------------------------------------------------
+# make_mesh validation (satellite 1)
+# ---------------------------------------------------------------------------
+
+def test_make_mesh_validates_sizes():
+    import jax
+    from repro.launch.mesh import make_mesh
+    with pytest.raises(ValueError):
+        make_mesh(ep=0)
+    with pytest.raises(ValueError):
+        make_mesh(dp=-1)
+    with pytest.raises(ValueError):
+        make_mesh(patch=2.0)                       # non-integer
+    n = len(jax.devices())
+    with pytest.raises(ValueError):
+        make_mesh(ep=n + 1)
+    with pytest.raises(ValueError):
+        make_mesh(ep=n, dp=2)                      # product exceeds devices
+
+
+def test_make_mesh_degenerate_is_flat_ep():
+    from repro.launch.mesh import axis_size, make_mesh
+    m = make_mesh()                                # all axes size 1
+    assert m.axis_names == ("ep",)
+    assert m.shape["ep"] == 1
+    assert axis_size(m, "ep") == 1
+    assert axis_size(m, "dp") == 1                 # dropped axes read as 1
+    assert axis_size(None, "patch") == 1
+
+
+# ---------------------------------------------------------------------------
+# shard_owner: balanced split on uneven sequence lengths (satellite 2)
+# ---------------------------------------------------------------------------
+
+def test_shard_owner_divisible_matches_equal_split():
+    for S, n in [(16, 4), (8, 2), (12, 3), (16, 1)]:
+        o = np.asarray(shard_owner(S, n))
+        assert (o == np.arange(S) // (S // n)).all(), (S, n)
+
+
+def test_shard_owner_uneven_is_balanced_and_starves_nobody():
+    # S % n != 0: shard sizes differ by at most one and every device owns
+    # at least one position (the old ceil-division map gave 3/3/3/0 at
+    # S=9, n=4)
+    for S, n in [(9, 4), (5, 2), (7, 3), (13, 4), (17, 8)]:
+        assert S % n != 0, (S, n)
+        o = np.asarray(shard_owner(S, n))
+        sizes = np.bincount(o, minlength=n)
+        assert sizes.sum() == S and sizes.shape[0] == n
+        assert sizes.min() >= 1, (S, n, sizes)
+        assert sizes.max() - sizes.min() <= 1, (S, n, sizes)
+        assert (np.diff(o) >= 0).all(), (S, n)     # contiguous shards
+
+
+# ---------------------------------------------------------------------------
+# displaced_patch_attention: dense-reference parity (satellite 2)
+# ---------------------------------------------------------------------------
+
+def _ref_mixed_attention(q, k, v, k_stale, v_stale, n_dev):
+    """Position-by-position float64 reference: the queries of shard p
+    attend to keys at positions owned by p FRESH and everything else from
+    the stale buffer."""
+    q = np.asarray(q, np.float64)
+    k = np.asarray(k, np.float64)
+    v = np.asarray(v, np.float64)
+    k_stale = np.asarray(k_stale, np.float64)
+    v_stale = np.asarray(v_stale, np.float64)
+    B, S, H, Dh = q.shape
+    KVH = k.shape[2]
+    G = H // KVH
+    owner = (np.arange(S) * n_dev) // S
+    out = np.zeros((B, S, H, Dh))
+    for b in range(B):
+        for i in range(S):
+            sel = (owner == owner[i])[:, None, None]
+            km = np.where(sel, k[b], k_stale[b])
+            vm = np.where(sel, v[b], v_stale[b])
+            for h in range(H):
+                kvh = h // G
+                s = km[:, kvh, :] @ q[b, i, h] / math.sqrt(Dh)
+                p = np.exp(s - s.max())
+                p /= p.sum()
+                out[b, i, h] = p @ vm[:, kvh, :]
+    return out
+
+
+def _qkv(seed, B=2, S=9, H=4, KVH=2, Dh=8):
+    rng = np.random.default_rng(seed)
+    q = rng.standard_normal((B, S, H, Dh)).astype(np.float32)
+    k = rng.standard_normal((B, S, KVH, Dh)).astype(np.float32)
+    v = rng.standard_normal((B, S, KVH, Dh)).astype(np.float32)
+    return q, k, v
+
+
+def test_displaced_attention_warmup_matches_dense():
+    import jax.numpy as jnp
+    q, k, v = _qkv(0)
+    out, new = displaced_patch_attention(
+        jnp.asarray(q), jnp.asarray(k), jnp.asarray(v),
+        PatchParallelState(), n_dev=4, warmup=True)
+    # warmup: remote KV is fresh too == plain dense attention
+    ref = _ref_mixed_attention(q, k, v, k, v, n_dev=4)
+    assert np.abs(np.asarray(out, np.float64) - ref).max() < 2e-5
+    # the new state stores this step's fresh KV
+    assert np.array_equal(np.asarray(new.k_prev), k)
+    assert np.array_equal(np.asarray(new.v_prev), v)
+
+
+def test_displaced_attention_staleness_matches_mixed_dense():
+    import jax.numpy as jnp
+    q, k, v = _qkv(1)
+    _, ks, vs = _qkv(2)                            # previous step's buffer
+    st = PatchParallelState(k_prev=jnp.asarray(ks), v_prev=jnp.asarray(vs))
+    out, _ = displaced_patch_attention(
+        jnp.asarray(q), jnp.asarray(k), jnp.asarray(v), st,
+        n_dev=4, warmup=False)
+    ref = _ref_mixed_attention(q, k, v, ks, vs, n_dev=4)
+    assert np.abs(np.asarray(out, np.float64) - ref).max() < 2e-5
+    # uneven S=9 over n=4: owners of remote positions genuinely read the
+    # stale buffer — the mixed output must differ from all-fresh attention
+    fresh = _ref_mixed_attention(q, k, v, k, v, n_dev=4)
+    assert np.abs(ref - fresh).max() > 1e-3
+
+
+def test_displaced_attention_warmup_ignores_stale_buffer():
+    import jax.numpy as jnp
+    q, k, v = _qkv(3)
+    _, ks, vs = _qkv(4)
+    st = PatchParallelState(k_prev=jnp.asarray(ks), v_prev=jnp.asarray(vs))
+    warm, _ = displaced_patch_attention(
+        jnp.asarray(q), jnp.asarray(k), jnp.asarray(v), st,
+        n_dev=4, warmup=True)
+    cold, _ = displaced_patch_attention(
+        jnp.asarray(q), jnp.asarray(k), jnp.asarray(v),
+        PatchParallelState(), n_dev=4, warmup=True)
+    assert np.array_equal(np.asarray(warm), np.asarray(cold))
+
+
+# ---------------------------------------------------------------------------
+# 8-device subprocess: hierarchy conformance + dp-invariance (satellite 3)
+# ---------------------------------------------------------------------------
+
+PROG = textwrap.dedent("""
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    import jax, jax.numpy as jnp
+    import numpy as np
+    from jax.sharding import PartitionSpec as P
+    from repro.common import compat
+    from repro.configs.dit_moe_xl import tiny
+    from repro.core import plan as plan_lib
+    from repro.core.moe import load_balance_loss
+    from repro.core.schedules import DiceConfig, Schedule
+    from repro.launch.mesh import make_ep_mesh, make_mesh
+    from repro.models.dit_moe import init_dit
+    from repro.sampling.rectified_flow import rf_sample
+
+    # capacity_factor == num_experts: drop-free on every shard size, so
+    # sharded and single-device runs drop the same (zero) pairs
+    cfg = tiny().replace(num_layers=2, d_model=64, moe_d_ff=64, d_ff=256,
+                         num_heads=4, num_kv_heads=4, head_dim=16,
+                         patch_tokens=16, capacity_factor=8.0)
+    params = init_dit(jax.random.PRNGKey(0), cfg)
+    k = jax.random.PRNGKey(99)
+    for i, blk in enumerate(params["blocks"]):
+        blk["adaln"] = 0.05 * jax.random.normal(
+            jax.random.fold_in(k, i), blk["adaln"].shape)
+    params["final_out"] = 0.05 * jax.random.normal(
+        jax.random.fold_in(k, 10_000), params["final_out"].shape)
+    classes = jnp.arange(8) % cfg.num_classes
+    key = jax.random.PRNGKey(7)
+    NUM_STEPS = 6
+
+    SCHEDULES = [
+        ("sync", DiceConfig.sync_ep()),
+        ("displaced", DiceConfig.displaced()),
+        ("interweaved", DiceConfig.interweaved()),
+        ("selective", DiceConfig(schedule=Schedule.DICE, sync_policy="deep",
+                                 cond_comm=False)),
+        ("dice", DiceConfig.dice(sync_policy="deep")),
+    ]
+
+    def variants(dcfg):
+        return plan_lib.compile_step_plans(
+            dcfg, cfg.num_layers, NUM_STEPS,
+            experts_per_token=cfg.experts_per_token).num_variants
+
+    # ---- five schedules on ep4 x dp2 and flat ep8 vs mesh-less ---------
+    MESHES = [("ep4xdp2", make_mesh(ep=4, dp=2)),
+              ("ep8", make_mesh(ep=8))]
+    ep8_samples = {}
+    for name, dcfg in SCHEDULES:
+        ref, _ = rf_sample(params, cfg, dcfg, num_steps=NUM_STEPS,
+                           classes=classes, key=key, guidance=1.0)
+        nv = variants(dcfg)
+        for tag, mesh in MESHES:
+            out, stats = rf_sample(params, cfg, dcfg, num_steps=NUM_STEPS,
+                                   classes=classes, key=key, guidance=1.0,
+                                   mesh=mesh)
+            err = float(jnp.max(jnp.abs(out.astype(jnp.float32)
+                                        - ref.astype(jnp.float32))))
+            assert err <= 1e-4, (name, tag, err)
+            assert stats["num_plan_variants"] == nv, (name, tag)
+            assert stats["jit_cache_size"] == nv, (
+                name, tag, stats["jit_cache_size"], nv)
+            if tag == "ep8":
+                ep8_samples[name] = out
+            print("HPARITY", name, tag, err, stats["jit_cache_size"])
+
+    # ---- flat make_mesh(ep=8) == legacy make_ep_mesh(8), bit-identical -
+    out_l, _ = rf_sample(params, cfg, dict(SCHEDULES)["dice"],
+                         num_steps=NUM_STEPS, classes=classes, key=key,
+                         guidance=1.0, mesh=make_ep_mesh(8))
+    d = float(jnp.max(jnp.abs(out_l - ep8_samples["dice"])))
+    assert d == 0.0, d
+    print("FLATSAME", d)
+
+    # ---- five schedules on ep2 x dp2 x patch2 vs the replicated -------
+    # patch_compose simulation (the single-device numerics reference of
+    # the sharded patch axis)
+    pmesh = make_mesh(ep=2, dp=2, patch=2)
+    for name, dcfg in SCHEDULES:
+        ref, _ = rf_sample(params, cfg, dcfg, num_steps=NUM_STEPS,
+                           classes=classes, key=key, guidance=1.0,
+                           patch_parallel_ndev=2, patch_compose=True)
+        out, stats = rf_sample(params, cfg, dcfg, num_steps=NUM_STEPS,
+                               classes=classes, key=key, guidance=1.0,
+                               mesh=pmesh)
+        err = float(jnp.max(jnp.abs(out.astype(jnp.float32)
+                                    - ref.astype(jnp.float32))))
+        assert err <= 1e-4, (name, err)
+        nv = variants(dcfg)
+        assert stats["jit_cache_size"] == nv, (
+            name, stats["jit_cache_size"], nv)
+        print("PPARITY", name, err, stats["jit_cache_size"])
+
+    # ---- dp-invariance, bit-for-bit (satellite 3) ----------------------
+    # load_balance_loss pmeans its two batch means SEPARATELY before the
+    # bilinear product and the served-counts histogram is pmean'd the
+    # same way (models/dit_moe.py aux tail), so a dp=2 run over
+    # per-replica-identical token shards must equal the dp=1 run exactly
+    E = cfg.num_experts
+    T, K = 64, cfg.experts_per_token
+    logits = jax.random.normal(jax.random.PRNGKey(3), (T, E))
+    probs = jax.nn.softmax(logits, axis=-1)
+    idx = jax.lax.top_k(logits, K)[1]
+
+    def reductions(axes):
+        def f(p, i):
+            lb = load_balance_loss(p, i, E, ep_axis=axes)
+            counts = jax.nn.one_hot(i, E, dtype=jnp.float32).sum((0, 1))
+            return lb, jax.lax.pmean(counts, axes)
+        return f
+
+    f1 = compat.shard_map(reductions("ep"), mesh=make_mesh(ep=4),
+                          in_specs=(P("ep"), P("ep")),
+                          out_specs=(P(), P()))
+    f2 = compat.shard_map(reductions(("dp", "ep")),
+                          mesh=make_mesh(ep=4, dp=2),
+                          in_specs=(P(("dp", "ep")), P(("dp", "ep"))),
+                          out_specs=(P(), P()))
+    lb1, cnt1 = jax.jit(f1)(probs, idx)
+    lb2, cnt2 = jax.jit(f2)(jnp.concatenate([probs, probs]),
+                            jnp.concatenate([idx, idx]))
+    assert np.asarray(lb1).tobytes() == np.asarray(lb2).tobytes(), (
+        float(lb1), float(lb2))
+    assert np.asarray(cnt1).tobytes() == np.asarray(cnt2).tobytes(), (
+        np.asarray(cnt1), np.asarray(cnt2))
+    # and the counts pmean reports the per-SHARD mean histogram
+    # ((T/4) x K pairs) at the same scale on both meshes — dp did not
+    # double it into a psum
+    assert float(jnp.sum(cnt1)) == (T // 4) * K
+    print("DPINV", float(lb1), float(lb2))
+    print("MESHHIER-OK")
+""")
+
+
+def test_mesh_hierarchy_conformance_8dev():
+    r = subprocess.run([sys.executable, "-c", PROG], capture_output=True,
+                       text=True,
+                       env=dict(os.environ, PYTHONPATH="src"),
+                       cwd=REPO, timeout=1800)
+    assert "MESHHIER-OK" in r.stdout, (r.stdout[-2000:], r.stderr[-3000:])
+    for name in ("sync", "displaced", "interweaved", "selective", "dice"):
+        assert f"HPARITY {name} ep4xdp2" in r.stdout, (name, r.stdout[-2000:])
+        assert f"HPARITY {name} ep8" in r.stdout, (name, r.stdout[-2000:])
+        assert f"PPARITY {name}" in r.stdout, (name, r.stdout[-2000:])
+    assert "FLATSAME" in r.stdout, r.stdout[-2000:]
+    assert "DPINV" in r.stdout, r.stdout[-2000:]
