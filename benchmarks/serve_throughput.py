@@ -91,7 +91,9 @@ def run(*, schedule: str = "dice", requests: int = 32, max_batch: int = 8,
         smoke: bool = False, ep: int = 0, dp: int = 1, patch: int = 1,
         codec: str = "none",
         overlap: str = "blocking", skew: str = "uniform",
-        placement: str = "identity", replicate_top: int = 0) -> dict:
+        placement: str = "identity", replicate_top: int = 0,
+        paging: str = "off", expert_hbm_budget: int = 0,
+        paging_depth: int = 1) -> dict:
     if os.environ.get("BENCH_SMOKE") == "1" and not smoke:
         # benchmarks.run --fast sets BENCH_SMOKE: shrink like the other tables
         smoke = True
@@ -121,9 +123,15 @@ def run(*, schedule: str = "dice", requests: int = 32, max_batch: int = 8,
         max_batch -= max_batch % lanes
     dcfg = SCHEDULES[schedule]()
     params = skewed_params(cfg, skew, seed=0)
+    pspec = None
+    if paging == "on":
+        from repro.core.paging import PagingSpec
+        pspec = PagingSpec(
+            budget_bytes=None if expert_hbm_budget < 0 else expert_hbm_budget,
+            depth=paging_depth)
     server = DiceServer(cfg, dcfg, params=params, mesh=mesh,
                         compress=CompressConfig(codec=codec),
-                        overlap=overlap)
+                        overlap=overlap, paging=pspec)
     reqs = [Request(class_id=i % cfg.num_classes, rid=i)
             for i in range(requests)]
     arrivals = poisson_arrivals(requests, rate, seed)
@@ -236,6 +244,18 @@ def run(*, schedule: str = "dice", requests: int = 32, max_batch: int = 8,
         "replicate_top": replicate_top,
         "max_routing_share": float(
             np.asarray(cstats["routing_shares"]).max()),
+        # expert paging (DESIGN.md Sec. 15): the residency ledger's
+        # realized peak vs the budget, plus what full residency would
+        # have cost per device — present when the run actually paged
+        "paging": paging,
+        **({"peak_resident_expert_bytes":
+                cstats["peak_resident_expert_bytes"],
+            "paged_transfers": cstats["paged_transfers"],
+            "paged_bytes_in": cstats["paged_bytes_in"],
+            "expert_hbm_budget": cstats["expert_hbm_budget"],
+            "fully_resident_expert_bytes": server.expert_pool.window_bytes(
+                server.expert_pool.layer_indices)}
+           if "peak_resident_expert_bytes" in cstats else {}),
         **place_res,
     }
     tag = f"serve_throughput/{schedule}" \
@@ -243,6 +263,7 @@ def run(*, schedule: str = "dice", requests: int = 32, max_batch: int = 8,
           + (f"+{overlap}" if overlap != "blocking" else "") \
           + (f"+{skew}" if skew != "uniform" else "") \
           + (f"+{placement}" if placement != "identity" else "") \
+          + ("+paging" if paging == "on" else "") \
           + f"/b{max_batch}"
     common.csv_row(
         tag,
@@ -302,6 +323,16 @@ def main():
                          "hop_bytes_total between the runs")
     ap.add_argument("--replicate-top", type=int, default=0,
                     help="hottest experts replicated on every device")
+    ap.add_argument("--paging", choices=["off", "on"], default="off",
+                    help="expert paging (DESIGN.md Sec. 15): host-RAM "
+                         "expert pool, per-layer shards paged into device "
+                         "memory one MoE layer ahead (needs --ep > 1)")
+    ap.add_argument("--expert-hbm-budget", type=int, default=0,
+                    help="per-device resident-expert byte budget under "
+                         "--paging on (0 = auto-tightest, negative = "
+                         "unbounded)")
+    ap.add_argument("--paging-depth", type=int, default=1,
+                    help="prefetch distance in MoE layers")
     args = ap.parse_args()
     if args.smoke:
         args.requests = min(args.requests, 12)
@@ -313,7 +344,9 @@ def main():
               rate=args.rate, seed=args.seed, smoke=args.smoke, ep=args.ep,
               dp=args.dp, patch=args.patch,
               codec=args.codec, overlap=args.overlap, skew=args.skew,
-              placement=args.placement, replicate_top=args.replicate_top)
+              placement=args.placement, replicate_top=args.replicate_top,
+              paging=args.paging, expert_hbm_budget=args.expert_hbm_budget,
+              paging_depth=args.paging_depth)
     common.write_bench_json("serve_throughput", res)
     for k, v in res.items():
         print(f"  {k:28s} {v:.6g}" if isinstance(v, float)
@@ -344,6 +377,22 @@ def main():
             rings = 4 if args.schedule == "staggered_batch" else 2
             assert res["cont_ring_hops"] == rings * (args.ep - 1), res
             assert res["cont_hop_bytes_total"] > 0
+    if args.paging == "on" and args.ep > 1:
+        # expert-paging acceptance (DESIGN.md Sec. 15): the realized
+        # residency peak must respect the budget and stay strictly below
+        # full residency whenever the model has more layers than the
+        # prefetch window holds
+        assert res["paged_transfers"] > 0, res
+        budget = res["expert_hbm_budget"]
+        if budget is not None:
+            assert res["peak_resident_expert_bytes"] <= budget, res
+        assert res["peak_resident_expert_bytes"] <= \
+            res["fully_resident_expert_bytes"], res
+        if budget is not None and budget < res["fully_resident_expert_bytes"]:
+            # a budget below full residency must actually be honored by
+            # paging, not by quietly keeping everything resident
+            assert res["peak_resident_expert_bytes"] < \
+                res["fully_resident_expert_bytes"], res
     if args.placement == "greedy" and args.ep > 1:
         # affinity-aware placement acceptance (DESIGN.md Sec. 13): the
         # placed run of the SAME request trace must put strictly fewer
@@ -366,7 +415,10 @@ def main():
              if args.overlap == "ring" else "")
           + (f", placement hop-bytes -{res['hop_bytes_reduction']:.0%} "
              f"(parity {res['placement_parity_err']:.1e})"
-             if args.placement == "greedy" and args.ep > 1 else ""))
+             if args.placement == "greedy" and args.ep > 1 else "")
+          + (f", paged peak {res['peak_resident_expert_bytes']} B/dev "
+             f"(full residency {res['fully_resident_expert_bytes']} B)"
+             if args.paging == "on" and args.ep > 1 else ""))
 
 
 if __name__ == "__main__":

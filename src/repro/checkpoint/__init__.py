@@ -1,1 +1,6 @@
-from repro.checkpoint.io import save_checkpoint, load_checkpoint
+from repro.checkpoint.io import (
+    load_checkpoint,
+    load_checkpoint_leaves,
+    read_checkpoint_manifest,
+    save_checkpoint,
+)

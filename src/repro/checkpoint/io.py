@@ -1,17 +1,39 @@
 """Checkpointing: msgpack serialization of arbitrary pytrees of arrays.
 
-No orbax in this container; this is a compact, dependency-light format:
-a manifest (tree structure + dtypes/shapes) and raw little-endian buffers.
+No orbax in this container; this is a compact, dependency-light format.
+A msgpack manifest (tree structure + per-leaf dtype/shape/chunk count)
+is followed by the raw little-endian buffers, written in bounded chunks
+(format 2) so a single multi-GiB expert stack never has to fit in one
+msgpack bin — msgpack caps an individual buffer at 2**32-1 bytes, and
+the old one-bin-per-leaf layout (format 1) hit that wall exactly where
+it matters (``dbrx_132b``: 16 experts x 6144 x 10752 f32 is ~4.2 GiB
+per stacked leaf).  Format-1 files remain readable.
+
+Restores go through :func:`load_checkpoint_leaves`, a generator that
+materializes ONE leaf at a time — the expert-paging pool and
+``ep_shard_params`` consume it shard-by-shard (DESIGN.md Sec. 15)
+without ever holding the whole tree in host RAM.  ``load_checkpoint``
+is the strict whole-tree wrapper: it validates the stored treedef,
+leaf count, dtypes and shapes against ``like`` before touching any
+buffer, and every array it returns is freshly allocated (writable), so
+donated-buffer restore paths never trip over ``np.frombuffer``'s
+read-only views.
 """
 from __future__ import annotations
 
 import os
-from typing import Any
+from typing import Any, Iterator, Tuple
 
 import jax
 import jax.numpy as jnp
 import msgpack
 import numpy as np
+
+# default bound on a single msgpack bin; far below the 2**32-1 msgpack
+# ceiling, large enough that chunking costs nothing on small trees
+DEFAULT_CHUNK_BYTES = 64 * 1024 * 1024
+
+_FORMAT = 2
 
 
 def _flatten(tree):
@@ -19,36 +41,150 @@ def _flatten(tree):
     return leaves, treedef
 
 
-def save_checkpoint(path: str, tree: Any, *, step: int = 0) -> None:
+def _leaf_meta(leaf) -> Tuple[np.dtype, Tuple[int, ...]]:
+    """dtype/shape of a leaf WITHOUT forcing a host copy: jax arrays keep
+    their buffers on device until the actual write streams them out."""
+    if hasattr(leaf, "dtype") and hasattr(leaf, "shape"):
+        return np.dtype(leaf.dtype), tuple(leaf.shape)
+    arr = np.asarray(leaf)
+    return arr.dtype, tuple(arr.shape)
+
+
+def _num_chunks(nbytes: int, chunk_bytes: int) -> int:
+    return max(1, -(-nbytes // chunk_bytes))
+
+
+def save_checkpoint(path: str, tree: Any, *, step: int = 0,
+                    chunk_bytes: int = DEFAULT_CHUNK_BYTES) -> None:
+    """Write ``tree`` as manifest + chunked leaf buffers (format 2).
+
+    Leaves are pulled to host ONE AT A TIME (``jax.device_get`` inside
+    the write loop) and each is written as ``ceil(nbytes/chunk_bytes)``
+    msgpack bins — peak host RAM is one leaf, and no bin ever exceeds
+    ``chunk_bytes``.
+    """
+    if chunk_bytes <= 0:
+        raise ValueError(f"chunk_bytes must be positive, got {chunk_bytes}")
     leaves, treedef = _flatten(tree)
+    metas = [_leaf_meta(l) for l in leaves]
     manifest = {
+        "format": _FORMAT,
         "step": step,
         "treedef": str(treedef),
+        "chunk_bytes": chunk_bytes,
         "leaves": [
-            {"dtype": str(np.asarray(l).dtype), "shape": list(np.asarray(l).shape)}
-            for l in leaves
+            {"dtype": str(dt), "shape": list(shape),
+             "chunks": _num_chunks(int(np.prod(shape, dtype=np.int64))
+                                   * dt.itemsize, chunk_bytes)}
+            for dt, shape in metas
         ],
     }
     os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
     with open(path, "wb") as f:
         f.write(msgpack.packb(manifest))
-        for l in leaves:
-            arr = np.asarray(jax.device_get(l))
-            f.write(msgpack.packb(arr.tobytes()))
+        for leaf, (dt, shape) in zip(leaves, metas):
+            arr = np.ascontiguousarray(np.asarray(jax.device_get(leaf)))
+            raw = arr.reshape(-1).view(np.uint8) if arr.nbytes else \
+                np.empty((0,), np.uint8)
+            view = memoryview(raw)
+            n = _num_chunks(arr.nbytes, chunk_bytes)
+            for c in range(n):
+                lo = c * chunk_bytes
+                f.write(msgpack.packb(bytes(view[lo:lo + chunk_bytes])))
+            del view, raw, arr
 
 
-def load_checkpoint(path: str, like: Any) -> Any:
-    """Restore into the structure of ``like`` (shapes/dtypes must match)."""
-    leaves, treedef = _flatten(like)
+def read_checkpoint_manifest(path: str) -> dict:
+    """The manifest alone (no buffers touched): format, step, treedef
+    string, and per-leaf dtype/shape/chunk metadata."""
     with open(path, "rb") as f:
         unpacker = msgpack.Unpacker(f, max_buffer_size=2**31)
         manifest = unpacker.unpack()
-        out = []
-        for meta, ref in zip(manifest["leaves"], leaves):
-            buf = unpacker.unpack()
-            arr = np.frombuffer(buf, dtype=meta["dtype"]).reshape(meta["shape"])
-            if tuple(arr.shape) != tuple(np.asarray(ref).shape):
-                raise ValueError(
-                    f"checkpoint shape {arr.shape} != expected {np.asarray(ref).shape}")
-            out.append(jnp.asarray(arr, dtype=np.asarray(ref).dtype))
+    if "format" not in manifest:
+        manifest = dict(manifest, format=1)
+    return manifest
+
+
+def _validate_manifest(manifest: dict, like: Any):
+    """Structure/dtype/shape checks BEFORE any buffer is read.  Returns
+    the flattened (leaves, treedef) of ``like``."""
+    leaves, treedef = _flatten(like)
+    stored_treedef = manifest.get("treedef")
+    if stored_treedef != str(treedef):
+        raise ValueError(
+            f"checkpoint treedef does not match `like`:\n"
+            f"  stored:   {stored_treedef}\n  expected: {treedef}")
+    if len(manifest["leaves"]) != len(leaves):
+        raise ValueError(
+            f"checkpoint has {len(manifest['leaves'])} leaves, `like` has "
+            f"{len(leaves)}")
+    for i, (meta, ref) in enumerate(zip(manifest["leaves"], leaves)):
+        ref_dt, ref_shape = _leaf_meta(ref)
+        if np.dtype(meta["dtype"]) != ref_dt:
+            raise ValueError(
+                f"checkpoint leaf {i}: dtype {meta['dtype']} != expected "
+                f"{ref_dt} (dtypes must match; no silent cast)")
+        if tuple(meta["shape"]) != ref_shape:
+            raise ValueError(
+                f"checkpoint leaf {i}: shape {tuple(meta['shape'])} != "
+                f"expected {ref_shape}")
+    return leaves, treedef
+
+
+def _read_leaf(unpacker, meta: dict, fmt: int) -> np.ndarray:
+    """Assemble one leaf from its bins into a FRESH writable array."""
+    dt = np.dtype(meta["dtype"])
+    shape = tuple(meta["shape"])
+    out = np.empty(shape, dtype=dt)
+    flat = out.reshape(-1).view(np.uint8) if out.nbytes else \
+        np.empty((0,), np.uint8)
+    n = meta.get("chunks", 1) if fmt >= 2 else 1
+    pos = 0
+    for _ in range(n):
+        buf = unpacker.unpack()
+        chunk = np.frombuffer(buf, dtype=np.uint8)
+        flat[pos:pos + chunk.size] = chunk     # copy out of the read-only view
+        pos += chunk.size
+    if pos != out.nbytes:
+        raise ValueError(
+            f"checkpoint leaf truncated: read {pos} bytes, expected "
+            f"{out.nbytes} for shape {shape} dtype {dt}")
+    return out
+
+
+def load_checkpoint_leaves(path: str, like: Any = None,
+                           ) -> Iterator[np.ndarray]:
+    """Stream a checkpoint's leaves one at a time, in tree-flatten order.
+
+    Yields freshly allocated (writable) numpy arrays; the generator holds
+    no reference to previously yielded leaves, so peak host memory is one
+    leaf — the restore-only streaming pattern.  With ``like`` given, the
+    stored treedef / leaf count / dtypes / shapes are validated against
+    it before the first leaf is read.
+    """
+    with open(path, "rb") as f:
+        unpacker = msgpack.Unpacker(f, max_buffer_size=2**31)
+        manifest = unpacker.unpack()
+        fmt = manifest.get("format", 1)
+        if like is not None:
+            _validate_manifest(manifest, like)
+        for meta in manifest["leaves"]:
+            yield _read_leaf(unpacker, meta, fmt)
+
+
+def load_checkpoint(path: str, like: Any) -> Any:
+    """Restore into the structure of ``like`` (shapes/dtypes must match).
+
+    Validates treedef, leaf count, dtype, and shape against ``like``
+    before restoring — a mismatched tree raises instead of silently
+    truncating or casting.  Reads both the chunked format 2 and the old
+    single-bin-per-leaf format 1.
+    """
+    with open(path, "rb") as f:
+        unpacker = msgpack.Unpacker(f, max_buffer_size=2**31)
+        manifest = unpacker.unpack()
+        fmt = manifest.get("format", 1)
+        _, treedef = _validate_manifest(manifest, like)
+        out = [jnp.asarray(_read_leaf(unpacker, meta, fmt))
+               for meta in manifest["leaves"]]
     return jax.tree_util.tree_unflatten(treedef, out)

@@ -100,15 +100,24 @@ def route(p, x, cfg: ModelConfig, *, key=None):
 
 
 def make_plan(idx, E: int, capacity: int,
-              fresh_mask: Optional[jnp.ndarray] = None) -> DispatchPlan:
-    """Sort-based dispatch plan.  idx: (T, K) expert ids."""
+              fresh_mask: Optional[jnp.ndarray] = None,
+              num_slots: Optional[int] = None) -> DispatchPlan:
+    """Sort-based dispatch plan.  idx: (T, K) expert ids.
+
+    ``num_slots`` is the dispatch buffer's expert dimension when it is
+    WIDER than the routable id space — expert paging pads the wire to
+    ``E_pad = ceil(E / n_dev) * n_dev`` with phantom experts the router
+    never emits (DESIGN.md Sec. 15); the drop slot moves past the padded
+    buffer so dropped pairs stay out of phantom rows.  Default: ``E``."""
+    S = E if num_slots is None else num_slots
     T, K = idx.shape
     flat_e = idx.reshape(-1)
     flat_t = jnp.repeat(jnp.arange(T), K)
     if fresh_mask is not None:
-        # Stale pairs never enter the buffer: route them to a virtual expert E
-        # so they sort to the end and are dropped from dispatch entirely.
-        flat_e = jnp.where(fresh_mask.reshape(-1), flat_e, E)
+        # Stale pairs never enter the buffer: route them to a virtual expert
+        # (any id >= E sorts after all real pairs) and drop them from
+        # dispatch entirely.
+        flat_e = jnp.where(fresh_mask.reshape(-1), flat_e, S)
     order = jnp.argsort(flat_e, stable=True)
     e_sorted = flat_e[order]
     t_sorted = flat_t[order]
@@ -116,7 +125,7 @@ def make_plan(idx, E: int, capacity: int,
     starts = jnp.cumsum(counts) - counts
     pos = jnp.arange(T * K) - starts[jnp.clip(e_sorted, 0, E - 1)]
     keep = (pos < capacity) & (e_sorted < E)
-    slot = jnp.where(keep, e_sorted * capacity + pos, E * capacity)
+    slot = jnp.where(keep, e_sorted * capacity + pos, S * capacity)
     inv_order = jnp.argsort(order, stable=True)
     return DispatchPlan(slot=slot, t_sorted=t_sorted, inv_order=inv_order,
                         keep=keep, capacity=jnp.asarray(capacity),
@@ -252,7 +261,8 @@ def moe_forward(p, x, cfg: ModelConfig, *,
                 overlap: bool = False,
                 placement: Optional[Placement] = None,
                 reduce_axes=None,
-                hop_schedule=None):
+                hop_schedule=None,
+                num_wire_experts: Optional[int] = None):
     """MoE layer forward.  x: (T, d) flat tokens (per-device shard if EP).
 
     ``ep_axis``: mesh axis name for expert parallelism — call inside
@@ -306,6 +316,16 @@ def moe_forward(p, x, cfg: ModelConfig, *,
     behaviour (reduce over ``ep_axis`` alone).  ``hop_schedule`` is the
     topology-aware hop order :func:`repro.core.overlap.ring_hop_schedule`
     derives; ``None`` is the natural ring order.
+
+    ``num_wire_experts`` (DESIGN.md Sec. 15): the expert dimension of the
+    wire/dispatch buffers when the expert stacks in ``p`` are PADDED
+    past ``cfg.num_experts`` — expert paging pads to the next multiple
+    of the ep-axis size with zero-weight phantom experts so ANY expert
+    count serves on any mesh.  The router only ever emits real ids, so
+    phantom rows carry zero tokens and contribute nothing; with
+    ``num_wire_experts == E`` (or ``None``) every code path below is
+    exactly the historical one.  Requires ``ep_axis``; incompatible with
+    ``placement`` (the pool serves canonical expert order).
     """
     T, d = x.shape
     E = cfg.num_experts
@@ -313,6 +333,15 @@ def moe_forward(p, x, cfg: ModelConfig, *,
     K = idx.shape[1]
     pl = placement if (placement is not None
                       and not placement.is_identity) else None
+    S = E                       # wire/dispatch-buffer expert dimension
+    if num_wire_experts is not None and ep_axis is not None:
+        if num_wire_experts < E:
+            raise ValueError(
+                f"num_wire_experts={num_wire_experts} < num_experts={E}")
+        if pl is not None and num_wire_experts != E:
+            raise ValueError("a padded wire (expert paging) cannot compose "
+                             "with an expert placement")
+        S = num_wire_experts
     if capacity is None:
         capacity = default_capacity(T, cfg)
         if pl is not None:
@@ -331,7 +360,8 @@ def moe_forward(p, x, cfg: ModelConfig, *,
             wire_fresh = ~rep_mask if fresh_mask is None \
                 else (fresh_mask & ~rep_mask)
         wire_idx = jnp.asarray(pl.inv_perm())[idx]
-    plan = make_plan(wire_idx, E, capacity, fresh_mask=wire_fresh)
+    plan = make_plan(wire_idx, E, capacity, fresh_mask=wire_fresh,
+                     num_slots=S)
     # ---- wire codec, dispatch direction: the (E, C, d) buffer scattered
     # below holds rows of x_wire, so encoding per token before the scatter
     # is exactly encoding the buffer the all-to-all moves
@@ -340,7 +370,7 @@ def moe_forward(p, x, cfg: ModelConfig, *,
         base = dispatch_base if dispatch_base is not None \
             else jnp.zeros_like(x)
         x_wire = codec_lib.apply(codec, x, base, use_pallas=use_pallas)
-    buf = dispatch(x_wire, plan, E, capacity)                   # (E, C, d)
+    buf = dispatch(x_wire, plan, S, capacity)                   # (S, C, d)
 
     # ---- replica-served pairs: dispatch the SAME wire payload (x_wire —
     # codec'd rows stay codec'd, keeping parity with the identity layout,
@@ -375,12 +405,15 @@ def moe_forward(p, x, cfg: ModelConfig, *,
             loc_out = loc_ffn()
     else:
         n = compat.axis_size(ep_axis)
-        if E % n:
+        if S % n:
             raise ValueError(
                 f"num_experts={E} must divide over the {n}-way "
-                f"{ep_axis!r} mesh axis for expert parallelism")
+                f"{ep_axis!r} mesh axis for expert parallelism — or enable "
+                f"expert paging (DESIGN.md Sec. 15), whose pool pads the "
+                f"wire to the next multiple so any expert count serves on "
+                f"any mesh")
         n_dev = n
-        e_loc = E // n
+        e_loc = S // n
         local = {k: v for k, v in p.items()
                  if k.startswith("experts_") and not k.endswith("_rep")}
         if overlap and n > 1:
@@ -398,7 +431,7 @@ def moe_forward(p, x, cfg: ModelConfig, *,
                 prelude_fn=loc_ffn, hop_schedule=hop_schedule)
             if loc_ffn is not None:
                 b, loc_out = b
-            buf_out = b.reshape(E, capacity, d)
+            buf_out = b.reshape(S, capacity, d)
         else:
             # ---- dispatch all-to-all (collective #1) ---------------------
             # NOTE: the CPU backend's float-normalization pass upcasts bf16
@@ -416,7 +449,7 @@ def moe_forward(p, x, cfg: ModelConfig, *,
             b = jnp.moveaxis(b.reshape(e_loc, n, capacity, d), 1, 0)
             b = jax.lax.all_to_all(b.astype(x.dtype), ep_axis, split_axis=0,
                                    concat_axis=0, tiled=True)
-            buf_out = b.reshape(E, capacity, d)
+            buf_out = b.reshape(S, capacity, d)
             if loc_ffn is not None:
                 loc_out = loc_ffn()
 
@@ -492,14 +525,14 @@ def moe_forward(p, x, cfg: ModelConfig, *,
             probs, idx, E,
             ep_axis=reduce_axes if reduce_axes is not None else ep_axis),
         dropped_frac=dropped_frac,
-        dispatch_bytes=jnp.asarray(E * capacity * per_row),
+        dispatch_bytes=jnp.asarray(S * capacity * per_row),
         pair_vals=pair_vals if (want_pair_vals or fresh_mask is not None) else None,
         scores=scores if (want_pair_vals or fresh_mask is not None) else None,
         pair_keep=pair_keep if (want_pair_vals or fresh_mask is not None) else None,
-        raw_dispatch_bytes=jnp.asarray(E * capacity * d * itemsize),
+        raw_dispatch_bytes=jnp.asarray(S * capacity * d * itemsize),
         wire_payload=x_wire if codec is not None else None,
         hops=jnp.asarray(2 * (n_dev - 1) if ring else 0),
-        hop_bytes=jnp.asarray((E // n_dev) * capacity * per_row
+        hop_bytes=jnp.asarray((S // n_dev) * capacity * per_row
                               if ring else 0),
         counts=counts,
         served_counts=served_counts,

@@ -34,6 +34,7 @@ from typing import Callable, Dict, List, Optional, Tuple
 
 from repro.compress.codecs import CodecSpec
 from repro.core import conditional
+from repro.core.paging import PagingSpec, normalize_paging, paging_of
 from repro.core.placement import Placement
 from repro.core.selective import sync_layer_mask
 
@@ -94,6 +95,20 @@ class LayerAction:
         :func:`repro.core.placement.placed_params` to match.  Identity
         placements normalize to ``None`` so plans — and outputs — stay
         bit-identical to pre-placement configs.
+    paging / prefetch / resident
+        expert paging (DESIGN.md Sec. 15): with a
+        :class:`repro.core.paging.PagingSpec` stamped, this layer's
+        routed-expert shards come from the host-RAM ExpertPool instead
+        of the params tree.  ``prefetch`` is the MoE layer index whose
+        shards this layer's body fetches AHEAD (``i + depth``, ``None``
+        at the tail) — the fetch has no data dependency on this layer,
+        so it hides behind the ring hops already in flight — and
+        ``resident`` is the planned residency window (the layer indices
+        device-resident while this layer runs), the set the HBM budget
+        is validated against.  All three are hashable plan fields like
+        ``codec``; ``prefetch``/``resident`` normalize to ``None``
+        without a spec so paging-off plans stay equal to historical
+        plans.
     """
     mode: str = "sync"
     store_y: bool = False
@@ -105,6 +120,9 @@ class LayerAction:
     store_base: bool = False
     overlap: bool = False
     placement: Optional[Placement] = None
+    paging: Optional[PagingSpec] = None
+    prefetch: Optional[int] = None
+    resident: Optional[Tuple[int, ...]] = None
 
     def __post_init__(self):
         if self.mode not in ("sync", "displaced", "interweaved", "staggered"):
@@ -122,6 +140,21 @@ class LayerAction:
             # and must be indistinguishable from no placement (bit-identity
             # + plan equality, like codec="none" / overlap on one device)
             object.__setattr__(self, "placement", None)
+        if self.paging is None:
+            # normalize: without a spec there is no pool to prefetch from;
+            # stray prefetch/resident stamps must not break plan equality
+            object.__setattr__(self, "prefetch", None)
+            object.__setattr__(self, "resident", None)
+        else:
+            if self.placement is not None:
+                raise ValueError(
+                    "expert paging and affinity placement are mutually "
+                    "exclusive on one layer: the pool serves shards in the "
+                    "canonical expert order, a placement permutes them "
+                    "(page OR place, not both)")
+            if self.resident is not None:
+                object.__setattr__(self, "resident",
+                                   tuple(int(i) for i in self.resident))
 
     # -- buffer read/write accounting (drives the derived properties) -------
     @property
@@ -324,6 +357,20 @@ def plan_for_step(dcfg, num_moe_layers: int, step_idx: int, *,
         plan = dataclasses.replace(plan, actions=tuple(
             dataclasses.replace(a, placement=pl)
             for a, pl in zip(plan.actions, placements)))
+    pspec = paging_of(dcfg)
+    if pspec is not None:
+        if placements is not None:
+            raise ValueError(
+                "dcfg.paging and dcfg.placements are mutually exclusive: "
+                "the pool serves shards in the canonical expert order, a "
+                "placement permutes them")
+        L = len(plan.actions)
+        plan = dataclasses.replace(plan, actions=tuple(
+            dataclasses.replace(
+                a, paging=pspec,
+                prefetch=(i + pspec.depth) if i + pspec.depth < L else None,
+                resident=tuple(range(i, min(i + pspec.depth + 1, L))))
+            for i, a in enumerate(plan.actions)))
     return plan
 
 

@@ -21,6 +21,7 @@ from dataclasses import dataclass
 from typing import Optional, Tuple, Union
 
 from repro.compress.codecs import CompressConfig
+from repro.core.paging import PagingSpec
 from repro.core.placement import Placement
 
 
@@ -79,6 +80,16 @@ class DiceConfig:
     # pre-placement layout.  Normalized to None by the entry points when
     # no n>1 ep mesh backs the run (plan.normalize_placement).
     placements: Optional[Tuple[Optional[Placement], ...]] = None
+    # -- memory level: expert paging + async prefetch --------------------------
+    # (DESIGN.md Sec. 15) with a PagingSpec the routed-expert stacks live in
+    # a host-RAM ExpertPool and each device keeps only a (depth+1)-layer
+    # window of shards resident, fetched one layer ahead inside the traced
+    # step.  Stamped onto every LayerAction by the plan compiler (prefetch /
+    # resident fields); mutually exclusive with ``placements``.  Normalized
+    # to None by the entry points when no n>1 ep mesh backs the run
+    # (repro.core.paging.normalize_paging), so mesh-less runs stay
+    # bit-identical to fully-resident configs.
+    paging: Optional[PagingSpec] = None
 
     def __post_init__(self):
         if self.overlap not in ("blocking", "ring"):

@@ -210,7 +210,8 @@ def apply_layer_action(p, x, cfg: ModelConfig, action: LayerAction,
                        key=None, ep_axis: Optional[str] = None,
                        use_pallas: bool = False,
                        slot_fresh=None, consume_mask=None,
-                       reduce_axes=None, hop_schedule=None):
+                       reduce_axes=None, hop_schedule=None,
+                       num_wire_experts: Optional[int] = None):
     """Execute one MoE layer under a planned :class:`LayerAction`.
 
     x: (T, d) flat tokens.  All schedule decisions (mode, mask, capacity,
@@ -264,7 +265,8 @@ def apply_layer_action(p, x, cfg: ModelConfig, action: LayerAction,
                            overlap=action.overlap,
                            placement=action.placement,
                            reduce_axes=reduce_axes,
-                           hop_schedule=hop_schedule)
+                           hop_schedule=hop_schedule,
+                           num_wire_experts=num_wire_experts)
 
     def next_base(payload, aux):
         """Residual base for the next wire transmission (Sec. 11): the

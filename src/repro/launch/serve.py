@@ -33,6 +33,7 @@ from repro.compress.codecs import CODEC_KINDS, CompressConfig
 from repro.configs.dit_moe_xl import config as xl_config, tiny
 from repro.core import conditional
 from repro.core import overlap as overlap_lib
+from repro.core import paging as paging_lib
 from repro.core import placement as placement_lib
 from repro.core import plan as plan_lib
 from repro.core import staleness as stale_lib
@@ -293,6 +294,8 @@ class DiceServer:
                  compress: Optional[CompressConfig] = None,
                  overlap: Optional[str] = None,
                  placement: Optional[placement_lib.PlacementConfig] = None,
+                 paging: Optional[paging_lib.PagingSpec] = None,
+                 expert_pool: Optional[paging_lib.ExpertPool] = None,
                  devices_per_host: int = 0,
                  inter_host_bw: Optional[float] = None):
         if compress is not None:
@@ -308,6 +311,11 @@ class DiceServer:
             # has no n>1 ep mesh, but the latency model keeps describing
             # the REQUESTED engine on the target n_dev-device deployment
             dcfg = dataclasses.replace(dcfg, overlap=overlap)
+        if paging is not None:
+            # thread the expert-paging spec (Sec. 15) into the schedule
+            # config; the samplers normalize it away on mesh-less / 1-dev
+            # runs, exactly like overlap and placement
+            dcfg = dataclasses.replace(dcfg, paging=paging)
         n_ep = (mesh.shape[ep_axis]
                 if mesh is not None and ep_axis in mesh.axis_names else 1)
         if n_dev is None:
@@ -339,6 +347,30 @@ class DiceServer:
         self.placement = placement
         self.params = params if params is not None else init_dit(
             jax.random.PRNGKey(seed), cfg)
+        # expert paging (DESIGN.md Sec. 15): on an n>1 ep mesh the routed-
+        # expert stacks move out of the device tree into the host-RAM
+        # pool BEFORE params are sharded, so the full expert set is never
+        # device-placed; the step functions page per-layer shards back in
+        # along the plan's prefetch schedule.  The budget "auto" sentinel
+        # resolves here — plans stamp the resolved spec.
+        self.expert_pool = expert_pool
+        if paging_lib.paging_of(dcfg) is not None and n_ep > 1:
+            if placement is not None and placement.mode == "greedy":
+                raise ValueError(
+                    "expert paging and online affinity placement are "
+                    "mutually exclusive: the pool serves per-layer shards "
+                    "in canonical expert order (DESIGN.md Sec. 15)")
+            if (self.expert_pool is None
+                    and paging_lib.has_expert_leaves(self.params)):
+                self.expert_pool = paging_lib.pool_from_params(
+                    self.params, n_dev=n_ep)
+            if self.expert_pool is None:
+                raise ValueError(
+                    "paging is configured but params carry no expert "
+                    "leaves and no expert_pool was provided")
+            dcfg = paging_lib.resolve_budget(dcfg, self.expert_pool)
+            self.dcfg = dcfg
+            self.params = paging_lib.strip_expert_params(self.params)
         if mesh is not None:
             # place once at construction; the per-batch ep_shard_params
             # inside make_rf_step then sees an already-sharded tree and
@@ -365,7 +397,8 @@ class DiceServer:
                                    mesh=self.mesh,
                                    ep_axis=self.ep_axis if self.mesh
                                    is not None else None,
-                                   hop_schedule=self.hop_schedule)
+                                   hop_schedule=self.hop_schedule,
+                                   expert_pool=self.expert_pool)
         wall = time.time() - t0
         lat = modeled_step_latency(
             self.cfg, self.dcfg, n_dev=self.n_dev,
@@ -394,6 +427,12 @@ class DiceServer:
             "raw_bytes_total": float(sum(stats["raw_bytes"])),
             "num_plan_variants": stats["num_plan_variants"],
             "jit_cache_size": stats["jit_cache_size"],
+            # expert paging observability (Sec. 15), present when the run
+            # paged: host->device transfer count/bytes and the realized
+            # per-device residency peak the --expert-hbm-budget bounds
+            **{k: stats[k] for k in ("paged_transfers", "paged_bytes_in",
+                                     "peak_resident_expert_bytes",
+                                     "expert_hbm_budget") if k in stats},
         }
 
 
@@ -464,6 +503,14 @@ def serve_queue(server: "DiceServer", requests: List[Request], *,
                                              stats["num_plan_variants"])
         stats_acc["jit_cache_size"] = max(stats_acc["jit_cache_size"],
                                           stats["jit_cache_size"])
+        # paging (Sec. 15): transfers/bytes are flows (sum), the residency
+        # peak and budget are sizes (max) — the pool resets per batch
+        for k in ("paged_transfers", "paged_bytes_in"):
+            if k in stats:
+                stats_acc[k] = stats_acc.get(k, 0) + stats[k]
+        for k in ("peak_resident_expert_bytes", "expert_hbm_budget"):
+            if k in stats and stats[k] is not None:
+                stats_acc[k] = max(stats_acc.get(k, 0), stats[k])
     return out, stats_acc
 
 
@@ -552,6 +599,20 @@ def serve_continuous(server: "DiceServer", requests: List[Request], *,
     # placement likewise is an n>1-mesh layout property (Sec. 13): the
     # single-device server's params are unpermuted, so placements strip
     dcfg = plan_lib.normalize_placement(dcfg, n_ep)
+    # and paging (Sec. 15): one device holds every expert locally
+    dcfg = paging_lib.normalize_paging(dcfg, n_ep)
+    pool = (server.expert_pool
+            if paging_lib.paging_of(dcfg) is not None else None)
+    if paging_lib.paging_of(dcfg) is not None:
+        if pool is None:
+            raise ValueError("paging is planned but the server holds no "
+                             "expert pool (construct DiceServer with "
+                             "paging= on an n>1 ep mesh)")
+        if pool.n_dev != n_ep:
+            raise ValueError(
+                f"expert pool is sharded for {pool.n_dev} devices but the "
+                f"serving mesh has a {n_ep}-way ep axis")
+        pool.reset_stats()
     key = key if key is not None else jax.random.PRNGKey(0)
     noise_key, step_key = jax.random.split(key)
     B, Tp = max_batch, cfg.patch_tokens
@@ -587,9 +648,14 @@ def serve_continuous(server: "DiceServer", requests: List[Request], *,
                                             experts_per_token=k_exp)
         merge_plan = plan_lib.slotted_merge_plan(dcfg, cfg.num_layers,
                                                  experts_per_token=k_exp)
+        if pool is not None:
+            # budget was resolved at server construction; every planned
+            # residency window must fit before anything compiles
+            pool.validate_plan(splan)
         rf_step = make_rf_step(server.params, cfg, dcfg, dt=dt,
                                guidance=guidance, mesh=mesh, ep_axis=ep_axis,
-                               hop_schedule=server.hop_schedule)
+                               hop_schedule=server.hop_schedule,
+                               expert_pool=pool)
         return splan, merge_plan, rf_step
 
     splan, merge_plan, rf_step = _build(dcfg)
@@ -803,6 +869,13 @@ def serve_continuous(server: "DiceServer", requests: List[Request], *,
         "placement_reshards": placement_reshards,
         "placement_wire_scale": plan_lib.placement_wire_scale(dcfg),
     }
+    if pool is not None:
+        # drain in-flight fetches before reading the ledger (Sec. 15)
+        jax.block_until_ready(x)
+        stats["paged_transfers"] = pool.transfers
+        stats["paged_bytes_in"] = pool.bytes_transferred
+        stats["peak_resident_expert_bytes"] = pool.peak_resident_bytes
+        stats["expert_hbm_budget"] = paging_lib.paging_of(dcfg).budget_bytes
     return out, stats
 
 
@@ -867,6 +940,21 @@ def main():
     ap.add_argument("--replicate-top", type=int, default=0,
                     help="hottest experts replicated on every device "
                          "(served locally, off the wire); 0 disables")
+    ap.add_argument("--paging", choices=["off", "on"], default="off",
+                    help="expert paging (DESIGN.md Sec. 15): hold the full "
+                         "expert set in host RAM and page per-layer shards "
+                         "into device memory one MoE layer ahead of use "
+                         "(needs --ep > 1; also lifts the E %% n_dev == 0 "
+                         "restriction via phantom-expert padding)")
+    ap.add_argument("--expert-hbm-budget", type=int, default=0,
+                    help="per-device byte budget for resident routed-expert "
+                         "shards under --paging on: 0 (default) auto-"
+                         "resolves to the tightest feasible window, "
+                         "negative means unbounded")
+    ap.add_argument("--paging-depth", type=int, default=1,
+                    help="prefetch distance in MoE layers: layer i issues "
+                         "the fetch of layer i+depth so the transfer hides "
+                         "behind the intervening compute/collectives")
     ap.add_argument("--continuous", action="store_true",
                     help="drain the requests through the continuous-"
                          "batching engine (--max-batch slots) instead of "
@@ -876,10 +964,24 @@ def main():
 
     cfg = tiny() if args.tiny else xl_config()
     dcfg = SCHEDULES[args.schedule]()
+    paging = None
+    if args.paging == "on":
+        paging = paging_lib.PagingSpec(
+            budget_bytes=(None if args.expert_hbm_budget < 0
+                          else args.expert_hbm_budget),
+            depth=args.paging_depth)
     params = None
+    expert_pool = None
     if args.ckpt:
-        params = load_checkpoint(args.ckpt,
-                                 init_dit(jax.random.PRNGKey(0), cfg))
+        like = init_dit(jax.random.PRNGKey(0), cfg)
+        if paging is not None and args.ep > 1:
+            # streamed restore straight into the paging split (Sec. 15):
+            # expert stacks land in the host pool, the rest in the device
+            # tree — the full param tree is never materialized at once
+            params, expert_pool = paging_lib.load_pooled_checkpoint(
+                args.ckpt, like, n_dev=args.ep)
+        else:
+            params = load_checkpoint(args.ckpt, like)
     mesh = None
     if args.ep or args.dp > 1 or args.patch > 1:
         from repro.launch.mesh import make_mesh
@@ -892,6 +994,8 @@ def main():
                         placement=placement_lib.PlacementConfig(
                             mode=args.placement,
                             replicate_top=args.replicate_top),
+                        paging=paging,
+                        expert_pool=expert_pool,
                         devices_per_host=args.devices_per_host,
                         inter_host_bw=args.inter_host_bw)
     reqs = [Request(class_id=i % cfg.num_classes, rid=i)
@@ -905,7 +1009,11 @@ def main():
           f"{args.steps} steps, model={cfg.name}, n_dev={server.n_dev}"
           + mesh_tag
           + (f", wire codec {args.codec}" if args.codec != "none" else "")
-          + (", ring overlap" if args.overlap == "ring" else ""))
+          + (", ring overlap" if args.overlap == "ring" else "")
+          + (f", paging on (pool {server.expert_pool.num_experts}->"
+             f"{server.expert_pool.num_wire_experts} experts, budget "
+             f"{paging_lib.paging_of(server.dcfg).budget_bytes} B/dev)"
+             if server.expert_pool is not None else ""))
     print(f"step plan: {splan.num_variants} compiled variants for "
           f"{splan.num_steps} steps "
           f"({[len(splan.steps_of_variant(v)) for v in range(splan.num_variants)]} "

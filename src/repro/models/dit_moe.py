@@ -20,6 +20,7 @@ from typing import Any, Dict, Optional, Tuple
 import jax
 import jax.numpy as jnp
 
+from repro.common import compat
 from repro.common.config import ModelConfig
 from repro.core import plan as plan_lib
 from repro.core import staleness as stale_lib
@@ -97,7 +98,8 @@ def dit_forward(params, x, t, y, cfg: ModelConfig, dcfg: DiceConfig,
                 patch_fresh=None,
                 patch_compose: bool = False,
                 reduce_axes=None,
-                hop_schedule=None):
+                hop_schedule=None,
+                expert_pool=None):
     """Velocity prediction.
 
     x: (B, T, C_in) latents; t: (B,) times; y: (B,) class ids
@@ -127,6 +129,18 @@ def dit_forward(params, x, t, y, cfg: ModelConfig, dcfg: DiceConfig,
 
     ``reduce_axes`` / ``hop_schedule`` thread through to the MoE layers
     (see :func:`repro.core.moe.moe_forward`).
+
+    ``expert_pool`` (DESIGN.md Sec. 15): the host-RAM
+    :class:`repro.core.paging.ExpertPool` backing a plan whose actions
+    carry a PagingSpec.  Each layer's routed-expert shards are fetched
+    from the pool INSIDE the trace — layer ``i`` issues layer
+    ``i + depth``'s fetch before its own compute (the plan's
+    ``prefetch`` field), and the fetch has no data dependency on the
+    surrounding layers, so XLA overlaps the transfer with the ring hops
+    already in flight.  The params tree must be stripped of its
+    ``experts_*`` stacks (:func:`repro.core.paging.strip_expert_params`)
+    and the MoE runs with the pool's padded wire-expert count, lifting
+    the ``E % n_dev`` restriction.
     Returns (v, new_states, new_patch_states, aux dict).
     """
     if plan is None:
@@ -134,6 +148,18 @@ def dit_forward(params, x, t, y, cfg: ModelConfig, dcfg: DiceConfig,
             raise TypeError("dit_forward needs either plan= or step_idx=")
         plan = plan_lib.plan_for_step(dcfg, cfg.num_layers, step_idx,
                                       experts_per_token=cfg.experts_per_token)
+    paged = any(a.paging is not None for a in plan.actions)
+    if paged and expert_pool is None:
+        raise ValueError("the plan carries expert paging but no expert_pool "
+                         "was provided (pass repro.core.paging.ExpertPool, "
+                         "or normalize the config with normalize_paging)")
+    if paged and ep_axis is None:
+        raise ValueError("expert paging needs a live ep mesh axis")
+    fetched: Dict[int, Dict[str, Any]] = {}
+
+    def _ensure_fetched(j: int):
+        if j not in fetched:
+            fetched[j] = expert_pool.device_fetch(j, ep_axis=ep_axis)
     B, T, _ = x.shape
     d = cfg.d_model
     pos_embed = params["pos_embed"]
@@ -158,6 +184,14 @@ def dit_forward(params, x, t, y, cfg: ModelConfig, dcfg: DiceConfig,
     served_counts = []
 
     for i, blk in enumerate(params["blocks"]):
+        if paged and plan.actions[i].paging is not None:
+            # issue this layer's fetch (a no-op past layer 0: the previous
+            # layer already prefetched it) and the depth-ahead prefetch —
+            # BEFORE this layer's compute, so the transfer rides behind
+            # the attention + ring hops about to be traced
+            _ensure_fetched(i)
+            if plan.actions[i].prefetch is not None:
+                _ensure_fetched(plan.actions[i].prefetch)
         mod = jax.nn.silu(c) @ blk["adaln"]         # (B, 6d)
         s1, sc1, g1, s2, sc2, g2 = jnp.split(mod, 6, axis=-1)
 
@@ -197,11 +231,19 @@ def dit_forward(params, x, t, y, cfg: ModelConfig, dcfg: DiceConfig,
                 # shards over patch) -> local flat rows, batch-major like
                 # ``flat`` above
                 st = stale_lib.flatten_state(st)
+            moe_p = blk["moe"]
+            wire_E = None
+            if paged and plan.actions[i].paging is not None:
+                shards = fetched.pop(i)
+                moe_p = dict(moe_p, **shards)
+                wire_E = (shards["experts_gate"].shape[0]
+                          * compat.axis_size(ep_axis))
             moe_out, new_st, aux = stale_lib.apply_layer_action(
-                blk["moe"], flat, cfg, plan.actions[i], st,
+                moe_p, flat, cfg, plan.actions[i], st,
                 key=key, ep_axis=ep_axis, use_pallas=use_pallas,
                 slot_fresh=slot_fresh, consume_mask=consume_mask,
-                reduce_axes=reduce_axes, hop_schedule=hop_schedule)
+                reduce_axes=reduce_axes, hop_schedule=hop_schedule,
+                num_wire_experts=wire_E)
             if patch_axis is not None:
                 new_st = stale_lib.unflatten_state(new_st, B, T)
         new_states[i] = new_st
@@ -246,7 +288,6 @@ def dit_forward(params, x, t, y, cfg: ModelConfig, dcfg: DiceConfig,
         # the GLOBAL persistent footprint while dispatch_bytes stays the
         # PER-DEVICE wire payload — the quantity the paper's all-to-all
         # claim is about (DESIGN.md §10)
-        from repro.common import compat
         aux_out["lb_loss"] = jax.lax.pmean(aux_out["lb_loss"], mean_axes)
         aux_out["dropped_frac"] = jax.lax.pmean(aux_out["dropped_frac"],
                                                 mean_axes)

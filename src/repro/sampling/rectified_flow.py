@@ -25,6 +25,7 @@ from jax.sharding import PartitionSpec as P
 from repro.common import compat
 from repro.common import sharding as shard_lib
 from repro.common.config import ModelConfig
+from repro.core import paging as paging_lib
 from repro.core import plan as plan_lib
 from repro.core import staleness as stale_lib
 from repro.core.patch_parallel import PatchParallelState
@@ -70,7 +71,7 @@ def _euler_step(params, cfg: ModelConfig, dcfg: DiceConfig,
                 t, key, *, plan, dt, guidance, patch_parallel_ndev=0,
                 ep_axis=None, slot_fresh=None, consume_mask=None,
                 patch_axis=None, patch_fresh=None, patch_compose=False,
-                reduce_axes=None, hop_schedule=None):
+                reduce_axes=None, hop_schedule=None, expert_pool=None):
     """One CFG-guided Euler step — the schedule-agnostic core both the
     single-device and the mesh-native (shard_map-ped) step functions trace.
     Inside shard_map every operand is the per-device shard, ``ep_axis``
@@ -87,7 +88,7 @@ def _euler_step(params, cfg: ModelConfig, dcfg: DiceConfig,
         slot_fresh=slot_fresh, consume_mask=consume_mask,
         patch_axis=patch_axis, patch_fresh=patch_fresh,
         patch_compose=patch_compose, reduce_axes=reduce_axes,
-        hop_schedule=hop_schedule)
+        hop_schedule=hop_schedule, expert_pool=expert_pool)
     if guidance != 1.0:
         v_u, nsu, npsu, _ = dit_forward(
             params, x, t, null, cfg, dcfg, states_u, plan=plan,
@@ -96,7 +97,7 @@ def _euler_step(params, cfg: ModelConfig, dcfg: DiceConfig,
             key=key, slot_fresh=slot_fresh, consume_mask=consume_mask,
             patch_axis=patch_axis, patch_fresh=patch_fresh,
             patch_compose=patch_compose, reduce_axes=reduce_axes,
-            hop_schedule=hop_schedule)
+            hop_schedule=hop_schedule, expert_pool=expert_pool)
         v = v_u + guidance * (v_c - v_u)
     else:
         v, nsu, npsu = v_c, states_u, patch_states_u
@@ -109,7 +110,8 @@ def make_rf_step(params, cfg: ModelConfig, dcfg: DiceConfig, *,
                  ep_axis: Optional[str] = None,
                  mesh: Optional[jax.sharding.Mesh] = None,
                  patch_compose: bool = False,
-                 hop_schedule=None):
+                 hop_schedule=None,
+                 expert_pool=None):
     """The reusable single-Euler-step callable behind both :func:`rf_sample`
     and the continuous-batching serving engine (DESIGN.md Sec. 9).
 
@@ -147,7 +149,8 @@ def make_rf_step(params, cfg: ModelConfig, dcfg: DiceConfig, *,
         return _make_mesh_rf_step(
             params, cfg, dcfg, dt=dt, guidance=guidance,
             patch_parallel_ndev=patch_parallel_ndev, mesh=mesh,
-            ep_axis=ep_axis or "ep", hop_schedule=hop_schedule)
+            ep_axis=ep_axis or "ep", hop_schedule=hop_schedule,
+            expert_pool=expert_pool)
 
     @partial(jax.jit, static_argnames=("plan", "slotted"))
     def rf_step(x, classes, states, states_u, patch_states, patch_states_u,
@@ -168,7 +171,7 @@ def make_rf_step(params, cfg: ModelConfig, dcfg: DiceConfig, *,
 def _make_mesh_rf_step(params, cfg: ModelConfig, dcfg: DiceConfig, *,
                        dt: float, guidance: float, patch_parallel_ndev: int,
                        mesh: jax.sharding.Mesh, ep_axis: str,
-                       hop_schedule=None):
+                       hop_schedule=None, expert_pool=None):
     """Mesh-native lowering of :func:`make_rf_step` (DESIGN.md §10/§14).
 
     One ``shard_map`` per plan variant over the hierarchical
@@ -193,9 +196,12 @@ def _make_mesh_rf_step(params, cfg: ModelConfig, dcfg: DiceConfig, *,
                          f"hierarchical dp/ep/patch axes")
     live_ep = ep_axis if ep_axis in mesh.axis_names else None
     n_ep = mesh.shape[ep_axis] if live_ep else 1
-    if live_ep and cfg.num_experts % n_ep:
+    paged = paging_lib.paging_of(dcfg) is not None and n_ep > 1
+    if live_ep and not paged and cfg.num_experts % n_ep:
         raise ValueError(f"num_experts={cfg.num_experts} must divide the "
-                         f"{n_ep}-way {ep_axis!r} axis")
+                         f"{n_ep}-way {ep_axis!r} axis — or enable expert "
+                         f"paging (DiceConfig.paging), whose pool pads the "
+                         f"wire so any expert count serves on any mesh")
     n_patch = mesh.shape[patch_axis] if patch_axis else 1
     if patch_axis and cfg.patch_tokens % n_patch:
         raise ValueError(f"patch_tokens={cfg.patch_tokens} must divide "
@@ -218,6 +224,17 @@ def _make_mesh_rf_step(params, cfg: ModelConfig, dcfg: DiceConfig, *,
         # placed experts and every device carries the replica stack
         from repro.core import placement as placement_lib
         params = placement_lib.placed_params(params, placements)
+    if paged:
+        # the pool owns the routed-expert stacks (host RAM); the device
+        # tree keeps only the always-resident remainder — router, shared
+        # experts, attention, embeddings (DESIGN.md Sec. 15)
+        if expert_pool is None and paging_lib.has_expert_leaves(params):
+            expert_pool = paging_lib.pool_from_params(params, n_dev=n_ep)
+        if expert_pool is None:
+            raise ValueError("paging is planned but params carry no expert "
+                             "leaves and no expert_pool was provided")
+        params = paging_lib.strip_expert_params(params)
+    pool = expert_pool if paged else None
     params = shard_lib.ep_shard_params(params, mesh, ep_axis=live_ep)
     pspecs = shard_lib.ep_param_specs(params, ep_axis=live_ep)
 
@@ -271,7 +288,8 @@ def _make_mesh_rf_step(params, cfg: ModelConfig, dcfg: DiceConfig, *,
                 t_l, key_l, plan=plan, dt=dt, guidance=guidance,
                 ep_axis=live_ep, slot_fresh=sf, consume_mask=cm,
                 patch_axis=patch_axis, patch_fresh=pf_l,
-                reduce_axes=reduce_axes, hop_schedule=hop_schedule)
+                reduce_axes=reduce_axes, hop_schedule=hop_schedule,
+                expert_pool=pool)
             aux = dict(aux, buffer_bytes=jnp.asarray(aux["buffer_bytes"]))
             return x_new, ns, nsu, nps, npsu, aux
 
@@ -290,7 +308,8 @@ def make_sample_step(params, cfg: ModelConfig, dcfg: DiceConfig, classes, *,
                      ep_axis: Optional[str] = None,
                      mesh: Optional[jax.sharding.Mesh] = None,
                      patch_compose: bool = False,
-                     hop_schedule=None):
+                     hop_schedule=None,
+                     expert_pool=None):
     """One jitted Euler step with ``classes`` bound — the whole-loop
     sampler's view of :func:`make_rf_step`.
 
@@ -306,7 +325,8 @@ def make_sample_step(params, cfg: ModelConfig, dcfg: DiceConfig, classes, *,
                            patch_parallel_ndev=patch_parallel_ndev,
                            ep_axis=ep_axis, mesh=mesh,
                            patch_compose=patch_compose,
-                           hop_schedule=hop_schedule)
+                           hop_schedule=hop_schedule,
+                           expert_pool=expert_pool)
 
     def one_step(x, states, states_u, patch_states, patch_states_u, t, key,
                  *, plan, patch_fresh=None):
@@ -326,6 +346,7 @@ def rf_sample(params, cfg: ModelConfig, dcfg: DiceConfig, *,
               mesh: Optional[jax.sharding.Mesh] = None,
               patch_compose: bool = False,
               hop_schedule=None,
+              expert_pool=None,
               collect_stats: bool = True):
     """Generate latents (B, T, C) for ``classes`` under a schedule.
 
@@ -358,6 +379,14 @@ def rf_sample(params, cfg: ModelConfig, dcfg: DiceConfig, *,
     # a placement-bearing config must fall back to the identity layout to
     # stay bit-identical with its mesh-less baseline (DESIGN.md Sec. 13)
     dcfg = plan_lib.normalize_placement(dcfg, n_ep)
+    # and paging: mesh-less runs keep their expert stacks in the params
+    # tree and plan exactly like fully-resident configs (DESIGN.md Sec. 15)
+    dcfg = plan_lib.normalize_paging(dcfg, n_ep)
+    if paging_lib.paging_of(dcfg) is not None:
+        if expert_pool is None:
+            expert_pool = paging_lib.pool_from_params(params, n_dev=n_ep)
+        dcfg = paging_lib.resolve_budget(dcfg, expert_pool)
+        expert_pool.reset_stats()
     x = jax.random.normal(key, (B, cfg.patch_tokens, cfg.in_channels))
     if mesh is not None:
         x = jax.device_put(x, jax.sharding.NamedSharding(
@@ -367,6 +396,10 @@ def rf_sample(params, cfg: ModelConfig, dcfg: DiceConfig, *,
     splan = plan_lib.compile_step_plans(
         dcfg, cfg.num_layers, num_steps,
         experts_per_token=cfg.experts_per_token)
+    if expert_pool is not None and paging_lib.paging_of(dcfg) is not None:
+        # every planned residency window must fit the HBM budget — fail
+        # here, before compile, not by overflowing device memory mid-run
+        expert_pool.validate_plan(splan)
     # plan-aware init: allocate exactly the buffers the run will write, so
     # the state pytree signature is constant and the jit cache holds
     # exactly one entry per plan variant (sharded over ep under a mesh).
@@ -410,7 +443,8 @@ def rf_sample(params, cfg: ModelConfig, dcfg: DiceConfig, *,
                                 patch_parallel_ndev=patch_parallel_ndev,
                                 ep_axis=ep, mesh=mesh,
                                 patch_compose=patch_compose,
-                                hop_schedule=hop_schedule)
+                                hop_schedule=hop_schedule,
+                                expert_pool=expert_pool)
 
     for s in range(num_steps):
         key, k = jax.random.split(key)
@@ -432,4 +466,13 @@ def rf_sample(params, cfg: ModelConfig, dcfg: DiceConfig, *,
             stats["hop_bytes"].append(float(aux["hop_bytes"]))
     stats["num_plan_variants"] = splan.num_variants
     stats["jit_cache_size"] = int(one_step._cache_size())
+    pag = paging_lib.paging_of(dcfg)
+    if pag is not None and expert_pool is not None:
+        # block until every enqueued step has executed so the ledger has
+        # seen the full fetch sequence before we read it
+        jax.block_until_ready(x)
+        stats["paged_transfers"] = expert_pool.transfers
+        stats["paged_bytes_in"] = expert_pool.bytes_transferred
+        stats["peak_resident_expert_bytes"] = expert_pool.peak_resident_bytes
+        stats["expert_hbm_budget"] = pag.budget_bytes
     return x, stats

@@ -1,0 +1,240 @@
+"""Checkpoint-restore correctness (ISSUE 8 satellites).
+
+The chunked format 2 (bounded msgpack bins, so multi-GiB expert stacks
+never hit msgpack's 2**32-1 single-bin ceiling), the validated loader
+(treedef / leaf count / dtype / shape mismatches raise instead of
+silently casting or truncating), writable restored arrays (the
+``np.frombuffer`` read-only views never reach donation paths), read-back
+of the legacy one-bin-per-leaf format 1, and the streamed
+``load_checkpoint_leaves`` restore whose peak materialized bytes stay
+below the full tree size.
+"""
+import gc
+import os
+import tempfile
+import weakref
+
+import jax
+import jax.numpy as jnp
+import msgpack
+import numpy as np
+import pytest
+
+from repro.checkpoint import (load_checkpoint, load_checkpoint_leaves,
+                              read_checkpoint_manifest, save_checkpoint)
+
+
+def _tmp(d):
+    return os.path.join(d, "ckpt.msgpack")
+
+
+def _tree():
+    return {"a": jnp.arange(12, dtype=jnp.float32).reshape(3, 4),
+            "b": {"c": jnp.ones((2,), jnp.bfloat16),
+                  "d": jnp.arange(5, dtype=jnp.int32)}}
+
+
+# ---------------------------------------------------------------------------
+# chunked format 2
+# ---------------------------------------------------------------------------
+def test_multichunk_leaf_roundtrip():
+    # 400-byte leaf through 64-byte chunks: 7 bins, one partial — the
+    # shape of the >2 GiB expert-stack problem at test scale
+    tree = {"big": jnp.arange(100, dtype=jnp.float32),
+            "small": jnp.ones((3,), jnp.float32)}
+    with tempfile.TemporaryDirectory() as d:
+        path = _tmp(d)
+        save_checkpoint(path, tree, step=3, chunk_bytes=64)
+        man = read_checkpoint_manifest(path)
+        assert man["format"] == 2
+        assert man["step"] == 3
+        assert man["chunk_bytes"] == 64
+        assert [m["chunks"] for m in man["leaves"]] == [7, 1]
+        out = load_checkpoint(path, tree)
+    np.testing.assert_array_equal(np.asarray(out["big"]),
+                                  np.asarray(tree["big"]))
+    np.testing.assert_array_equal(np.asarray(out["small"]),
+                                  np.asarray(tree["small"]))
+
+
+def test_chunk_boundary_exact():
+    # nbytes an exact multiple of chunk_bytes: no partial tail bin
+    tree = {"x": jnp.arange(32, dtype=jnp.float32)}     # 128 B
+    with tempfile.TemporaryDirectory() as d:
+        path = _tmp(d)
+        save_checkpoint(path, tree, chunk_bytes=64)
+        man = read_checkpoint_manifest(path)
+        assert man["leaves"][0]["chunks"] == 2
+        out = load_checkpoint(path, tree)
+    np.testing.assert_array_equal(np.asarray(out["x"]), np.asarray(tree["x"]))
+
+
+def test_zero_size_leaf_roundtrip():
+    tree = {"empty": jnp.zeros((0, 4), jnp.float32),
+            "x": jnp.ones((2,), jnp.float32)}
+    with tempfile.TemporaryDirectory() as d:
+        path = _tmp(d)
+        save_checkpoint(path, tree)
+        out = load_checkpoint(path, tree)
+    assert out["empty"].shape == (0, 4)
+    np.testing.assert_array_equal(np.asarray(out["x"]), np.asarray(tree["x"]))
+
+
+def test_bf16_dtype_preserved():
+    tree = _tree()
+    with tempfile.TemporaryDirectory() as d:
+        path = _tmp(d)
+        save_checkpoint(path, tree)
+        out = load_checkpoint(path, tree)
+    assert out["b"]["c"].dtype == jnp.bfloat16
+
+
+# ---------------------------------------------------------------------------
+# validation: mismatches raise, nothing silently casts
+# ---------------------------------------------------------------------------
+def test_wrong_treedef_raises():
+    tree = _tree()
+    like = {"a": tree["a"], "wrong_key": tree["b"]}
+    with tempfile.TemporaryDirectory() as d:
+        path = _tmp(d)
+        save_checkpoint(path, tree)
+        with pytest.raises(ValueError, match="treedef"):
+            load_checkpoint(path, like)
+
+
+def test_wrong_leaf_count_raises():
+    tree = _tree()
+    like = {"a": tree["a"], "b": {"c": tree["b"]["c"]}}   # one leaf short
+    with tempfile.TemporaryDirectory() as d:
+        path = _tmp(d)
+        save_checkpoint(path, tree)
+        with pytest.raises(ValueError):
+            load_checkpoint(path, like)
+
+
+def test_wrong_dtype_raises_no_silent_cast():
+    tree = _tree()
+    like = jax.tree_util.tree_map(lambda a: a, tree)
+    like["a"] = like["a"].astype(jnp.float16)
+    with tempfile.TemporaryDirectory() as d:
+        path = _tmp(d)
+        save_checkpoint(path, tree)
+        with pytest.raises(ValueError, match="no silent cast"):
+            load_checkpoint(path, like)
+
+
+def test_wrong_shape_raises():
+    tree = _tree()
+    like = jax.tree_util.tree_map(lambda a: a, tree)
+    like["a"] = jnp.zeros((4, 3), jnp.float32)            # transposed
+    with tempfile.TemporaryDirectory() as d:
+        path = _tmp(d)
+        save_checkpoint(path, tree)
+        with pytest.raises(ValueError, match="shape"):
+            load_checkpoint(path, like)
+
+
+def test_truncated_leaf_raises():
+    # a manifest that promises more bytes than its bins deliver must fail
+    # loudly, never hand back a half-filled array
+    with tempfile.TemporaryDirectory() as d:
+        path = _tmp(d)
+        manifest = {"format": 2, "step": 0, "treedef": "PyTreeDef({'x': *})",
+                    "chunk_bytes": 64,
+                    "leaves": [{"dtype": "float32", "shape": [8],
+                                "chunks": 1}]}
+        with open(path, "wb") as f:
+            f.write(msgpack.packb(manifest))
+            f.write(msgpack.packb(b"\x00" * 16))           # 16 of 32 bytes
+        with pytest.raises(ValueError, match="truncated"):
+            list(load_checkpoint_leaves(path))
+
+
+# ---------------------------------------------------------------------------
+# legacy format 1 (no "format" key, one bin per leaf) stays readable
+# ---------------------------------------------------------------------------
+def _write_format1(path, tree, *, step=0):
+    """The pre-chunking writer, byte-for-byte."""
+    leaves, treedef = jax.tree_util.tree_flatten(tree)
+    manifest = {
+        "step": step,
+        "treedef": str(treedef),
+        "leaves": [{"dtype": str(np.asarray(l).dtype),
+                    "shape": list(np.asarray(l).shape)} for l in leaves],
+    }
+    with open(path, "wb") as f:
+        f.write(msgpack.packb(manifest))
+        for l in leaves:
+            f.write(msgpack.packb(np.asarray(jax.device_get(l)).tobytes()))
+
+
+def test_old_format_readback():
+    tree = _tree()
+    with tempfile.TemporaryDirectory() as d:
+        path = _tmp(d)
+        _write_format1(path, tree, step=11)
+        man = read_checkpoint_manifest(path)
+        assert man["format"] == 1
+        assert man["step"] == 11
+        out = load_checkpoint(path, tree)
+        streamed = list(load_checkpoint_leaves(path, tree))
+    np.testing.assert_array_equal(np.asarray(out["a"]), np.asarray(tree["a"]))
+    assert out["b"]["c"].dtype == jnp.bfloat16
+    leaves, _ = jax.tree_util.tree_flatten(tree)
+    assert len(streamed) == len(leaves)
+    for got, ref in zip(streamed, leaves):
+        np.testing.assert_array_equal(got, np.asarray(ref))
+
+
+def test_old_format_validation_still_applies():
+    tree = _tree()
+    like = jax.tree_util.tree_map(lambda a: a, tree)
+    like["a"] = like["a"].astype(jnp.float16)
+    with tempfile.TemporaryDirectory() as d:
+        path = _tmp(d)
+        _write_format1(path, tree)
+        with pytest.raises(ValueError, match="no silent cast"):
+            load_checkpoint(path, like)
+
+
+# ---------------------------------------------------------------------------
+# writable restores + streamed (bounded-memory) restore
+# ---------------------------------------------------------------------------
+def test_restored_leaves_are_writable():
+    # np.frombuffer over a msgpack bin is read-only; restored arrays must
+    # be fresh copies or donation paths blow up on them
+    tree = {"x": jnp.arange(16, dtype=jnp.float32)}
+    with tempfile.TemporaryDirectory() as d:
+        path = _tmp(d)
+        save_checkpoint(path, tree)
+        fresh = list(load_checkpoint_leaves(path, tree))
+        _write_format1(path, tree)
+        legacy = list(load_checkpoint_leaves(path, tree))
+    for arr in fresh + legacy:
+        assert arr.flags.writeable
+        arr[0] = -1.0                                      # must not raise
+
+
+def test_streamed_restore_bounded_memory():
+    # eight 16 KiB leaves: the generator must never hold more than one
+    # alive at a time, so peak materialized bytes stay well under the
+    # 128 KiB full-tree size (the restore-only streaming contract the
+    # expert-paging pool relies on, DESIGN.md Sec. 15)
+    tree = {f"l{i}": jnp.full((64, 64), float(i), jnp.float32)
+            for i in range(8)}
+    leaves, _ = jax.tree_util.tree_flatten(tree)
+    total = sum(np.asarray(l).nbytes for l in leaves)
+    with tempfile.TemporaryDirectory() as d:
+        path = _tmp(d)
+        save_checkpoint(path, tree)
+        refs, peak = [], 0
+        gen = load_checkpoint_leaves(path, tree)
+        for i, arr in enumerate(gen):
+            np.testing.assert_array_equal(arr, np.asarray(leaves[i]))
+            refs.append(weakref.ref(arr))
+            del arr
+            gc.collect()
+            alive = sum(r().nbytes for r in refs if r() is not None)
+            peak = max(peak, alive)
+    assert peak < total, (peak, total)
+    assert all(r() is None for r in refs)
