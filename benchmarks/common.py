@@ -175,15 +175,36 @@ def csv_row(name: str, us: float, derived: str):
     print(f"{name},{us:.1f},{derived}", flush=True)
 
 
+BENCH_SCHEMA_VERSION = 1
+
+
+def bench_env(mesh=None) -> dict:
+    """The provenance stamp every BENCH_*.json carries under ``_env``:
+    schema version, jax version, backend, device count, and the mesh
+    shape of the run — so a committed artifact can be validated
+    (``benchmarks/run.py --check``) and its numbers attributed to the
+    environment that produced them."""
+    return {
+        "schema_version": BENCH_SCHEMA_VERSION,
+        "jax": jax.__version__,
+        "backend": jax.default_backend(),
+        "device_count": jax.device_count(),
+        "mesh": mesh,
+    }
+
+
 def write_bench_json(name: str, payload) -> str:
     """Persist a benchmark's result dict as ``BENCH_<name>.json`` at the
     repo root — the machine-readable artifact next to the CSV rows, so
     drivers (CI, the paper-claims checker) diff structured numbers
-    instead of scraping stdout.  Returns the path written."""
+    instead of scraping stdout.  Dict payloads are stamped with the
+    ``_env`` provenance block.  Returns the path written."""
     import json
 
     root = os.path.abspath(os.path.join(os.path.dirname(__file__), ".."))
     path = os.path.join(root, f"BENCH_{name}.json")
+    if isinstance(payload, dict) and "_env" not in payload:
+        payload = {**payload, "_env": bench_env(payload.get("mesh"))}
 
     def default(o):
         if isinstance(o, (np.integer,)):

@@ -37,8 +37,9 @@ from repro.core import placement as placement_lib
 from repro.core.schedules import DiceConfig
 from repro.launch.serve import (DiceServer, Request, SCHEDULES,
                                 modeled_step_latency, serve_continuous,
-                                serve_queue)
+                                serve_queue, write_metrics)
 from repro.models.dit_moe import init_dit
+from repro.obs import ObsConfig
 
 
 def poisson_arrivals(n: int, rate_per_step: float, seed: int) -> List[float]:
@@ -93,7 +94,8 @@ def run(*, schedule: str = "dice", requests: int = 32, max_batch: int = 8,
         overlap: str = "blocking", skew: str = "uniform",
         placement: str = "identity", replicate_top: int = 0,
         paging: str = "off", expert_hbm_budget: int = 0,
-        paging_depth: int = 1) -> dict:
+        paging_depth: int = 1, obs: bool = False,
+        trace_out: str = None, metrics_out: str = None) -> dict:
     if os.environ.get("BENCH_SMOKE") == "1" and not smoke:
         # benchmarks.run --fast sets BENCH_SMOKE: shrink like the other tables
         smoke = True
@@ -129,9 +131,11 @@ def run(*, schedule: str = "dice", requests: int = 32, max_batch: int = 8,
         pspec = PagingSpec(
             budget_bytes=None if expert_hbm_budget < 0 else expert_hbm_budget,
             depth=paging_depth)
+    obs_on = bool(obs or trace_out or metrics_out)
     server = DiceServer(cfg, dcfg, params=params, mesh=mesh,
                         compress=CompressConfig(codec=codec),
-                        overlap=overlap, paging=pspec)
+                        overlap=overlap, paging=pspec,
+                        obs=ObsConfig(enabled=obs_on))
     reqs = [Request(class_id=i % cfg.num_classes, rid=i)
             for i in range(requests)]
     arrivals = poisson_arrivals(requests, rate, seed)
@@ -258,6 +262,17 @@ def run(*, schedule: str = "dice", requests: int = 32, max_batch: int = 8,
            if "peak_resident_expert_bytes" in cstats else {}),
         **place_res,
     }
+    # observability exports (DESIGN.md Sec. 16): the server registry has
+    # folded in the continuous AND fifo passes; the tracer holds plan/
+    # compile/step/admission host phases of both
+    if trace_out and server.tracer is not None:
+        server.tracer.write(trace_out)
+        print(f"# wrote step trace to {trace_out} "
+              f"({len(server.tracer.events)} events)", flush=True)
+    if metrics_out:
+        write_metrics(server.metrics, metrics_out)
+        print(f"# wrote metrics to {metrics_out}", flush=True)
+
     tag = f"serve_throughput/{schedule}" \
           + (f"+{codec}" if codec != "none" else "") \
           + (f"+{overlap}" if overlap != "blocking" else "") \
@@ -333,6 +348,16 @@ def main():
                          "unbounded)")
     ap.add_argument("--paging-depth", type=int, default=1,
                     help="prefetch distance in MoE layers")
+    ap.add_argument("--obs", action="store_true",
+                    help="observability plane (DESIGN.md Sec. 16): in-graph "
+                         "staleness telemetry, measured per-tick walltimes, "
+                         "host-phase tracing; outputs stay bit-identical")
+    ap.add_argument("--trace-out", default=None,
+                    help="write a Chrome-trace-event JSON of host phases "
+                         "(implies --obs)")
+    ap.add_argument("--metrics-out", default=None,
+                    help="write the metrics registry: Prometheus text, or "
+                         "a JSON snapshot for *.json paths (implies --obs)")
     args = ap.parse_args()
     if args.smoke:
         args.requests = min(args.requests, 12)
@@ -346,7 +371,8 @@ def main():
               codec=args.codec, overlap=args.overlap, skew=args.skew,
               placement=args.placement, replicate_top=args.replicate_top,
               paging=args.paging, expert_hbm_budget=args.expert_hbm_budget,
-              paging_depth=args.paging_depth)
+              paging_depth=args.paging_depth, obs=args.obs,
+              trace_out=args.trace_out, metrics_out=args.metrics_out)
     common.write_bench_json("serve_throughput", res)
     for k, v in res.items():
         print(f"  {k:28s} {v:.6g}" if isinstance(v, float)

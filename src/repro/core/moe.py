@@ -36,6 +36,8 @@ from repro.compress import codecs as codec_lib
 from repro.core import overlap as overlap_lib
 from repro.core.placement import Placement
 from repro.models.layers import dense_init
+from repro.obs import telemetry as obs_telemetry
+from repro.obs.telemetry import ObsConfig
 
 
 # ---------------------------------------------------------------------------
@@ -246,6 +248,13 @@ class MoEAux(NamedTuple):
     #                                placement histogram accumulates, so
     #                                dropped tokens never inflate a hot
     #                                expert's score (Sec. 13)
+    telemetry: Optional[jnp.ndarray] = None  # (obs.NUM_FIELDS,) f32 in-graph
+    #                                staleness telemetry (DESIGN.md Sec. 16):
+    #                                [age, residual energy dispatch/combine,
+    #                                mask rate, dropped frac, codec error].
+    #                                None unless an enabled ObsConfig is
+    #                                passed, so obs=off graphs are
+    #                                byte-identical to pre-obs builds
 
 
 def moe_forward(p, x, cfg: ModelConfig, *,
@@ -262,7 +271,8 @@ def moe_forward(p, x, cfg: ModelConfig, *,
                 placement: Optional[Placement] = None,
                 reduce_axes=None,
                 hop_schedule=None,
-                num_wire_experts: Optional[int] = None):
+                num_wire_experts: Optional[int] = None,
+                obs: Optional[ObsConfig] = None):
     """MoE layer forward.  x: (T, d) flat tokens (per-device shard if EP).
 
     ``ep_axis``: mesh axis name for expert parallelism — call inside
@@ -471,6 +481,11 @@ def moe_forward(p, x, cfg: ModelConfig, *,
         y, pair_vals, pair_keep = combine(buf_out, plan, scores, T,
                                           h_cache=h_cache,
                                           fresh_mask=fresh_mask)
+    # fresh-kept pairs still hold the raw (pre-reconstruction) wire value
+    # here — the telemetry block below measures residual energy against
+    # the cache on exactly these values, before the codec overwrites them
+    pair_vals_fresh = pair_vals
+    recon = None
     if codec is not None and h_cache is not None:
         # ---- wire codec, combine direction: freshly transmitted pairs
         # arrive as residuals against the shared (token, rank) cache; the
@@ -517,6 +532,16 @@ def moe_forward(p, x, cfg: ModelConfig, *,
     itemsize = jnp.dtype(x.dtype).itemsize
     per_row = (codec.wire_bytes_per_row(d, itemsize)
                if codec is not None else d * itemsize)
+    # ---- in-graph staleness telemetry (DESIGN.md Sec. 16): fixed-shape,
+    # plan-variant-invariant, and None (not zeros) when obs is off so the
+    # traced graph is byte-identical to a build without the subsystem
+    telemetry = None
+    if obs is not None and obs.enabled:
+        telemetry = obs_telemetry.layer_telemetry(
+            x=x, x_wire=x_wire, dispatch_base=dispatch_base, codec=codec,
+            pair_vals=pair_vals_fresh, recon=recon, pair_keep=pair_keep,
+            fresh_mask=fresh_mask, h_cache=h_cache,
+            dropped_frac=dropped_frac)
     # ring accounting: same total wire volume as the all-to-alls, split
     # across 2*(n-1) collective-permutes of one (e_loc, C, d) chunk each
     ring = bool(overlap and n_dev > 1)
@@ -536,5 +561,6 @@ def moe_forward(p, x, cfg: ModelConfig, *,
                               if ring else 0),
         counts=counts,
         served_counts=served_counts,
+        telemetry=telemetry,
     )
     return y.astype(x.dtype), aux

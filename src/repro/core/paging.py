@@ -124,6 +124,10 @@ class ExpertPool:
         self._resident: Dict[int, list] = {}      # dev -> [layer, ...] window
         self._resident_window = 2                  # depth + 1, set per run
         self._peak_resident = 0
+        # optional repro.obs.trace.StepTracer: each io_callback fetch
+        # emits a span from the runtime thread it runs on (DESIGN.md
+        # Sec. 16); None keeps the fetch path free of any obs work
+        self.tracer = None
 
     # ------------------------------------------------------------------
     # geometry
@@ -202,12 +206,18 @@ class ExpertPool:
     # host-side fetch (the io_callback target)
     # ------------------------------------------------------------------
     def _fetch_host(self, layer: int, dev: np.ndarray):
+        tracer = self.tracer
+        t_fetch = tracer.now() if tracer is not None else 0.0
         j = int(dev)
         lo = j * self.e_loc
         hi = lo + self.e_loc
         shards = tuple(np.ascontiguousarray(self._layers[layer][k][lo:hi])
                        for k in EXPERT_LEAF_NAMES)
         nbytes = sum(s.nbytes for s in shards)
+        if tracer is not None:
+            tracer.complete("paged_fetch", t_fetch, cat="paging",
+                            args={"layer": layer, "dev": j,
+                                  "bytes": nbytes})
         with self._lock:
             self.transfers += 1
             self.bytes_transferred += nbytes

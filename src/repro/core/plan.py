@@ -258,6 +258,15 @@ class StepPlan:
         return max((a.staleness for a in self.actions), default=0)
 
     @property
+    def staleness_ages(self) -> Tuple[int, ...]:
+        """Per-layer consumption staleness in steps — the plan-static
+        ground truth the in-graph telemetry's ``staleness_age`` field
+        (DESIGN.md Sec. 16) must reproduce exactly, and the per-layer
+        vector a staleness-aware controller indexes when deciding where
+        to spend sync steps."""
+        return tuple(a.staleness for a in self.actions)
+
+    @property
     def num_buffers(self) -> int:
         """Max persistent per-layer buffers (the paper's memory claim)."""
         return max((a.num_buffers for a in self.actions), default=0)

@@ -33,6 +33,8 @@ from repro.core import conditional
 from repro.core.moe import MoEAux, moe_forward
 from repro.core.plan import LayerAction, plan_for_step
 from repro.core.schedules import DiceConfig, Schedule
+from repro.obs import telemetry as obs_telemetry
+from repro.obs.telemetry import ObsConfig
 
 
 @dataclass
@@ -211,7 +213,8 @@ def apply_layer_action(p, x, cfg: ModelConfig, action: LayerAction,
                        use_pallas: bool = False,
                        slot_fresh=None, consume_mask=None,
                        reduce_axes=None, hop_schedule=None,
-                       num_wire_experts: Optional[int] = None):
+                       num_wire_experts: Optional[int] = None,
+                       obs: Optional[ObsConfig] = None):
     """Execute one MoE layer under a planned :class:`LayerAction`.
 
     x: (T, d) flat tokens.  All schedule decisions (mode, mask, capacity,
@@ -266,7 +269,8 @@ def apply_layer_action(p, x, cfg: ModelConfig, action: LayerAction,
                            placement=action.placement,
                            reduce_axes=reduce_axes,
                            hop_schedule=hop_schedule,
-                           num_wire_experts=num_wire_experts)
+                           num_wire_experts=num_wire_experts,
+                           obs=obs)
 
     def next_base(payload, aux):
         """Residual base for the next wire transmission (Sec. 11): the
@@ -295,7 +299,7 @@ def apply_layer_action(p, x, cfg: ModelConfig, action: LayerAction,
                                              _cache_update_mask(None, aux.pair_keep))
             if want_cache else None,
             c_base=next_base(x, aux))
-        return y, new, aux
+        return y, new, obs_telemetry.stamp_age(aux, action, obs)
 
     if action.mode == "displaced":
         # experts process tokens dispatched at s-1; their combine lands at s+1,
@@ -307,7 +311,7 @@ def apply_layer_action(p, x, cfg: ModelConfig, action: LayerAction,
         out = select_out(y_new, state.y_buf)
         new = MoELayerState(y_buf=y_new, x_prev=x, h_cache=None,
                             c_base=next_base(inp, aux))
-        return out, new, aux
+        return out, new, obs_telemetry.stamp_age(aux, action, obs)
 
     if action.mode == "staggered":
         # supplement Sec. 8: sub-batches interleave so each half overlaps the
@@ -334,8 +338,10 @@ def apply_layer_action(p, x, cfg: ModelConfig, action: LayerAction,
                      hops=aux0.hops + aux1.hops,
                      hop_bytes=aux0.hop_bytes,
                      counts=aux0.counts + aux1.counts,
-                     served_counts=aux0.served_counts + aux1.served_counts)
-        return out, new, aux
+                     served_counts=aux0.served_counts + aux1.served_counts,
+                     telemetry=obs_telemetry.merge_staggered(
+                         aux0.telemetry, aux1.telemetry))
+        return out, new, obs_telemetry.stamp_age(aux, action, obs)
 
     # "interweaved": dispatch of x(s) completes within step s (overlapped
     # with the previous layer's expert compute); only the combine is deferred,
@@ -348,7 +354,7 @@ def apply_layer_action(p, x, cfg: ModelConfig, action: LayerAction,
                                          _cache_update_mask(mask, aux.pair_keep))
         if want_cache else None,
         c_base=next_base(x, aux))
-    return out, new, aux
+    return out, new, obs_telemetry.stamp_age(aux, action, obs)
 
 
 def moe_step(p, x, cfg: ModelConfig, dcfg: DiceConfig,

@@ -17,6 +17,7 @@ has no TPU).
 from __future__ import annotations
 
 import argparse
+import contextlib
 import dataclasses
 import time
 from dataclasses import dataclass
@@ -40,6 +41,8 @@ from repro.core import staleness as stale_lib
 from repro.core.schedules import DiceConfig
 from repro.core.conditional import comm_volume_fraction
 from repro.models.dit_moe import init_dit
+from repro.obs import MetricsRegistry, ObsConfig, StepTracer
+from repro.obs import telemetry as obs_fields
 from repro.sampling.rectified_flow import make_rf_step, rf_sample
 
 
@@ -270,6 +273,146 @@ def modeled_step_latency(cfg: ModelConfig, dcfg: DiceConfig, *,
 
 
 # ---------------------------------------------------------------------------
+# metrics publication (DESIGN.md Sec. 16): the registry is the single
+# source of truth; the summary dicts the serving loops return are VIEWS
+# computed from it.  The metric TYPE encodes the aggregation rule that
+# used to be hand-maintained in three per-loop accumulator dicts: flows
+# are counters (sum), per-batch sizes are max-gauges (every batch runs
+# the same compiled shapes, so max IS the per-batch value), per-batch
+# means are histogram means.
+# ---------------------------------------------------------------------------
+def _publish_batch(reg: MetricsRegistry, stats: dict, lab: dict) -> None:
+    """Publish one ``DiceServer.generate`` summary into a registry."""
+    reg.counter("dice_batches_total", "generate() batches executed",
+                lab).inc()
+    reg.histogram("dice_modeled_step_seconds",
+                  "modeled per-step latency on the target deployment",
+                  lab).observe(stats["modeled_step_s_tpu8"])
+    reg.counter("dice_modeled_seconds_total",
+                "modeled run seconds on the target deployment",
+                lab).inc(stats["modeled_total_s_tpu8"])
+    reg.gauge("dice_a2a_bytes_per_layer",
+              "modeled per-MoE-layer all-to-all payload",
+              lab).set_max(float(stats["a2a_bytes_per_layer"]))
+    reg.gauge("dice_buffer_bytes", "persistent staleness-buffer footprint",
+              lab).set_max(int(stats["buffer_bytes"]))
+    reg.counter("dice_dispatch_bytes_total", "dispatch payload moved",
+                lab).inc(float(sum(stats["dispatch_bytes_per_step"])))
+    reg.counter("dice_wire_bytes_total",
+                "codec-compressed bytes on the wire",
+                lab).inc(stats["wire_bytes_total"])
+    reg.counter("dice_raw_bytes_total", "lossless-equivalent payload bytes",
+                lab).inc(stats["raw_bytes_total"])
+    reg.gauge("dice_ring_hops", "ring collective-permutes per MoE layer",
+              lab).set_max(int(stats["ring_hops"]))
+    reg.counter("dice_hop_bytes_total", "per-device one-hop ring wire",
+                lab).inc(float(stats["hop_bytes_total"]))
+    reg.gauge("dice_overlap_efficiency",
+              "fraction of comm time the selected engine hides",
+              lab).set_max(float(stats["modeled_overlap_efficiency"]))
+    reg.gauge("dice_plan_variants", "compiled StepPlan variants",
+              lab).set_max(stats["num_plan_variants"])
+    reg.gauge("dice_jit_cache_size", "jit cache entries of the step fn",
+              lab).set_max(stats["jit_cache_size"])
+    if "paged_transfers" in stats:
+        reg.counter("dice_paged_transfers_total",
+                    "expert-pool host->device fetches",
+                    lab).inc(stats["paged_transfers"])
+        reg.counter("dice_paged_bytes_in_total",
+                    "expert-pool host->device bytes",
+                    lab).inc(stats["paged_bytes_in"])
+    if stats.get("peak_resident_expert_bytes") is not None:
+        reg.gauge("dice_peak_resident_expert_bytes",
+                  "realized per-device expert-residency peak",
+                  lab).set_max(stats["peak_resident_expert_bytes"])
+    if stats.get("expert_hbm_budget") is not None:
+        reg.gauge("dice_expert_hbm_budget_bytes",
+                  "per-device resident-expert byte budget",
+                  lab).set_max(stats["expert_hbm_budget"])
+
+
+def _publish_telemetry_step(reg: MetricsRegistry, tel, lab: dict) -> None:
+    """Append one step's (num_layers, NUM_FIELDS) in-graph telemetry block
+    to the per-layer series the closed-loop controller reads (Sec. 16)."""
+    tel = np.asarray(tel)
+    per_layer = {"dice_staleness_age": obs_fields.AGE,
+                 "dice_mask_rate": obs_fields.MASK_RATE,
+                 "dice_dropped_frac": obs_fields.DROP_FRAC,
+                 "dice_codec_error": obs_fields.CODEC_ERR}
+    for layer in range(tel.shape[0]):
+        ll = {**lab, "layer": f"{layer:02d}"}
+        reg.series("dice_residual_energy",
+                   "relative staleness-residual energy per layer/step",
+                   {**ll, "path": "dispatch"}).append(
+                       tel[layer, obs_fields.RES_DISPATCH])
+        reg.series("dice_residual_energy", "",
+                   {**ll, "path": "combine"}).append(
+                       tel[layer, obs_fields.RES_COMBINE])
+        for name, idx in per_layer.items():
+            reg.series(name, "", ll).append(tel[layer, idx])
+
+
+def _publish_obs(reg: MetricsRegistry, stats: dict, lab: dict) -> None:
+    """Publish the MEASURED observability extras an obs-enabled
+    ``rf_sample`` carries: per-step walltimes (block_until_ready-timed),
+    per-variant trace+compile seconds, and the in-graph telemetry."""
+    for w in stats.get("step_wall_s", ()):
+        reg.histogram("dice_step_wall_seconds",
+                      "measured wall seconds per diffusion step",
+                      lab).observe(w)
+    for v, sec in stats.get("compile_s", {}).items():
+        reg.gauge("dice_compile_seconds",
+                  "trace+compile seconds of one plan variant",
+                  {**lab, "variant": str(v)}).set(sec)
+    for tel in stats.get("telemetry", ()):
+        _publish_telemetry_step(reg, tel, lab)
+
+
+def _registry_view(reg: MetricsRegistry, lab: dict) -> dict:
+    """The ``serve_queue`` summary dict, computed FROM the registry —
+    same keys the hand-rolled ``stats_acc`` used to maintain."""
+    view = {
+        "batches": int(reg.value("dice_batches_total", lab)),
+        "padded": int(reg.value("dice_padded_requests_total", lab)),
+        "modeled_step_s_tpu8": reg.histogram("dice_modeled_step_seconds",
+                                             labels=lab).mean,
+        "modeled_total_s_tpu8": reg.value("dice_modeled_seconds_total", lab),
+        "a2a_bytes_per_layer": reg.value("dice_a2a_bytes_per_layer", lab),
+        "buffer_bytes": int(reg.value("dice_buffer_bytes", lab)),
+        "dispatch_bytes_total": reg.value("dice_dispatch_bytes_total", lab),
+        "wire_bytes_total": reg.value("dice_wire_bytes_total", lab),
+        "raw_bytes_total": reg.value("dice_raw_bytes_total", lab),
+        "ring_hops": int(reg.value("dice_ring_hops", lab)),
+        "hop_bytes_total": reg.value("dice_hop_bytes_total", lab),
+        "modeled_overlap_efficiency": reg.value("dice_overlap_efficiency",
+                                                lab),
+        "num_plan_variants": int(reg.value("dice_plan_variants", lab)),
+        "jit_cache_size": int(reg.value("dice_jit_cache_size", lab)),
+    }
+    if reg.get("dice_paged_transfers_total", lab) is not None:
+        view["paged_transfers"] = int(
+            reg.value("dice_paged_transfers_total", lab))
+        view["paged_bytes_in"] = int(
+            reg.value("dice_paged_bytes_in_total", lab))
+    if reg.get("dice_peak_resident_expert_bytes", lab) is not None:
+        view["peak_resident_expert_bytes"] = int(
+            reg.value("dice_peak_resident_expert_bytes", lab))
+    if reg.get("dice_expert_hbm_budget_bytes", lab) is not None:
+        view["expert_hbm_budget"] = int(
+            reg.value("dice_expert_hbm_budget_bytes", lab))
+    return view
+
+
+def write_metrics(registry: MetricsRegistry, path: str) -> None:
+    """Write a registry to ``path``: JSON snapshot for ``*.json``,
+    Prometheus text exposition otherwise."""
+    if str(path).endswith(".json"):
+        registry.write_snapshot(path)
+    else:
+        registry.write_prometheus(path)
+
+
+# ---------------------------------------------------------------------------
 # engine
 # ---------------------------------------------------------------------------
 class DiceServer:
@@ -297,7 +440,17 @@ class DiceServer:
                  paging: Optional[paging_lib.PagingSpec] = None,
                  expert_pool: Optional[paging_lib.ExpertPool] = None,
                  devices_per_host: int = 0,
-                 inter_host_bw: Optional[float] = None):
+                 inter_host_bw: Optional[float] = None,
+                 obs: Optional[ObsConfig] = None,
+                 metrics: Optional[MetricsRegistry] = None):
+        # observability plane (DESIGN.md Sec. 16): the registry is the
+        # single source of truth the serving loops publish into (their
+        # summary dicts are views of it); the tracer records host phases
+        # as Chrome trace events.  obs off keeps every traced graph —
+        # and therefore every sample — bit-identical.
+        self.obs = obs if obs is not None else ObsConfig()
+        self.metrics = metrics if metrics is not None else MetricsRegistry()
+        self.tracer = StepTracer() if self.obs.enabled else None
         if compress is not None:
             # thread the wire codec into the schedule config (Sec. 11);
             # codec="none" normalizes to no compression so plans — and
@@ -387,7 +540,9 @@ class DiceServer:
             experts_per_token=self.cfg.experts_per_token)
 
     def generate(self, requests: List[Request], *, num_steps: int = 20,
-                 guidance: float = 1.5, key=None):
+                 guidance: float = 1.5, key=None,
+                 metrics: Optional[MetricsRegistry] = None,
+                 metric_labels: Optional[dict] = None):
         classes = jnp.asarray([r.class_id for r in requests], jnp.int32)
         key = key if key is not None else jax.random.PRNGKey(0)
         t0 = time.time()
@@ -398,14 +553,15 @@ class DiceServer:
                                    ep_axis=self.ep_axis if self.mesh
                                    is not None else None,
                                    hop_schedule=self.hop_schedule,
-                                   expert_pool=self.expert_pool)
+                                   expert_pool=self.expert_pool,
+                                   obs=self.obs, tracer=self.tracer)
         wall = time.time() - t0
         lat = modeled_step_latency(
             self.cfg, self.dcfg, n_dev=self.n_dev,
             local_batch=max(1, len(requests) // self.n_dev),
             devices_per_host=self.devices_per_host,
             inter_host_bw=self.inter_host_bw)
-        return samples, {
+        result = {
             "wall_s_cpu": wall,
             "modeled_step_s_tpu8": lat["t_step_s"],
             "modeled_total_s_tpu8": lat["t_step_s"] * num_steps,
@@ -434,6 +590,15 @@ class DiceServer:
                                      "peak_resident_expert_bytes",
                                      "expert_hbm_budget") if k in stats},
         }
+        # publish into the registry (the server's own, or a caller-scoped
+        # one — serve_queue derives its per-call summary as a view)
+        reg = metrics if metrics is not None else self.metrics
+        lab = metric_labels if metric_labels is not None else {
+            "schedule": plan_lib.schedule_name(self.dcfg.schedule),
+            "engine": "batch"}
+        _publish_batch(reg, result, lab)
+        _publish_obs(reg, stats, lab)
+        return samples, result
 
 
 # ---------------------------------------------------------------------------
@@ -444,74 +609,55 @@ def serve_queue(server: "DiceServer", requests: List[Request], *,
                 guidance: float = 1.5, key=None):
     """Drain a request queue through fixed-size batches (a compiled batch
     size keeps one jit cache entry; short final batches are padded with the
-    null class and trimmed).  Returns {rid: sample} plus aggregate stats."""
+    null class and trimmed).  Returns {rid: sample} plus aggregate stats.
+
+    Every per-batch quantity is published into a call-scoped
+    :class:`MetricsRegistry` (folded into ``server.metrics`` on return)
+    and the returned summary is a *view* of it (DESIGN.md Sec. 16): the
+    metric types encode the aggregation — flows are counters, per-batch
+    sizes are max-gauges, the modeled step time is a histogram mean —
+    so the sum/max/running-mean rules live in one place."""
     key = key if key is not None else jax.random.PRNGKey(0)
     out: dict = {}
-    stats_acc = {"batches": 0, "padded": 0, "modeled_step_s_tpu8": 0.0,
-                 "modeled_total_s_tpu8": 0.0,
-                 # flows (dispatch bytes) sum across batches; sizes
-                 # (per-layer a2a payload, persistent buffer footprint) and
-                 # jit-cache stats take the max — every batch has the same
-                 # compiled shape, so max is the actual per-batch value
-                 "a2a_bytes_per_layer": 0.0, "buffer_bytes": 0,
-                 "dispatch_bytes_total": 0.0,
-                 # wire (codec-compressed) vs raw payload flows (Sec. 11):
-                 # wire_bytes_total == dispatch_bytes_total; raw is what the
-                 # same run would move losslessly, so ratio = raw / wire
-                 "wire_bytes_total": 0.0, "raw_bytes_total": 0.0,
-                 # ring-overlap execution stats (Sec. 12): hop count is a
-                 # size (max), hop bytes are a flow (sum)
-                 "ring_hops": 0, "hop_bytes_total": 0.0,
-                 "modeled_overlap_efficiency": 0.0,
-                 "num_plan_variants": 0, "jit_cache_size": 0}
+    reg = MetricsRegistry()
+    lab = {"schedule": plan_lib.schedule_name(server.dcfg.schedule),
+           "engine": "queue"}
+    tracer = server.tracer
     queue = list(requests)
+    t_start = time.perf_counter()
     while queue:
         batch, queue = queue[:max_batch], queue[max_batch:]
         pad = max_batch - len(batch)
+        reg.series("dice_queue_depth", "requests still waiting",
+                   lab).append(len(queue))
         # cfg.num_classes IS the null/uncond class id (class_embed carries
         # num_classes + 1 rows)
         padded = batch + [Request(class_id=server.cfg.num_classes,
                                   rid=-1)] * pad
         key, k = jax.random.split(key)
-        samples, stats = server.generate(padded, num_steps=num_steps,
-                                         guidance=guidance, key=k)
+        span = (tracer.span("serve_queue_batch", cat="serve",
+                            args={"batch": len(batch), "pad": pad})
+                if tracer is not None else contextlib.nullcontext())
+        with span:
+            samples, _ = server.generate(padded, num_steps=num_steps,
+                                         guidance=guidance, key=k,
+                                         metrics=reg, metric_labels=lab)
         for i, r in enumerate(batch):
             out[r.rid] = samples[i]
-        stats_acc["batches"] += 1
-        stats_acc["padded"] += pad
-        # aggregate across batches (total = sum; step = running mean)
-        stats_acc["modeled_total_s_tpu8"] += stats["modeled_total_s_tpu8"]
-        stats_acc["modeled_step_s_tpu8"] += (
-            stats["modeled_step_s_tpu8"]
-            - stats_acc["modeled_step_s_tpu8"]) / stats_acc["batches"]
-        stats_acc["a2a_bytes_per_layer"] = max(
-            stats_acc["a2a_bytes_per_layer"],
-            float(stats["a2a_bytes_per_layer"]))
-        stats_acc["buffer_bytes"] = max(stats_acc["buffer_bytes"],
-                                        int(stats["buffer_bytes"]))
-        stats_acc["dispatch_bytes_total"] += float(
-            sum(stats["dispatch_bytes_per_step"]))
-        stats_acc["wire_bytes_total"] += stats["wire_bytes_total"]
-        stats_acc["raw_bytes_total"] += stats["raw_bytes_total"]
-        stats_acc["ring_hops"] = max(stats_acc["ring_hops"],
-                                     int(stats["ring_hops"]))
-        stats_acc["hop_bytes_total"] += float(stats["hop_bytes_total"])
-        stats_acc["modeled_overlap_efficiency"] = max(
-            stats_acc["modeled_overlap_efficiency"],
-            float(stats["modeled_overlap_efficiency"]))
-        stats_acc["num_plan_variants"] = max(stats_acc["num_plan_variants"],
-                                             stats["num_plan_variants"])
-        stats_acc["jit_cache_size"] = max(stats_acc["jit_cache_size"],
-                                          stats["jit_cache_size"])
-        # paging (Sec. 15): transfers/bytes are flows (sum), the residency
-        # peak and budget are sizes (max) — the pool resets per batch
-        for k in ("paged_transfers", "paged_bytes_in"):
-            if k in stats:
-                stats_acc[k] = stats_acc.get(k, 0) + stats[k]
-        for k in ("peak_resident_expert_bytes", "expert_hbm_budget"):
-            if k in stats and stats[k] is not None:
-                stats_acc[k] = max(stats_acc.get(k, 0), stats[k])
-    return out, stats_acc
+        # measured per-request end-to-end latency: queue wait + execution
+        # (every request of a rigid batch completes with the batch)
+        done = time.perf_counter() - t_start
+        e2e = reg.histogram("dice_request_e2e_seconds",
+                            "request end-to-end seconds (enqueue->sample)",
+                            lab)
+        for _ in batch:
+            e2e.observe(done)
+        reg.counter("dice_requests_total", "requests served", lab).inc(
+            len(batch))
+        reg.counter("dice_padded_requests_total", "null-class pad slots",
+                    lab).inc(pad)
+    server.metrics.merge(reg)
+    return out, _registry_view(reg, lab)
 
 
 # ---------------------------------------------------------------------------
@@ -613,6 +759,17 @@ def serve_continuous(server: "DiceServer", requests: List[Request], *,
                 f"expert pool is sharded for {pool.n_dev} devices but the "
                 f"serving mesh has a {n_ep}-way ep axis")
         pool.reset_stats()
+    # observability (DESIGN.md Sec. 16): a call-scoped registry (folded
+    # into server.metrics on return) replaces the local accumulator
+    # variables; the summary below is a view of it
+    reg = MetricsRegistry()
+    lab = {"schedule": plan_lib.schedule_name(dcfg.schedule),
+           "engine": "continuous"}
+    obs_on = server.obs.enabled
+    tracer = server.tracer
+    if pool is not None and tracer is not None:
+        pool.tracer = tracer
+    admit_time: dict = {}      # rid -> admission walltime (e2e latency)
     key = key if key is not None else jax.random.PRNGKey(0)
     noise_key, step_key = jax.random.split(key)
     B, Tp = max_batch, cfg.patch_tokens
@@ -644,18 +801,24 @@ def serve_continuous(server: "DiceServer", requests: List[Request], *,
         drift-triggered re-shard swaps ``dcfg.placements`` and rebuilds —
         always from ``server.params`` (the ORIGINAL, identity-layout
         tree), which ``_make_mesh_rf_step`` re-lays-out per placement."""
-        splan = plan_lib.compile_step_plans(dcfg, cfg.num_layers, num_steps,
-                                            experts_per_token=k_exp)
-        merge_plan = plan_lib.slotted_merge_plan(dcfg, cfg.num_layers,
-                                                 experts_per_token=k_exp)
-        if pool is not None:
-            # budget was resolved at server construction; every planned
-            # residency window must fit before anything compiles
-            pool.validate_plan(splan)
-        rf_step = make_rf_step(server.params, cfg, dcfg, dt=dt,
-                               guidance=guidance, mesh=mesh, ep_axis=ep_axis,
-                               hop_schedule=server.hop_schedule,
-                               expert_pool=pool)
+        span = (tracer.span("plan_build", cat="plan",
+                            args={"schedule": lab["schedule"],
+                                  "num_steps": num_steps})
+                if tracer is not None else contextlib.nullcontext())
+        with span:
+            splan = plan_lib.compile_step_plans(
+                dcfg, cfg.num_layers, num_steps, experts_per_token=k_exp)
+            merge_plan = plan_lib.slotted_merge_plan(
+                dcfg, cfg.num_layers, experts_per_token=k_exp)
+            if pool is not None:
+                # budget was resolved at server construction; every planned
+                # residency window must fit before anything compiles
+                pool.validate_plan(splan)
+            rf_step = make_rf_step(server.params, cfg, dcfg, dt=dt,
+                                   guidance=guidance, mesh=mesh,
+                                   ep_axis=ep_axis,
+                                   hop_schedule=server.hop_schedule,
+                                   expert_pool=pool, obs=server.obs)
         return splan, merge_plan, rf_step
 
     splan, merge_plan, rf_step = _build(dcfg)
@@ -675,8 +838,6 @@ def serve_continuous(server: "DiceServer", requests: List[Request], *,
         cfg.num_layers, cfg.num_experts,
         decay=pcfg.ema_decay if pcfg is not None else 0.9)
     placed_shares = None      # shares snapshot behind the live placements
-    placement_reshards = 0
-    jit_cache_peak = 0
     planned_init = partial(stale_lib.init_planned_states, splan,
                            num_tokens=B * Tp, d_model=cfg.d_model,
                            k=k_exp, dtype=jnp.float32, mesh=mesh,
@@ -692,16 +853,6 @@ def serve_continuous(server: "DiceServer", requests: List[Request], *,
          for i, r in enumerate(requests)), key=lambda a: (a[0], a[1]))
     out: dict = {}
     tick = 0
-    executed_ticks = 0
-    padded_slot_steps = 0
-    slotted_ticks = 0
-    admissions = 0
-    recycled_admissions = 0
-    dispatch_bytes_total = 0.0
-    raw_bytes_total = 0.0
-    hop_bytes_total = 0.0
-    ring_hops = 0
-    buffer_bytes = 0
     t0 = time.time()
 
     def _next_aligned(g: float) -> int:
@@ -726,11 +877,20 @@ def serve_continuous(server: "DiceServer", requests: List[Request], *,
                 if all(p.is_identity for p in new_pl):
                     new_pl = None
                 if new_pl != plan_lib.placements_of(dcfg):
-                    jit_cache_peak = max(jit_cache_peak,
-                                         int(rf_step._cache_size()))
+                    # the peak across placement epochs is the jit-cache
+                    # contract the benchmark asserts (== variants when no
+                    # re-shard), so it folds in via the max-gauge
+                    reg.gauge("dice_jit_cache_size",
+                              "jit cache entries of the step fn",
+                              lab).set_max(int(rf_step._cache_size()))
+                    if tracer is not None:
+                        tracer.instant("placement_reshard",
+                                       args={"tick": tick})
                     dcfg = dataclasses.replace(dcfg, placements=new_pl)
                     splan, merge_plan, rf_step = _build(dcfg)
-                    placement_reshards += 1
+                    reg.counter("dice_placement_reshards_total",
+                                "drift-triggered expert re-layouts",
+                                lab).inc()
                 placed_shares = hist.shares
 
         # ---- admission at plan-variant-aligned boundaries ----------------
@@ -745,9 +905,17 @@ def serve_continuous(server: "DiceServer", requests: List[Request], *,
                 recycle[i] = True
                 classes[i] = req.class_id
                 x = x.at[i].set(request_noise(noise_key, req.rid, cfg))
-                admissions += 1
+                reg.counter("dice_admissions_total", "slot admissions",
+                            lab).inc()
                 if ever_used[i]:
-                    recycled_admissions += 1
+                    reg.counter("dice_recycled_admissions_total",
+                                "admissions into a recycled slot",
+                                lab).inc()
+                if tracer is not None:
+                    tracer.instant("admit", args={
+                        "rid": req.rid, "slot": i, "tick": tick,
+                        "recycled": bool(ever_used[i])})
+                admit_time[req.rid] = time.perf_counter()
                 ever_used[i] = True
             if recycle.any():
                 m = jnp.asarray(recycle)
@@ -796,20 +964,53 @@ def serve_continuous(server: "DiceServer", requests: List[Request], *,
 
         t = jnp.asarray([s.local_step * dt if s.active else 0.0
                          for s in slots], jnp.float32)
-        x, states, states_u, _, _, aux = rf_step(
-            x, jnp.asarray(classes), states, states_u, {}, {}, t,
-            jax.random.fold_in(step_key, tick), plan=plan, slotted=slotted,
-            slot_fresh=slot_fresh, consume_mask=consume)
+        t_tick = time.perf_counter()
+        span = (tracer.span("tick", cat="step",
+                            args={"tick": tick, "slotted": bool(slotted)})
+                if tracer is not None else contextlib.nullcontext())
+        with span:
+            x, states, states_u, _, _, aux = rf_step(
+                x, jnp.asarray(classes), states, states_u, {}, {}, t,
+                jax.random.fold_in(step_key, tick), plan=plan,
+                slotted=slotted, slot_fresh=slot_fresh, consume_mask=consume)
+            if obs_on:
+                # measured (not modeled) per-tick walltime; the sync is
+                # obs-gated so the default async dispatch is untouched
+                jax.block_until_ready(x)
+        if obs_on:
+            reg.histogram("dice_step_wall_seconds",
+                          "measured wall seconds per engine tick",
+                          lab).observe(time.perf_counter() - t_tick)
+            if "telemetry" in aux:
+                _publish_telemetry_step(reg, aux["telemetry"], lab)
 
-        executed_ticks += 1
-        slotted_ticks += int(slotted)
-        padded_slot_steps += sum(not s.active for s in slots)
+        n_free = sum(not s.active for s in slots)
+        reg.counter("dice_ticks_total", "engine ticks executed", lab).inc()
+        if slotted:
+            reg.counter("dice_slotted_ticks_total",
+                        "ticks on the slotted merge plan", lab).inc()
+        reg.counter("dice_padded_slot_steps_total",
+                    "free-slot step executions", lab).inc(n_free)
+        reg.series("dice_slot_occupancy", "active-slot fraction per tick",
+                   lab).append(1.0 - n_free / B)
+        reg.series("dice_queue_depth", "requests still waiting",
+                   lab).append(len(pending))
         hist.update(np.asarray(aux["expert_counts"]))
-        dispatch_bytes_total += float(aux["dispatch_bytes"])
-        raw_bytes_total += float(aux["raw_dispatch_bytes"])
-        hop_bytes_total += float(aux["hop_bytes"])
-        ring_hops = max(ring_hops, int(aux["hops"]))
-        buffer_bytes = int(aux["buffer_bytes"])
+        reg.counter("dice_dispatch_bytes_total", "dispatch payload moved",
+                    lab).inc(float(aux["dispatch_bytes"]))
+        reg.counter("dice_wire_bytes_total",
+                    "codec-compressed bytes on the wire",
+                    lab).inc(float(aux["dispatch_bytes"]))
+        reg.counter("dice_raw_bytes_total",
+                    "lossless-equivalent payload bytes",
+                    lab).inc(float(aux["raw_dispatch_bytes"]))
+        reg.counter("dice_hop_bytes_total", "per-device one-hop ring wire",
+                    lab).inc(float(aux["hop_bytes"]))
+        reg.gauge("dice_ring_hops", "ring collective-permutes per MoE layer",
+                  lab).set_max(int(aux["hops"]))
+        reg.gauge("dice_buffer_bytes",
+                  "persistent staleness-buffer footprint",
+                  lab).set(int(aux["buffer_bytes"]))
 
         for i, slot in enumerate(slots):
             if not slot.active:
@@ -817,6 +1018,14 @@ def serve_continuous(server: "DiceServer", requests: List[Request], *,
             slot.local_step += 1
             if slot.local_step >= num_steps:
                 out[slot.rid] = np.asarray(x[i])
+                reg.counter("dice_requests_total", "requests served",
+                            lab).inc()
+                if slot.rid in admit_time:
+                    reg.histogram(
+                        "dice_request_e2e_seconds",
+                        "request end-to-end seconds (admission->sample)",
+                        lab).observe(
+                            time.perf_counter() - admit_time.pop(slot.rid))
                 slots[i] = _Slot()
                 classes[i] = cfg.num_classes
         tick += 1
@@ -832,50 +1041,71 @@ def serve_continuous(server: "DiceServer", requests: List[Request], *,
                                local_batch=max(1, B // server.n_dev),
                                devices_per_host=server.devices_per_host,
                                inter_host_bw=server.inter_host_bw)
+    # max over placement epochs: each epoch's fresh step function holds
+    # at most one entry per plan variant, and the peak is the contract
+    # the benchmark asserts (== variants when no re-shard)
+    reg.gauge("dice_jit_cache_size", "jit cache entries of the step fn",
+              lab).set_max(int(rf_step._cache_size()))
+    reg.gauge("dice_plan_variants", "compiled StepPlan variants",
+              lab).set_max(splan.num_variants)
+    ticks = int(reg.value("dice_ticks_total", lab))
+    padded_slot_steps = int(reg.value("dice_padded_slot_steps_total", lab))
+    # the summary is a VIEW of the registry (DESIGN.md Sec. 16); the
+    # modeled-latency and placement quantities are single computed
+    # values, not accumulations, so they read straight from their source
     stats = {
-        "ticks": executed_ticks,
+        "ticks": ticks,
         "makespan_steps": tick,
         "padded_slot_steps": padded_slot_steps,
-        "slot_occupancy": 1.0 - padded_slot_steps / max(1, executed_ticks * B),
-        "slotted_ticks": slotted_ticks,
-        "admissions": admissions,
-        "recycled_admissions": recycled_admissions,
+        "slot_occupancy": 1.0 - padded_slot_steps / max(1, ticks * B),
+        "slotted_ticks": int(reg.value("dice_slotted_ticks_total", lab)),
+        "admissions": int(reg.value("dice_admissions_total", lab)),
+        "recycled_admissions": int(
+            reg.value("dice_recycled_admissions_total", lab)),
         "steady_period": period,
         "wall_s_cpu": time.time() - t0,
         "modeled_step_s_tpu8": lat["t_step_s"],
-        "modeled_total_s_tpu8": lat["t_step_s"] * executed_ticks,
+        "modeled_total_s_tpu8": lat["t_step_s"] * ticks,
         "modeled_step_blocking_s": lat["t_step_blocking_s"],
         "modeled_step_ring_s": lat["t_step_ring_s"],
         "modeled_overlap_efficiency": lat["overlap_efficiency"],
-        "ring_hops": ring_hops,
-        "hop_bytes_total": hop_bytes_total,
+        "ring_hops": int(reg.value("dice_ring_hops", lab)),
+        "hop_bytes_total": reg.value("dice_hop_bytes_total", lab),
         "a2a_bytes_per_layer": lat["a2a_bytes_layer"],
-        "buffer_bytes": buffer_bytes,
-        "dispatch_bytes_total": dispatch_bytes_total,
+        "buffer_bytes": int(reg.value("dice_buffer_bytes", lab)),
+        "dispatch_bytes_total": reg.value("dice_dispatch_bytes_total", lab),
         # wire vs raw payload flows (Sec. 11): wire == dispatch_bytes_total
-        "wire_bytes_total": dispatch_bytes_total,
-        "raw_bytes_total": raw_bytes_total,
+        "wire_bytes_total": reg.value("dice_wire_bytes_total", lab),
+        "raw_bytes_total": reg.value("dice_raw_bytes_total", lab),
         "num_plan_variants": splan.num_variants,
-        # max over placement epochs: each epoch's fresh step function
-        # holds at most one entry per plan variant, and the peak is the
-        # contract the benchmark asserts (== variants when no re-shard)
-        "jit_cache_size": max(jit_cache_peak, int(rf_step._cache_size())),
+        "jit_cache_size": int(reg.value("dice_jit_cache_size", lab)),
         # online placement observability (Sec. 13): the EMA the optimizer
         # would consume — the two-pass benchmark's identity run reads
         # this back as its histogram probe — plus the re-shard count and
         # the planned wire scale the run ended on
         "routing_shares": hist.shares.tolist(),
         "hist_updates": hist.updates,
-        "placement_reshards": placement_reshards,
+        "placement_reshards": int(
+            reg.value("dice_placement_reshards_total", lab)),
         "placement_wire_scale": plan_lib.placement_wire_scale(dcfg),
     }
     if pool is not None:
         # drain in-flight fetches before reading the ledger (Sec. 15)
         jax.block_until_ready(x)
+        reg.counter("dice_paged_transfers_total",
+                    "expert-pool host->device fetches",
+                    lab).inc(pool.transfers)
+        reg.counter("dice_paged_bytes_in_total",
+                    "expert-pool host->device bytes",
+                    lab).inc(pool.bytes_transferred)
+        reg.gauge("dice_peak_resident_expert_bytes",
+                  "realized per-device expert-residency peak",
+                  lab).set_max(pool.peak_resident_bytes)
         stats["paged_transfers"] = pool.transfers
         stats["paged_bytes_in"] = pool.bytes_transferred
         stats["peak_resident_expert_bytes"] = pool.peak_resident_bytes
         stats["expert_hbm_budget"] = paging_lib.paging_of(dcfg).budget_bytes
+    server.metrics.merge(reg)
     return out, stats
 
 
@@ -960,6 +1190,19 @@ def main():
                          "batching engine (--max-batch slots) instead of "
                          "one fixed batch")
     ap.add_argument("--max-batch", type=int, default=8)
+    ap.add_argument("--obs", action="store_true",
+                    help="observability plane (DESIGN.md Sec. 16): in-"
+                         "graph staleness telemetry, measured step "
+                         "walltimes, and host-phase tracing (outputs stay "
+                         "bit-identical to an obs-off run)")
+    ap.add_argument("--trace-out", default=None,
+                    help="write a Chrome-trace-event JSON (Perfetto-"
+                         "loadable) of host phases to this path "
+                         "(implies --obs)")
+    ap.add_argument("--metrics-out", default=None,
+                    help="write the metrics registry here after the run: "
+                         "Prometheus text, or a JSON snapshot when the "
+                         "path ends in .json (implies --obs)")
     args = ap.parse_args()
 
     cfg = tiny() if args.tiny else xl_config()
@@ -986,6 +1229,7 @@ def main():
     if args.ep or args.dp > 1 or args.patch > 1:
         from repro.launch.mesh import make_mesh
         mesh = make_mesh(ep=max(1, args.ep), dp=args.dp, patch=args.patch)
+    obs_on = bool(args.obs or args.trace_out or args.metrics_out)
     server = DiceServer(cfg, dcfg, params=params, n_dev=args.n_dev,
                         mesh=mesh,
                         compress=CompressConfig(codec=args.codec,
@@ -997,7 +1241,8 @@ def main():
                         paging=paging,
                         expert_pool=expert_pool,
                         devices_per_host=args.devices_per_host,
-                        inter_host_bw=args.inter_host_bw)
+                        inter_host_bw=args.inter_host_bw,
+                        obs=ObsConfig(enabled=obs_on))
     reqs = [Request(class_id=i % cfg.num_classes, rid=i)
             for i in range(args.requests)]
     splan = server.plan(args.steps)
@@ -1018,6 +1263,15 @@ def main():
           f"{splan.num_steps} steps "
           f"({[len(splan.steps_of_variant(v)) for v in range(splan.num_variants)]} "
           f"steps each)")
+    def _write_obs_outputs():
+        if args.trace_out and server.tracer is not None:
+            server.tracer.write(args.trace_out)
+            print(f"wrote step trace to {args.trace_out} "
+                  f"({len(server.tracer.events)} events)")
+        if args.metrics_out:
+            write_metrics(server.metrics, args.metrics_out)
+            print(f"wrote metrics to {args.metrics_out}")
+
     if args.continuous:
         out, stats = serve_continuous(server, reqs,
                                       max_batch=args.max_batch,
@@ -1032,6 +1286,7 @@ def main():
                      f"max_share={flat.max():.3f}")
             print(f"  {k:26s} {v:.6g}" if isinstance(v, float)
                   else f"  {k:26s} {v}")
+        _write_obs_outputs()
         return
     samples, stats = server.generate(reqs, num_steps=args.steps,
                                      guidance=args.guidance)
@@ -1043,6 +1298,7 @@ def main():
         elif isinstance(v, float):
             v = f"{v:.6g}"
         print(f"  {k:26s} {v}")
+    _write_obs_outputs()
 
 
 if __name__ == "__main__":

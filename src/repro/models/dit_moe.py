@@ -30,6 +30,8 @@ from repro.core.patch_parallel import (PatchParallelState,
 from repro.core.schedules import DiceConfig, Schedule
 from repro.core import moe as moe_lib
 from repro.models import layers as L
+from repro.obs import telemetry as obs_telemetry
+from repro.obs.telemetry import ObsConfig
 
 
 # ---------------------------------------------------------------------------
@@ -99,7 +101,8 @@ def dit_forward(params, x, t, y, cfg: ModelConfig, dcfg: DiceConfig,
                 patch_compose: bool = False,
                 reduce_axes=None,
                 hop_schedule=None,
-                expert_pool=None):
+                expert_pool=None,
+                obs: Optional[ObsConfig] = None):
     """Velocity prediction.
 
     x: (B, T, C_in) latents; t: (B,) times; y: (B,) class ids
@@ -141,6 +144,14 @@ def dit_forward(params, x, t, y, cfg: ModelConfig, dcfg: DiceConfig,
     ``experts_*`` stacks (:func:`repro.core.paging.strip_expert_params`)
     and the MoE runs with the pool's padded wire-expert count, lifting
     the ``E % n_dev`` restriction.
+
+    ``obs`` (DESIGN.md Sec. 16): an enabled :class:`ObsConfig` adds the
+    fixed-shape ``"telemetry"`` (L, NUM_FIELDS) block to the aux dict
+    (per-layer staleness age / residual energies / mask rate / drop
+    fraction / codec error) and names each MoE layer action with
+    ``jax.named_scope``.  It is a closure constant, never a traced or
+    static *argument*, and with ``obs=None`` (default) the traced graph
+    is byte-identical to a build without the subsystem.
     Returns (v, new_states, new_patch_states, aux dict).
     """
     if plan is None:
@@ -182,6 +193,7 @@ def dit_forward(params, x, t, y, cfg: ModelConfig, dcfg: DiceConfig,
     ring_hops = jnp.asarray(0)
     dropped = 0.0
     served_counts = []
+    telems = []
 
     for i, blk in enumerate(params["blocks"]):
         if paged and plan.actions[i].paging is not None:
@@ -220,8 +232,10 @@ def dit_forward(params, x, t, y, cfg: ModelConfig, dcfg: DiceConfig,
         if patch_parallel_ndev and not patch_compose:
             # DistriFusion replicates the model: MoE runs locally + fresh.
             flat = hn.reshape(B * T, d)
-            moe_out, aux = moe_lib.moe_forward(blk["moe"], flat, cfg,
-                                               use_pallas=use_pallas)
+            with obs_telemetry.scope(obs, f"moe_l{i:02d}_distrifusion"):
+                moe_out, aux = moe_lib.moe_forward(blk["moe"], flat, cfg,
+                                                   use_pallas=use_pallas,
+                                                   obs=obs)
             new_st = stale_lib.MoELayerState()
         else:
             flat = hn.reshape(B * T, d)
@@ -238,12 +252,14 @@ def dit_forward(params, x, t, y, cfg: ModelConfig, dcfg: DiceConfig,
                 moe_p = dict(moe_p, **shards)
                 wire_E = (shards["experts_gate"].shape[0]
                           * compat.axis_size(ep_axis))
-            moe_out, new_st, aux = stale_lib.apply_layer_action(
-                moe_p, flat, cfg, plan.actions[i], st,
-                key=key, ep_axis=ep_axis, use_pallas=use_pallas,
-                slot_fresh=slot_fresh, consume_mask=consume_mask,
-                reduce_axes=reduce_axes, hop_schedule=hop_schedule,
-                num_wire_experts=wire_E)
+            with obs_telemetry.scope(
+                    obs, f"moe_l{i:02d}_{plan.actions[i].mode}"):
+                moe_out, new_st, aux = stale_lib.apply_layer_action(
+                    moe_p, flat, cfg, plan.actions[i], st,
+                    key=key, ep_axis=ep_axis, use_pallas=use_pallas,
+                    slot_fresh=slot_fresh, consume_mask=consume_mask,
+                    reduce_axes=reduce_axes, hop_schedule=hop_schedule,
+                    num_wire_experts=wire_E, obs=obs)
             if patch_axis is not None:
                 new_st = stale_lib.unflatten_state(new_st, B, T)
         new_states[i] = new_st
@@ -255,6 +271,7 @@ def dit_forward(params, x, t, y, cfg: ModelConfig, dcfg: DiceConfig,
             total_hop_bytes += aux.hop_bytes
         dropped += aux.dropped_frac
         served_counts.append(aux.served_counts)
+        telems.append(aux.telemetry)
         h = h + g2[:, None, :] * moe_out.reshape(B, T, d).astype(h.dtype)
 
     fmod = jax.nn.silu(c) @ params["final_mod"]
@@ -279,6 +296,11 @@ def dit_forward(params, x, t, y, cfg: ModelConfig, dcfg: DiceConfig,
         # signal the placement optimizer accumulates (DESIGN.md Sec. 13)
         "expert_counts": jnp.stack(served_counts).astype(jnp.float32),
     }
+    if obs is not None and obs.enabled:
+        # (L, NUM_FIELDS) fixed-shape staleness telemetry (Sec. 16) —
+        # keyed into aux only when obs is on so the off graph (and its
+        # pytree structure) is exactly the historical one
+        aux_out["telemetry"] = jnp.stack(telems)
     mean_axes = reduce_axes if reduce_axes is not None else ep_axis
     if mean_axes is not None:
         # mesh-native execution (inside shard_map): token-mean quantities
@@ -295,6 +317,12 @@ def dit_forward(params, x, t, y, cfg: ModelConfig, dcfg: DiceConfig,
         # to shares, so the mean over equal-sized token shards carries the
         # identical signal while staying replicated like the other aux
         aux_out["expert_counts"] = jax.lax.pmean(aux_out["expert_counts"],
+                                                 mean_axes)
+        if "telemetry" in aux_out:
+            # shard-local energy/rate ratios -> shard mean, replicated
+            # like the rest of the aux block (staleness_age is identical
+            # on every shard, so the mean is exact for it)
+            aux_out["telemetry"] = jax.lax.pmean(aux_out["telemetry"],
                                                  mean_axes)
         scale = 1
         for ax in ((mean_axes,) if isinstance(mean_axes, str)

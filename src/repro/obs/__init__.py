@@ -1,0 +1,16 @@
+"""Staleness-aware observability plane (DESIGN.md Sec. 16).
+
+Three parts: ``ObsConfig``-gated in-graph telemetry carried through
+``MoEAux`` (``telemetry.py``), a labeled metrics registry with
+Prometheus-text/JSON exposition that the serving summaries are views of
+(``metrics.py``), and a Chrome-trace-event step tracer (``trace.py``).
+"""
+from repro.obs.telemetry import (  # noqa: F401
+    AGE, CODEC_ERR, DROP_FRAC, MASK_RATE, NUM_FIELDS, RES_COMBINE,
+    RES_DISPATCH, TELEMETRY_FIELDS, ObsConfig, layer_telemetry,
+    merge_staggered, stamp_age,
+)
+from repro.obs.metrics import (  # noqa: F401
+    Counter, Gauge, Histogram, MetricsRegistry, Series, parse_prometheus,
+)
+from repro.obs.trace import StepTracer  # noqa: F401

@@ -14,6 +14,7 @@ light steps still get a genuinely smaller dispatch buffer.
 """
 from __future__ import annotations
 
+import time
 from functools import partial
 from typing import Dict, Optional
 
@@ -31,6 +32,7 @@ from repro.core import staleness as stale_lib
 from repro.core.patch_parallel import PatchParallelState
 from repro.core.schedules import DiceConfig
 from repro.models.dit_moe import dit_forward, dit_train_forward
+from repro.obs.telemetry import ObsConfig
 from repro.optim.adamw import adamw_update, clip_by_global_norm, cosine_schedule
 
 
@@ -71,7 +73,8 @@ def _euler_step(params, cfg: ModelConfig, dcfg: DiceConfig,
                 t, key, *, plan, dt, guidance, patch_parallel_ndev=0,
                 ep_axis=None, slot_fresh=None, consume_mask=None,
                 patch_axis=None, patch_fresh=None, patch_compose=False,
-                reduce_axes=None, hop_schedule=None, expert_pool=None):
+                reduce_axes=None, hop_schedule=None, expert_pool=None,
+                obs=None):
     """One CFG-guided Euler step — the schedule-agnostic core both the
     single-device and the mesh-native (shard_map-ped) step functions trace.
     Inside shard_map every operand is the per-device shard, ``ep_axis``
@@ -88,8 +91,10 @@ def _euler_step(params, cfg: ModelConfig, dcfg: DiceConfig,
         slot_fresh=slot_fresh, consume_mask=consume_mask,
         patch_axis=patch_axis, patch_fresh=patch_fresh,
         patch_compose=patch_compose, reduce_axes=reduce_axes,
-        hop_schedule=hop_schedule, expert_pool=expert_pool)
+        hop_schedule=hop_schedule, expert_pool=expert_pool, obs=obs)
     if guidance != 1.0:
+        # the unconditional pass's aux is discarded, so it never computes
+        # telemetry — obs instruments the conditional pass only
         v_u, nsu, npsu, _ = dit_forward(
             params, x, t, null, cfg, dcfg, states_u, plan=plan,
             patch_states=patch_states_u or None,
@@ -111,7 +116,8 @@ def make_rf_step(params, cfg: ModelConfig, dcfg: DiceConfig, *,
                  mesh: Optional[jax.sharding.Mesh] = None,
                  patch_compose: bool = False,
                  hop_schedule=None,
-                 expert_pool=None):
+                 expert_pool=None,
+                 obs: Optional[ObsConfig] = None):
     """The reusable single-Euler-step callable behind both :func:`rf_sample`
     and the continuous-batching serving engine (DESIGN.md Sec. 9).
 
@@ -144,13 +150,18 @@ def make_rf_step(params, cfg: ModelConfig, dcfg: DiceConfig, *,
     (``repro.core.overlap.ring_hop_schedule``); ``patch_compose`` runs the
     replicated patch simulation composed with the staleness MoE path (the
     mesh-less numerics reference of the sharded patch axis).
+
+    ``obs`` is a CLOSURE constant of the step function — an enabled
+    :class:`ObsConfig` adds the ``"telemetry"`` aux output (DESIGN.md
+    Sec. 16) without becoming a jit argument, so the cache contract (one
+    entry per (plan, slotted) pair) is unchanged either way.
     """
     if mesh is not None:
         return _make_mesh_rf_step(
             params, cfg, dcfg, dt=dt, guidance=guidance,
             patch_parallel_ndev=patch_parallel_ndev, mesh=mesh,
             ep_axis=ep_axis or "ep", hop_schedule=hop_schedule,
-            expert_pool=expert_pool)
+            expert_pool=expert_pool, obs=obs)
 
     @partial(jax.jit, static_argnames=("plan", "slotted"))
     def rf_step(x, classes, states, states_u, patch_states, patch_states_u,
@@ -163,7 +174,8 @@ def make_rf_step(params, cfg: ModelConfig, dcfg: DiceConfig, *,
             guidance=guidance, patch_parallel_ndev=patch_parallel_ndev,
             ep_axis=ep_axis, patch_compose=patch_compose,
             slot_fresh=slot_fresh if slotted else None,
-            consume_mask=consume_mask if slotted else None)
+            consume_mask=consume_mask if slotted else None,
+            obs=obs)
 
     return rf_step
 
@@ -171,7 +183,7 @@ def make_rf_step(params, cfg: ModelConfig, dcfg: DiceConfig, *,
 def _make_mesh_rf_step(params, cfg: ModelConfig, dcfg: DiceConfig, *,
                        dt: float, guidance: float, patch_parallel_ndev: int,
                        mesh: jax.sharding.Mesh, ep_axis: str,
-                       hop_schedule=None, expert_pool=None):
+                       hop_schedule=None, expert_pool=None, obs=None):
     """Mesh-native lowering of :func:`make_rf_step` (DESIGN.md §10/§14).
 
     One ``shard_map`` per plan variant over the hierarchical
@@ -260,6 +272,10 @@ def _make_mesh_rf_step(params, cfg: ModelConfig, dcfg: DiceConfig, *,
                     "raw_dispatch_bytes": P(), "dropped_frac": P(),
                     "hops": P(), "hop_bytes": P(),
                     "buffer_bytes": P(), "expert_counts": P()}
+        if obs is not None and obs.enabled:
+            # telemetry is pmean'd inside the mapped body like the other
+            # aux reductions -> replicated (DESIGN.md Sec. 16)
+            aux_spec["telemetry"] = P()
         ops = (params, x, classes, states, states_u, patch_states,
                patch_states_u, t, key, patch_fresh)
         in_specs = (pspecs, x_spec, b_spec, st_spec, stu_spec, pst_spec,
@@ -289,7 +305,7 @@ def _make_mesh_rf_step(params, cfg: ModelConfig, dcfg: DiceConfig, *,
                 ep_axis=live_ep, slot_fresh=sf, consume_mask=cm,
                 patch_axis=patch_axis, patch_fresh=pf_l,
                 reduce_axes=reduce_axes, hop_schedule=hop_schedule,
-                expert_pool=pool)
+                expert_pool=pool, obs=obs)
             aux = dict(aux, buffer_bytes=jnp.asarray(aux["buffer_bytes"]))
             return x_new, ns, nsu, nps, npsu, aux
 
@@ -309,7 +325,8 @@ def make_sample_step(params, cfg: ModelConfig, dcfg: DiceConfig, classes, *,
                      mesh: Optional[jax.sharding.Mesh] = None,
                      patch_compose: bool = False,
                      hop_schedule=None,
-                     expert_pool=None):
+                     expert_pool=None,
+                     obs: Optional[ObsConfig] = None):
     """One jitted Euler step with ``classes`` bound — the whole-loop
     sampler's view of :func:`make_rf_step`.
 
@@ -326,7 +343,8 @@ def make_sample_step(params, cfg: ModelConfig, dcfg: DiceConfig, classes, *,
                            ep_axis=ep_axis, mesh=mesh,
                            patch_compose=patch_compose,
                            hop_schedule=hop_schedule,
-                           expert_pool=expert_pool)
+                           expert_pool=expert_pool,
+                           obs=obs)
 
     def one_step(x, states, states_u, patch_states, patch_states_u, t, key,
                  *, plan, patch_fresh=None):
@@ -347,7 +365,9 @@ def rf_sample(params, cfg: ModelConfig, dcfg: DiceConfig, *,
               patch_compose: bool = False,
               hop_schedule=None,
               expert_pool=None,
-              collect_stats: bool = True):
+              collect_stats: bool = True,
+              obs: Optional[ObsConfig] = None,
+              tracer=None):
     """Generate latents (B, T, C) for ``classes`` under a schedule.
 
     Returns (samples, stats) where stats records per-step all-to-all
@@ -364,7 +384,20 @@ def rf_sample(params, cfg: ModelConfig, dcfg: DiceConfig, *,
     per-step ``dispatch_bytes`` stat becomes the PER-DEVICE all-to-all
     payload — on Conditional-Communication light steps a genuinely
     smaller number, straight off the sharded dispatch buffer.
+
+    ``obs`` / ``tracer`` (DESIGN.md Sec. 16): with an enabled
+    :class:`ObsConfig` the loop additionally records per-step MEASURED
+    walltime (``stats["step_wall_s"]``, each step ``block_until_ready``-
+    timed — the first call of a variant includes its compile, reported
+    separately in ``stats["compile_s"]`` keyed by variant index) and the
+    in-graph telemetry block (``stats["telemetry"]``, one (L, NUM_FIELDS)
+    array per step).  The samples themselves are bit-identical to an
+    obs-off run — telemetry only ADDS aux outputs.  ``tracer`` (a
+    :class:`repro.obs.trace.StepTracer`) receives plan-build / compile /
+    step-execute spans, and paging pools emit their ``io_callback``
+    fetches onto it.
     """
+    obs_on = obs is not None and obs.enabled
     B = classes.shape[0]
     ep = ep_axis or ("ep" if mesh is not None else None)
     n_ep = (mesh.shape[ep] if mesh is not None and ep in mesh.axis_names
@@ -393,9 +426,22 @@ def rf_sample(params, cfg: ModelConfig, dcfg: DiceConfig, *,
             mesh, shard_lib.hier_token_spec(mesh) if patch_axis
             else shard_lib.hier_batch_spec(mesh)))
     dt = 1.0 / num_steps
-    splan = plan_lib.compile_step_plans(
-        dcfg, cfg.num_layers, num_steps,
-        experts_per_token=cfg.experts_per_token)
+    if tracer is not None:
+        with tracer.span("plan_build", cat="plan",
+                         args={"schedule": plan_lib.schedule_name(
+                                   dcfg.schedule),
+                               "num_steps": num_steps}):
+            splan = plan_lib.compile_step_plans(
+                dcfg, cfg.num_layers, num_steps,
+                experts_per_token=cfg.experts_per_token)
+    else:
+        splan = plan_lib.compile_step_plans(
+            dcfg, cfg.num_layers, num_steps,
+            experts_per_token=cfg.experts_per_token)
+    if tracer is not None and expert_pool is not None:
+        # paging io_callback fetches run on runtime threads; the tracer is
+        # lock-protected, so they land on their own track
+        expert_pool.tracer = tracer
     if expert_pool is not None and paging_lib.paging_of(dcfg) is not None:
         # every planned residency window must fit the HBM budget — fail
         # here, before compile, not by overflowing device memory mid-run
@@ -437,6 +483,10 @@ def rf_sample(params, cfg: ModelConfig, dcfg: DiceConfig, *,
         patch_states_u = _patch_init()
     stats = {"dispatch_bytes": [], "raw_bytes": [], "buffer_bytes": [],
              "hops": [], "hop_bytes": []}
+    if obs_on:
+        stats["telemetry"] = []       # per step: (L, NUM_FIELDS) arrays
+        stats["step_wall_s"] = []     # per step: measured, block-timed
+        stats["compile_s"] = {}       # variant index -> first-call seconds
 
     one_step = make_sample_step(params, cfg, dcfg, classes, dt=dt,
                                 guidance=guidance,
@@ -444,7 +494,8 @@ def rf_sample(params, cfg: ModelConfig, dcfg: DiceConfig, *,
                                 ep_axis=ep, mesh=mesh,
                                 patch_compose=patch_compose,
                                 hop_schedule=hop_schedule,
-                                expert_pool=expert_pool)
+                                expert_pool=expert_pool,
+                                obs=obs)
 
     for s in range(num_steps):
         key, k = jax.random.split(key)
@@ -455,9 +506,43 @@ def rf_sample(params, cfg: ModelConfig, dcfg: DiceConfig, *,
             # fresh: warmup steps, and step 0 (its stale buffer is unborn)
             pf = jnp.full((B,), bool(s == 0 or splan.steps[s].is_warmup))
             pf = shard_lib.hier_place_batch(pf, mesh)
-        x, states, states_u, patch_states, patch_states_u, aux = one_step(
-            x, states, states_u, patch_states, patch_states_u, t, k,
-            plan=splan.steps[s], patch_fresh=pf)
+        v_idx = splan.variant_of_step[s]
+        t0 = time.perf_counter() if obs_on else 0.0
+        cache_before = one_step._cache_size() if obs_on else 0
+        if obs_on:
+            # device-profile alignment: the annotation names this step's
+            # plan variant on the host timeline jax.profiler captures
+            with jax.profiler.TraceAnnotation(f"rf_step_v{v_idx}"):
+                step_out = one_step(
+                    x, states, states_u, patch_states, patch_states_u,
+                    t, k, plan=splan.steps[s], patch_fresh=pf)
+        else:
+            step_out = one_step(
+                x, states, states_u, patch_states, patch_states_u, t, k,
+                plan=splan.steps[s], patch_fresh=pf)
+        x, states, states_u, patch_states, patch_states_u, aux = step_out
+        if obs_on:
+            t_dispatched = time.perf_counter()
+            compiled = one_step._cache_size() > cache_before
+            if compiled and v_idx not in stats["compile_s"]:
+                # jit compiles synchronously inside the call, so the
+                # call-to-return time of a cache-growing step IS the
+                # trace+compile cost of its variant
+                stats["compile_s"][v_idx] = t_dispatched - t0
+                if tracer is not None:
+                    tracer.complete(f"compile_variant_{v_idx}",
+                                    tracer.now() - (t_dispatched - t0) * 1e6,
+                                    cat="compile",
+                                    args={"variant": v_idx, "step": s})
+            jax.block_until_ready(x)
+            wall = time.perf_counter() - t0
+            stats["step_wall_s"].append(wall)
+            stats["telemetry"].append(jax.device_get(aux["telemetry"]))
+            if tracer is not None:
+                tracer.complete("rf_step", tracer.now() - wall * 1e6,
+                                cat="step",
+                                args={"step": s, "variant": v_idx,
+                                      "compiled": bool(compiled)})
         if collect_stats:
             stats["dispatch_bytes"].append(float(aux["dispatch_bytes"]))
             stats["raw_bytes"].append(float(aux["raw_dispatch_bytes"]))
