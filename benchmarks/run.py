@@ -59,6 +59,12 @@ BENCH_SCHEMAS = {
             "modeled_step_ring_s_placed",
         },
     },
+    "serve_chaos": {
+        "required": {
+            "faults", "requests", "mesh", "schedules", "zero_crashes",
+        },
+        "optional": {"paging"},
+    },
 }
 
 

@@ -39,7 +39,8 @@ from repro.launch.serve import (DiceServer, Request, SCHEDULES,
                                 modeled_step_latency, serve_continuous,
                                 serve_queue, write_metrics)
 from repro.models.dit_moe import init_dit
-from repro.obs import ObsConfig
+from repro.obs import MetricsRegistry, ObsConfig
+from repro.resilience import faults as fault_lib
 
 
 def poisson_arrivals(n: int, rate_per_step: float, seed: int) -> List[float]:
@@ -294,6 +295,140 @@ def run(*, schedule: str = "dice", requests: int = 32, max_batch: int = 8,
     return res
 
 
+def run_chaos(*, faults: str, requests: int = 8, max_batch: int = 4,
+              num_steps: int = 6, rate: float = 0.5, seed: int = 0,
+              smoke: bool = False, ep: int = 0, dp: int = 1,
+              paging: str = "off", trace_out: str = None,
+              metrics_out: str = None) -> dict:
+    """Chaos smoke (DESIGN.md Sec. 17): every schedule serves a seeded
+    fault storm to completion.
+
+    For each of the five schedules, the SAME request trace runs three
+    times through the continuous engine: a fault-free reference, the
+    seeded fault run, and a full-degradation envelope
+    (``corrupt_combine_rate=1.0`` + guards — every step fully
+    cache-degraded, the "one extra light step" quality bound).  Asserts
+    per schedule: zero crashes, every request either served or
+    explicitly shed (nothing silently lost), all served samples finite,
+    degradation events visible in the stats, and the fault run's max
+    per-request deviation from the reference bounded by the envelope's.
+    """
+    cfg = common.smoke_cfg("dit-moe-chaos") if smoke else tiny()
+    res_cfg = fault_lib.parse_resilience(faults)
+    assert res_cfg is not None, f"--faults {faults!r} parsed to no config"
+    mesh = None
+    if ep or dp > 1:
+        from repro.launch.mesh import make_mesh
+        mesh = make_mesh(ep=max(1, ep), dp=dp, patch=1)
+        lanes = max(1, dp) * max(1, ep)
+        max_batch = max(max_batch, lanes)
+        max_batch -= max_batch % lanes
+    fcfg = res_cfg.faults
+    if fcfg is not None and fcfg.burst_size > 0:
+        arrivals = fault_lib.bursty_arrivals(requests, rate,
+                                             fcfg.burst_size)
+    else:
+        arrivals = poisson_arrivals(requests, rate, seed)
+    reqs = [Request(class_id=i % cfg.num_classes, rid=i)
+            for i in range(requests)]
+    # full-degradation envelope: every fresh combine pair corrupted every
+    # step, absorbed by the guards' cache fallback
+    env_res = fault_lib.ResilienceConfig(
+        faults=fault_lib.FaultConfig(seed=seed, corrupt_combine_rate=1.0),
+        guards=True)
+    corrupting = fcfg is not None and (fcfg.corrupt_combine_rate > 0
+                                       or fcfg.corrupt_dispatch_rate > 0)
+    params = init_dit(jax.random.PRNGKey(0), cfg)
+    reg = MetricsRegistry()
+    tracer_holder = {}
+    per = {}
+    pspec = None
+    if paging == "on":
+        from repro.core.paging import PagingSpec
+        pspec = PagingSpec(budget_bytes=None, depth=1)
+    for name in SCHEDULES:
+        def _run(resilience, obs=False):
+            srv = DiceServer(cfg, SCHEDULES[name](), params=params,
+                             mesh=mesh, resilience=resilience,
+                             paging=pspec, obs=ObsConfig(enabled=obs))
+            o, s = serve_continuous(srv, reqs, max_batch=max_batch,
+                                    num_steps=num_steps,
+                                    arrival_steps=arrivals,
+                                    key=jax.random.PRNGKey(seed))
+            return srv, o, s
+
+        _, ref_out, _ = _run(None)
+        obs_on = bool(trace_out or metrics_out)
+        srv_f, f_out, f_stats = _run(res_cfg, obs=obs_on)
+        reg.merge(srv_f.metrics)
+        if srv_f.tracer is not None:
+            tracer_holder[name] = srv_f.tracer
+        shed = set(f_stats.get("shed_rids", []))
+        served = set(f_out)
+        assert not (served & shed), (name, served & shed)
+        assert sorted(served | shed) == [r.rid for r in reqs], (
+            f"{name}: requests silently lost — served {sorted(served)}, "
+            f"shed {sorted(shed)}")
+        assert all(np.isfinite(v).all() for v in f_out.values()), (
+            f"{name}: non-finite sample escaped the guards")
+        fe = f_stats.get("fault_events", {})
+        if corrupting:
+            assert sum(fe.values()) > 0, (
+                f"{name}: corruption configured but no fault events "
+                f"recorded: {fe}")
+        max_delta = max((float(np.max(np.abs(f_out[r] - ref_out[r])))
+                         for r in served), default=0.0)
+        env_delta = None
+        if corrupting:
+            _, e_out, _ = _run(env_res)
+            env_delta = max((float(np.max(np.abs(e_out[r] - ref_out[r])))
+                             for r in e_out if r in ref_out), default=0.0)
+            # partial corruption cannot hurt more than total degradation
+            # (small slack: corruption flips WHICH pairs degrade, not the
+            # magnitude scale)
+            assert max_delta <= 4.0 * max(env_delta, 1e-6), (
+                f"{name}: fault-run delta {max_delta} exceeds the "
+                f"full-degradation envelope {env_delta}")
+        per[name] = {
+            "served": len(served),
+            "shed": len(shed),
+            "quarantined": int(f_stats.get("quarantined", 0)),
+            "requeued": int(f_stats.get("requeued", 0)),
+            "watchdog_breaches": int(f_stats.get("watchdog_breaches", 0)),
+            "demotions": list(f_stats.get("demotions", [])),
+            "fault_events": {k: float(v) for k, v in fe.items()},
+            "paging_stale_fallbacks": int(
+                f_stats.get("paging_stale_fallbacks", 0)),
+            "max_delta": max_delta,
+            "envelope_delta": env_delta,
+        }
+        common.csv_row(
+            f"serve_chaos/{name}/b{max_batch}", per[name]["served"],
+            f"shed={per[name]['shed']} "
+            f"quarantined={per[name]['quarantined']} "
+            f"events={sum(fe.values()):.0f} "
+            f"delta={max_delta:.3g}"
+            + (f" envelope={env_delta:.3g}" if env_delta is not None
+               else ""))
+    if trace_out and tracer_holder:
+        last = list(tracer_holder.values())[-1]
+        last.write(trace_out)
+        print(f"# wrote step trace to {trace_out} "
+              f"({len(last.events)} events)", flush=True)
+    if metrics_out:
+        write_metrics(reg, metrics_out)
+        print(f"# wrote metrics to {metrics_out}", flush=True)
+    return {
+        "faults": faults,
+        "requests": requests,
+        "mesh": {"ep": max(1, ep), "dp": max(1, dp), "patch": 1,
+                 "native": mesh is not None},
+        "paging": paging,
+        "schedules": per,
+        "zero_crashes": True,
+    }
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--schedule", choices=list(SCHEDULES), default="dice")
@@ -358,11 +493,36 @@ def main():
     ap.add_argument("--metrics-out", default=None,
                     help="write the metrics registry: Prometheus text, or "
                          "a JSON snapshot for *.json paths (implies --obs)")
+    ap.add_argument("--faults", default=None,
+                    help="chaos mode (DESIGN.md Sec. 17): a seeded "
+                         "resilience spec, e.g. 'seed=7,corrupt=0.1,"
+                         "paging_err=0.3,poison_tick=3'.  Runs EVERY "
+                         "schedule through reference / fault / envelope "
+                         "passes, asserting completion, zero crashes, and "
+                         "a bounded quality delta; writes "
+                         "BENCH_serve_chaos.json")
     args = ap.parse_args()
     if args.smoke:
         args.requests = min(args.requests, 12)
         args.steps = min(args.steps, 4)
         args.max_batch = min(args.max_batch, 4)
+
+    if args.faults:
+        res = run_chaos(faults=args.faults, requests=min(args.requests, 8),
+                        max_batch=args.max_batch, num_steps=args.steps,
+                        rate=args.rate, seed=args.seed, smoke=args.smoke,
+                        ep=args.ep, dp=args.dp, paging=args.paging,
+                        trace_out=args.trace_out,
+                        metrics_out=args.metrics_out)
+        common.write_bench_json("serve_chaos", res)
+        for name, r in res["schedules"].items():
+            print(f"  {name:18s} served={r['served']} shed={r['shed']} "
+                  f"quarantined={r['quarantined']} "
+                  f"events={sum(r['fault_events'].values()):.0f} "
+                  f"delta={r['max_delta']:.3g}")
+        print("CHAOS-OK: all schedules completed every request under "
+              "seeded faults (zero crashes, bounded quality delta)")
+        return
 
     res = run(schedule=args.schedule, requests=args.requests,
               max_batch=args.max_batch, num_steps=args.steps,

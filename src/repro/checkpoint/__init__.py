@@ -1,4 +1,5 @@
 from repro.checkpoint.io import (
+    CheckpointCorruptionError,
     load_checkpoint,
     load_checkpoint_leaves,
     read_checkpoint_manifest,

@@ -22,7 +22,8 @@ read-only views.
 from __future__ import annotations
 
 import os
-from typing import Any, Iterator, Tuple
+import zlib
+from typing import Any, Iterator, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -33,7 +34,17 @@ import numpy as np
 # ceiling, large enough that chunking costs nothing on small trees
 DEFAULT_CHUNK_BYTES = 64 * 1024 * 1024
 
-_FORMAT = 2
+# format 3 == format 2 + an interleaved CRC32 after every chunk bin
+# (computed per chunk as it streams out, so writes stay one-leaf-bounded);
+# formats 1 and 2 remain readable, just without integrity verification
+_FORMAT = 3
+
+
+class CheckpointCorruptionError(ValueError):
+    """A chunk failed its CRC32 or arrived truncated.  Subclasses
+    ValueError so pre-existing ``except ValueError`` / ``pytest.raises``
+    call sites keep working; carrying a dedicated type lets restore paths
+    distinguish a damaged file from a structurally mismatched one."""
 
 
 def _flatten(tree):
@@ -56,12 +67,15 @@ def _num_chunks(nbytes: int, chunk_bytes: int) -> int:
 
 def save_checkpoint(path: str, tree: Any, *, step: int = 0,
                     chunk_bytes: int = DEFAULT_CHUNK_BYTES) -> None:
-    """Write ``tree`` as manifest + chunked leaf buffers (format 2).
+    """Write ``tree`` as manifest + chunked leaf buffers (format 3).
 
     Leaves are pulled to host ONE AT A TIME (``jax.device_get`` inside
     the write loop) and each is written as ``ceil(nbytes/chunk_bytes)``
     msgpack bins — peak host RAM is one leaf, and no bin ever exceeds
-    ``chunk_bytes``.
+    ``chunk_bytes``.  Every chunk bin is followed by its CRC32 (a small
+    msgpack int), so readers verify integrity chunk-by-chunk while
+    streaming and a flipped bit or short read raises
+    :class:`CheckpointCorruptionError` instead of restoring garbage.
     """
     if chunk_bytes <= 0:
         raise ValueError(f"chunk_bytes must be positive, got {chunk_bytes}")
@@ -90,7 +104,9 @@ def save_checkpoint(path: str, tree: Any, *, step: int = 0,
             n = _num_chunks(arr.nbytes, chunk_bytes)
             for c in range(n):
                 lo = c * chunk_bytes
-                f.write(msgpack.packb(bytes(view[lo:lo + chunk_bytes])))
+                payload = bytes(view[lo:lo + chunk_bytes])
+                f.write(msgpack.packb(payload))
+                f.write(msgpack.packb(zlib.crc32(payload)))
             del view, raw, arr
 
 
@@ -131,8 +147,17 @@ def _validate_manifest(manifest: dict, like: Any):
     return leaves, treedef
 
 
-def _read_leaf(unpacker, meta: dict, fmt: int) -> np.ndarray:
-    """Assemble one leaf from its bins into a FRESH writable array."""
+def _read_leaf(unpacker, meta: dict, fmt: int, leaf_idx: int = 0,
+               fault_plan=None) -> np.ndarray:
+    """Assemble one leaf from its bins into a FRESH writable array.
+
+    Format >= 3 interleaves a CRC32 after each chunk bin; a mismatch (or
+    a short final bin) raises :class:`CheckpointCorruptionError`.
+    ``fault_plan`` is the deterministic injection hook
+    (`repro.resilience.faults.FaultPlan.truncate_chunk`): it may shorten
+    a chunk's bytes *before* verification, exercising exactly the
+    detection path a torn write would hit.
+    """
     dt = np.dtype(meta["dtype"])
     shape = tuple(meta["shape"])
     out = np.empty(shape, dtype=dt)
@@ -140,27 +165,37 @@ def _read_leaf(unpacker, meta: dict, fmt: int) -> np.ndarray:
         np.empty((0,), np.uint8)
     n = meta.get("chunks", 1) if fmt >= 2 else 1
     pos = 0
-    for _ in range(n):
+    for c in range(n):
         buf = unpacker.unpack()
+        if fault_plan is not None:
+            buf = fault_plan.truncate_chunk(leaf_idx, c, buf)
+        if fmt >= 3:
+            crc = unpacker.unpack()
+            if zlib.crc32(buf) != crc:
+                raise CheckpointCorruptionError(
+                    f"checkpoint chunk corrupt: leaf {leaf_idx} chunk {c} "
+                    f"CRC32 mismatch ({len(buf)} bytes read)")
         chunk = np.frombuffer(buf, dtype=np.uint8)
         flat[pos:pos + chunk.size] = chunk     # copy out of the read-only view
         pos += chunk.size
     if pos != out.nbytes:
-        raise ValueError(
+        raise CheckpointCorruptionError(
             f"checkpoint leaf truncated: read {pos} bytes, expected "
             f"{out.nbytes} for shape {shape} dtype {dt}")
     return out
 
 
-def load_checkpoint_leaves(path: str, like: Any = None,
-                           ) -> Iterator[np.ndarray]:
+def load_checkpoint_leaves(path: str, like: Any = None, *,
+                           fault_plan=None) -> Iterator[np.ndarray]:
     """Stream a checkpoint's leaves one at a time, in tree-flatten order.
 
     Yields freshly allocated (writable) numpy arrays; the generator holds
     no reference to previously yielded leaves, so peak host memory is one
     leaf — the restore-only streaming pattern.  With ``like`` given, the
     stored treedef / leaf count / dtypes / shapes are validated against
-    it before the first leaf is read.
+    it before the first leaf is read.  ``fault_plan`` deterministically
+    injects chunk truncation (DESIGN.md Sec. 17) to exercise the CRC /
+    truncation detection path.
     """
     with open(path, "rb") as f:
         unpacker = msgpack.Unpacker(f, max_buffer_size=2**31)
@@ -168,8 +203,8 @@ def load_checkpoint_leaves(path: str, like: Any = None,
         fmt = manifest.get("format", 1)
         if like is not None:
             _validate_manifest(manifest, like)
-        for meta in manifest["leaves"]:
-            yield _read_leaf(unpacker, meta, fmt)
+        for i, meta in enumerate(manifest["leaves"]):
+            yield _read_leaf(unpacker, meta, fmt, i, fault_plan)
 
 
 def load_checkpoint(path: str, like: Any) -> Any:
@@ -177,14 +212,14 @@ def load_checkpoint(path: str, like: Any) -> Any:
 
     Validates treedef, leaf count, dtype, and shape against ``like``
     before restoring — a mismatched tree raises instead of silently
-    truncating or casting.  Reads both the chunked format 2 and the old
-    single-bin-per-leaf format 1.
+    truncating or casting.  Reads the CRC-carrying format 3, the chunked
+    format 2, and the old single-bin-per-leaf format 1.
     """
     with open(path, "rb") as f:
         unpacker = msgpack.Unpacker(f, max_buffer_size=2**31)
         manifest = unpacker.unpack()
         fmt = manifest.get("format", 1)
         _, treedef = _validate_manifest(manifest, like)
-        out = [jnp.asarray(_read_leaf(unpacker, meta, fmt))
-               for meta in manifest["leaves"]]
+        out = [jnp.asarray(_read_leaf(unpacker, meta, fmt, i))
+               for i, meta in enumerate(manifest["leaves"])]
     return jax.tree_util.tree_unflatten(treedef, out)

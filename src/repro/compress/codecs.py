@@ -139,7 +139,8 @@ def roundtrip(spec: CodecSpec, r: jnp.ndarray) -> jnp.ndarray:
 
 
 def apply(spec: Optional[CodecSpec], value: jnp.ndarray,
-          base: jnp.ndarray, *, use_pallas: bool = False) -> jnp.ndarray:
+          base: jnp.ndarray, *, use_pallas: bool = False,
+          guard: bool = False) -> jnp.ndarray:
     """Transmit ``value`` as a quantized residual against ``base``; return
     the receiver-side reconstruction (f32 math, cast back to value.dtype).
 
@@ -148,7 +149,20 @@ def apply(spec: Optional[CodecSpec], value: jnp.ndarray,
     int8 codec through the fused quantize-pack kernel
     (`repro.kernels.ops.residual_int8_pallas`); other codecs run the
     pure-JAX reference.
+
+    ``guard`` (DESIGN.md Sec. 17): residual-coded payloads are exactly
+    the layer where corruption must be contained — a non-finite residual
+    poisons the shared base and every later step built on it.  With the
+    guard on, rows of ``value`` with any NaN/Inf encode as a zero
+    residual, i.e. the receiver reconstructs the (finite, shared)
+    ``base`` row instead.  Clean rows are untouched (the select is an
+    all-true passthrough), so guarded-but-healthy wires stay
+    bit-identical.
     """
+    if guard and spec is not None and spec.kind != "none":
+        ok = jnp.isfinite(value).all(-1, keepdims=True)
+        value = jnp.where(ok, value, jnp.broadcast_to(
+            base, value.shape).astype(value.dtype))
     if spec is None or spec.kind == "none":
         return value
     if spec.kind == "int8_residual" and use_pallas:

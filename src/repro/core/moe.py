@@ -38,6 +38,8 @@ from repro.core.placement import Placement
 from repro.models.layers import dense_init
 from repro.obs import telemetry as obs_telemetry
 from repro.obs.telemetry import ObsConfig
+from repro.resilience import faults as fault_lib
+from repro.resilience.faults import ResilienceConfig
 
 
 # ---------------------------------------------------------------------------
@@ -255,6 +257,15 @@ class MoEAux(NamedTuple):
     #                                None unless an enabled ObsConfig is
     #                                passed, so obs=off graphs are
     #                                byte-identical to pre-obs builds
+    fault_events: Optional[jnp.ndarray] = None  # (faults.NUM_FAULT_EVENTS,)
+    #                                f32 in-graph fault accounting
+    #                                (DESIGN.md Sec. 17): [combine rows
+    #                                corrupted, combine rows guarded,
+    #                                dispatch rows corrupted, dispatch rows
+    #                                guarded].  None unless a
+    #                                ResilienceConfig is passed, so
+    #                                resilience=off graphs stay
+    #                                byte-identical
 
 
 def moe_forward(p, x, cfg: ModelConfig, *,
@@ -272,7 +283,9 @@ def moe_forward(p, x, cfg: ModelConfig, *,
                 reduce_axes=None,
                 hop_schedule=None,
                 num_wire_experts: Optional[int] = None,
-                obs: Optional[ObsConfig] = None):
+                obs: Optional[ObsConfig] = None,
+                resilience: Optional[ResilienceConfig] = None,
+                fault_salt: int = 0):
     """MoE layer forward.  x: (T, d) flat tokens (per-device shard if EP).
 
     ``ep_axis``: mesh axis name for expert parallelism — call inside
@@ -336,7 +349,23 @@ def moe_forward(p, x, cfg: ModelConfig, *,
     ``num_wire_experts == E`` (or ``None``) every code path below is
     exactly the historical one.  Requires ``ep_axis``; incompatible with
     ``placement`` (the pool serves canonical expert order).
+
+    ``resilience`` (DESIGN.md Sec. 17): deterministic NaN corruption of
+    the wire payloads (seeded from the traced step ``key``, rates are
+    closure constants so traces stay static) plus NaN/Inf guards that
+    absorb corrupted rows into the staleness fallbacks — a guarded
+    combine pair falls back to ``h_cache`` exactly like a cond-comm
+    masked pair, a guarded dispatch row to the codec base ``c_base`` (or
+    a zero contribution without one).  ``fault_salt`` (the layer index)
+    decorrelates injection across layers.  ``None`` keeps the graph
+    byte-identical; guards-on with clean payloads keeps outputs
+    bit-identical (the guard selects are all-true passthroughs).
     """
+    faults = resilience.faults if resilience is not None else None
+    guard = resilience.guards if resilience is not None else False
+    fe = None
+    if resilience is not None:
+        fe = jnp.zeros((fault_lib.NUM_FAULT_EVENTS,), jnp.float32)
     T, d = x.shape
     E = cfg.num_experts
     probs, scores, idx = route(p, x, cfg, key=key)
@@ -380,6 +409,26 @@ def moe_forward(p, x, cfg: ModelConfig, *,
         base = dispatch_base if dispatch_base is not None \
             else jnp.zeros_like(x)
         x_wire = codec_lib.apply(codec, x, base, use_pallas=use_pallas)
+    # ---- resilience, dispatch direction (DESIGN.md Sec. 17): corrupt
+    # token rows of the wire payload, then guard the buffer boundary —
+    # non-finite rows fall back to the codec base c_base (the previous
+    # step's decoded payload, already shared by both endpoints) or, with
+    # a lossless wire, to a zero row (the gated FFN maps zero rows to
+    # zero, so the token contributes nothing this layer, exactly like a
+    # capacity-dropped pair)
+    if faults is not None and faults.corrupt_dispatch_rate > 0:
+        cm = fault_lib.corruption_mask(key, faults.seed, fault_salt,
+                                       fault_lib.FE_CORRUPT_DISPATCH,
+                                       faults.corrupt_dispatch_rate, (T,))
+        x_wire = fault_lib.corrupt_rows(x_wire, cm)
+        fe = fe.at[fault_lib.FE_CORRUPT_DISPATCH].add(
+            cm.sum().astype(jnp.float32))
+    if guard:
+        row_ok = jnp.isfinite(x_wire).all(-1)
+        fe = fe.at[fault_lib.FE_GUARDED_DISPATCH].add(
+            jnp.sum(~row_ok).astype(jnp.float32))
+        fb = base if codec is not None else jnp.zeros_like(x_wire)
+        x_wire = jnp.where(row_ok[:, None], x_wire, fb)
     buf = dispatch(x_wire, plan, S, capacity)                   # (S, C, d)
 
     # ---- replica-served pairs: dispatch the SAME wire payload (x_wire —
@@ -484,7 +533,22 @@ def moe_forward(p, x, cfg: ModelConfig, *,
     # fresh-kept pairs still hold the raw (pre-reconstruction) wire value
     # here — the telemetry block below measures residual energy against
     # the cache on exactly these values, before the codec overwrites them
+    # (and before fault injection, so chaos runs keep clean residual
+    # telemetry)
     pair_vals_fresh = pair_vals
+    # ---- resilience, combine direction (DESIGN.md Sec. 17): corrupt the
+    # expert outputs of transmitted pairs, as a wire fault would
+    y_dirty = False
+    if faults is not None and faults.corrupt_combine_rate > 0:
+        hit = pair_keep if fresh_mask is None else (pair_keep & fresh_mask)
+        cm = fault_lib.corruption_mask(key, faults.seed, fault_salt,
+                                       fault_lib.FE_CORRUPT_COMBINE,
+                                       faults.corrupt_combine_rate,
+                                       pair_keep.shape) & hit
+        pair_vals = fault_lib.corrupt_rows(pair_vals, cm)
+        fe = fe.at[fault_lib.FE_CORRUPT_COMBINE].add(
+            cm.sum().astype(jnp.float32))
+        y_dirty = True
     recon = None
     if codec is not None and h_cache is not None:
         # ---- wire codec, combine direction: freshly transmitted pairs
@@ -497,9 +561,29 @@ def moe_forward(p, x, cfg: ModelConfig, *,
             else (pair_keep & fresh_mask)
         recon = codec_lib.apply(codec, pair_vals.astype(jnp.float32),
                                 h_cache.astype(jnp.float32),
-                                use_pallas=use_pallas)
+                                use_pallas=use_pallas, guard=guard)
         pair_vals = jnp.where(wire_ok[..., None],
                               recon.astype(pair_vals.dtype), pair_vals)
+        y = jnp.einsum("tk,tkd->td", scores.astype(jnp.float32),
+                       pair_vals.astype(jnp.float32))
+    # ---- resilience guard: a non-finite pair row falls back to its
+    # h_cache entry — the exact value a cond-comm masked pair would have
+    # used, so quality degrades like one extra light step for that pair —
+    # and is cleared from pair_keep so it can never be written back into
+    # the cache or counted as served.  Without a cache (sync schedule)
+    # the pair's contribution drops to zero, like a capacity drop.  With
+    # clean payloads every select is an all-true passthrough and the
+    # recomputed y is the same einsum on the same values: bit-identical.
+    if guard:
+        pair_ok = jnp.isfinite(pair_vals).all(-1)
+        fe = fe.at[fault_lib.FE_GUARDED_COMBINE].add(
+            jnp.sum(~pair_ok).astype(jnp.float32))
+        fb = h_cache.astype(pair_vals.dtype) if h_cache is not None \
+            else jnp.zeros_like(pair_vals)
+        pair_vals = jnp.where(pair_ok[..., None], pair_vals, fb)
+        pair_keep = pair_keep & pair_ok
+        y_dirty = True
+    if y_dirty:
         y = jnp.einsum("tk,tkd->td", scores.astype(jnp.float32),
                        pair_vals.astype(jnp.float32))
     if cfg.num_shared_experts:
@@ -562,5 +646,6 @@ def moe_forward(p, x, cfg: ModelConfig, *,
         counts=counts,
         served_counts=served_counts,
         telemetry=telemetry,
+        fault_events=fe,
     )
     return y.astype(x.dtype), aux

@@ -91,6 +91,23 @@ def ring_hop_schedule(n: int, *, devices_per_host: Optional[int] = None
                                        h)))
 
 
+def hop_anomaly(step_wall_s: float, baseline_s: float, factor: float,
+                *, floor_s: float = 0.0) -> bool:
+    """Classify a measured engine-tick walltime as a ring-hop anomaly.
+
+    The ring engine's steady-state tick time is dominated by its (n-1)
+    unrolled hops, so a tick that blows past ``factor x baseline`` (with
+    ``floor_s`` as an absolute deadline floor) indicates a slow or stuck
+    hop rather than normal jitter.  The resilience watchdog
+    (DESIGN.md §17) demotes ``ring -> blocking`` after ``demote_after``
+    consecutive anomalies; with no calibrated baseline yet, nothing is an
+    anomaly (warmup/compile ticks must not trip the watchdog).
+    """
+    if baseline_s <= 0.0:
+        return False
+    return step_wall_s > max(floor_s, factor * baseline_s)
+
+
 def ring_shift(x: jnp.ndarray, ep_axis: str, n: int, shift: int) -> jnp.ndarray:
     """One ring hop: device j's ``x`` moves to device (j + shift) % n.
 

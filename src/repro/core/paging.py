@@ -34,6 +34,7 @@ from __future__ import annotations
 import dataclasses
 import functools
 import threading
+import time
 from dataclasses import dataclass
 from typing import Any, Dict, Optional, Tuple
 
@@ -41,6 +42,12 @@ import numpy as np
 
 # the pooled (paged) leaves of one MoE layer's param dict, in fetch order
 EXPERT_LEAF_NAMES = ("experts_gate", "experts_up", "experts_down")
+
+
+class PagingFetchError(RuntimeError):
+    """A paging fetch failed (injected or real) past every retry, with the
+    stale-shard fallback disabled.  Carrying a dedicated type lets the
+    serving loop and tests distinguish a fetch fault from engine bugs."""
 
 
 @dataclass(frozen=True)
@@ -128,6 +135,14 @@ class ExpertPool:
         # emits a span from the runtime thread it runs on (DESIGN.md
         # Sec. 16); None keeps the fetch path free of any obs work
         self.tracer = None
+        # -- resilience (DESIGN.md Sec. 17): retry/backoff/deadline policy
+        # + seeded fault injection, set per run via set_resilience() -----
+        self.resilience = None            # Optional[ResilienceConfig]
+        self.fault_plan = None            # Optional[FaultPlan]
+        self.fetch_errors = 0             # failed fetch attempts (incl. retried)
+        self.fetch_retries = 0            # re-attempts issued
+        self.stale_fallbacks = 0          # fetches served from the stale shard
+        self._fetch_seq: Dict[Tuple[int, int], int] = {}  # (dev, layer) -> n
 
     # ------------------------------------------------------------------
     # geometry
@@ -203,34 +218,131 @@ class ExpertPool:
             self.validate_actions(variant.actions)
 
     # ------------------------------------------------------------------
+    # resilience policy (DESIGN.md Sec. 17)
+    # ------------------------------------------------------------------
+    def set_resilience(self, res) -> None:
+        """Install (or clear, with None) the run's ResilienceConfig; a
+        FaultPlan is derived from its seeded FaultConfig when present."""
+        from repro.resilience.faults import FaultPlan
+        with self._lock:
+            self.resilience = res
+            self.fault_plan = (FaultPlan(res.faults) if res is not None
+                               and res.faults is not None else None)
+
+    # ------------------------------------------------------------------
     # host-side fetch (the io_callback target)
     # ------------------------------------------------------------------
-    def _fetch_host(self, layer: int, dev: np.ndarray):
-        tracer = self.tracer
-        t_fetch = tracer.now() if tracer is not None else 0.0
-        j = int(dev)
+    def _slice_shards(self, layer: int, j: int):
+        """The pure copy: this device's contiguous shard of each expert
+        leaf.  No ledger side effects — callers reserve/commit around it."""
         lo = j * self.e_loc
         hi = lo + self.e_loc
-        shards = tuple(np.ascontiguousarray(self._layers[layer][k][lo:hi])
-                       for k in EXPERT_LEAF_NAMES)
-        nbytes = sum(s.nbytes for s in shards)
-        if tracer is not None:
-            tracer.complete("paged_fetch", t_fetch, cat="paging",
-                            args={"layer": layer, "dev": j,
-                                  "bytes": nbytes})
+        return tuple(np.ascontiguousarray(self._layers[layer][k][lo:hi])
+                     for k in EXPERT_LEAF_NAMES)
+
+    def _reserve(self, j: int, layer: int) -> bool:
+        """Claim a residency-window slot for ``layer`` on device ``j``
+        BEFORE the fallible copy (the budget model: the HBM slot is held
+        for the duration of the fetch).  Returns whether the layer was
+        already resident, so a failed fetch can release exactly what it
+        claimed."""
         with self._lock:
-            self.transfers += 1
-            self.bytes_transferred += nbytes
             window = self._resident.setdefault(j, [])
-            if layer in window:
+            was_resident = layer in window
+            if was_resident:
                 window.remove(layer)        # re-fetch refreshes residency
             window.append(layer)
             while len(window) > self._resident_window:
                 window.pop(0)
-            live = self.window_bytes(window)
+            return was_resident
+
+    def _release(self, j: int, layer: int, was_resident: bool) -> None:
+        """Undo a reservation after a failed fetch: the claimed slot must
+        not leak into the budget ledger across retries (a fetch that never
+        delivered bytes never occupied its slot)."""
+        with self._lock:
+            window = self._resident.get(j, [])
+            if not was_resident and layer in window:
+                window.remove(layer)
+
+    def _commit(self, j: int, nbytes: int) -> None:
+        """Record a delivered fetch: transfer counters plus the realized
+        residency peak (measured at commit, when the bytes truly land)."""
+        with self._lock:
+            self.transfers += 1
+            self.bytes_transferred += nbytes
+            live = self.window_bytes(self._resident.get(j, ()))
             if live > self._peak_resident:
                 self._peak_resident = live
-        return shards
+
+    def _fetch_host(self, layer: int, dev: np.ndarray):
+        """Reserve -> (fallible copy, with injection/retry/backoff under a
+        deadline) -> commit.  On exhaustion the reservation is released
+        and, when the resilience policy allows it, the still-resident
+        stale shard is served instead of crashing the engine — expert
+        weights are static, so the fallback is numerically identical and
+        only *recorded* as extra staleness (DESIGN.md Sec. 17 rung 1)."""
+        tracer = self.tracer
+        t_fetch = tracer.now() if tracer is not None else 0.0
+        j = int(dev)
+        res = self.resilience
+        fplan = self.fault_plan
+        with self._lock:
+            seq = self._fetch_seq[(j, layer)] = \
+                self._fetch_seq.get((j, layer), 0) + 1
+        was_resident = self._reserve(j, layer)
+        retries = res.paging_retries if res is not None else 0
+        deadline = res.paging_deadline_s if res is not None else 0.0
+        t_start = time.perf_counter()
+        err = None
+        for attempt in range(retries + 1):
+            try:
+                if fplan is not None:
+                    if fplan.paging_delay(layer, j, seq, attempt):
+                        time.sleep(fplan.cfg.paging_delay_s)
+                    if fplan.paging_error(layer, j, seq, attempt):
+                        raise PagingFetchError(
+                            f"injected paging fetch fault (layer {layer}, "
+                            f"dev {j}, seq {seq}, attempt {attempt})")
+                shards = self._slice_shards(layer, j)
+                nbytes = sum(s.nbytes for s in shards)
+                self._commit(j, nbytes)
+                if tracer is not None:
+                    tracer.complete("paged_fetch", t_fetch, cat="paging",
+                                    args={"layer": layer, "dev": j,
+                                          "bytes": nbytes,
+                                          "attempt": attempt})
+                return shards
+            except PagingFetchError as e:
+                err = e
+                with self._lock:
+                    self.fetch_errors += 1
+                if attempt < retries:
+                    backoff = (res.paging_backoff_s * (2 ** attempt)
+                               if res is not None else 0.0)
+                    if deadline > 0 and (time.perf_counter() - t_start
+                                         + backoff) > deadline:
+                        break               # retrying would bust the deadline
+                    with self._lock:
+                        self.fetch_retries += 1
+                    if backoff > 0:
+                        time.sleep(backoff)
+        # every retry failed (or the deadline cut them short): release the
+        # reservation so the claimed window slot cannot leak budget
+        self._release(j, layer, was_resident)
+        if res is not None and res.stale_fallback:
+            with self._lock:
+                self.stale_fallbacks += 1
+            if tracer is not None:
+                tracer.complete("paged_fetch_fallback", t_fetch,
+                                cat="paging",
+                                args={"layer": layer, "dev": j})
+            # the weights are static host arrays, so the "stale" shard is
+            # bit-identical data; no transfer is counted (nothing new
+            # crossed the wire) and the degradation surfaces only in the
+            # stale_fallbacks counter / obs
+            return self._slice_shards(layer, j)
+        raise err
 
     @property
     def peak_resident_bytes(self) -> int:
@@ -245,6 +357,10 @@ class ExpertPool:
             self.bytes_transferred = 0
             self._resident = {}
             self._peak_resident = 0
+            self.fetch_errors = 0
+            self.fetch_retries = 0
+            self.stale_fallbacks = 0
+            self._fetch_seq = {}
 
     # ------------------------------------------------------------------
     # traced fetch

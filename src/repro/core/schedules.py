@@ -23,6 +23,7 @@ from typing import Optional, Tuple, Union
 from repro.compress.codecs import CompressConfig
 from repro.core.paging import PagingSpec
 from repro.core.placement import Placement
+from repro.resilience.faults import ResilienceConfig
 
 
 class Schedule(enum.Enum):
@@ -90,6 +91,15 @@ class DiceConfig:
     # (repro.core.paging.normalize_paging), so mesh-less runs stay
     # bit-identical to fully-resident configs.
     paging: Optional[PagingSpec] = None
+    # -- resilience level: fault injection + degraded modes --------------------
+    # (DESIGN.md Sec. 17) seeded deterministic fault injection plus the
+    # degradation ladder (wire guards, paging retry/stale-fallback, variant
+    # demotion, quarantine, bounded admission).  Rides inside the config
+    # like compress/paging — the planner ignores it, so plans, jit
+    # signatures, and the plan-variant count are untouched; None (the
+    # default) keeps graphs byte-identical to the pre-resilience stack.
+    # Normalized by repro.resilience.faults.normalize_resilience.
+    resilience: Optional[ResilienceConfig] = None
 
     def __post_init__(self):
         if self.overlap not in ("blocking", "ring"):

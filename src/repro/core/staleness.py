@@ -214,7 +214,8 @@ def apply_layer_action(p, x, cfg: ModelConfig, action: LayerAction,
                        slot_fresh=None, consume_mask=None,
                        reduce_axes=None, hop_schedule=None,
                        num_wire_experts: Optional[int] = None,
-                       obs: Optional[ObsConfig] = None):
+                       obs: Optional[ObsConfig] = None,
+                       resilience=None, layer_idx: int = 0):
     """Execute one MoE layer under a planned :class:`LayerAction`.
 
     x: (T, d) flat tokens.  All schedule decisions (mode, mask, capacity,
@@ -230,7 +231,10 @@ def apply_layer_action(p, x, cfg: ModelConfig, action: LayerAction,
     (T, K) carries the per-slot conditional-communication mask (all-fresh
     rows for warmup slots, the local step's policy mask for established
     slots).  ``None`` for both (the default) is the ordinary uniform-batch
-    path.  Returns (y, new_state, aux).
+    path.  ``resilience`` / ``layer_idx`` thread the fault-injection and
+    wire-guard config (DESIGN.md Sec. 17) down to :func:`moe_forward`,
+    with the layer index as the per-layer injection salt; ``None`` keeps
+    the traced graph byte-identical.  Returns (y, new_state, aux).
     """
     mask = None
     if action.mask_policy is not None:
@@ -270,7 +274,8 @@ def apply_layer_action(p, x, cfg: ModelConfig, action: LayerAction,
                            reduce_axes=reduce_axes,
                            hop_schedule=hop_schedule,
                            num_wire_experts=num_wire_experts,
-                           obs=obs)
+                           obs=obs, resilience=resilience,
+                           fault_salt=layer_idx)
 
     def next_base(payload, aux):
         """Residual base for the next wire transmission (Sec. 11): the
@@ -340,7 +345,9 @@ def apply_layer_action(p, x, cfg: ModelConfig, action: LayerAction,
                      counts=aux0.counts + aux1.counts,
                      served_counts=aux0.served_counts + aux1.served_counts,
                      telemetry=obs_telemetry.merge_staggered(
-                         aux0.telemetry, aux1.telemetry))
+                         aux0.telemetry, aux1.telemetry),
+                     fault_events=None if aux0.fault_events is None
+                     else aux0.fault_events + aux1.fault_events)
         return out, new, obs_telemetry.stamp_age(aux, action, obs)
 
     # "interweaved": dispatch of x(s) completes within step s (overlapped

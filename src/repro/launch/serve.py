@@ -43,6 +43,9 @@ from repro.core.conditional import comm_volume_fraction
 from repro.models.dit_moe import init_dit
 from repro.obs import MetricsRegistry, ObsConfig, StepTracer
 from repro.obs import telemetry as obs_fields
+from repro.resilience import degrade as degrade_lib
+from repro.resilience import faults as fault_lib
+from repro.resilience import recovery as recovery_lib
 from repro.sampling.rectified_flow import make_rf_step, rf_sample
 
 
@@ -442,7 +445,8 @@ class DiceServer:
                  devices_per_host: int = 0,
                  inter_host_bw: Optional[float] = None,
                  obs: Optional[ObsConfig] = None,
-                 metrics: Optional[MetricsRegistry] = None):
+                 metrics: Optional[MetricsRegistry] = None,
+                 resilience: Optional[fault_lib.ResilienceConfig] = None):
         # observability plane (DESIGN.md Sec. 16): the registry is the
         # single source of truth the serving loops publish into (their
         # summary dicts are views of it); the tracer records host phases
@@ -469,6 +473,13 @@ class DiceServer:
             # config; the samplers normalize it away on mesh-less / 1-dev
             # runs, exactly like overlap and placement
             dcfg = dataclasses.replace(dcfg, paging=paging)
+        resilience = fault_lib.normalize_resilience(resilience)
+        if resilience is not None:
+            # degradation-ladder policy (DESIGN.md Sec. 17): rides inside
+            # DiceConfig like compress/paging; the planner ignores it, so
+            # plans, variants, and jit-cache counts are untouched, and
+            # None keeps every traced graph byte-identical
+            dcfg = dataclasses.replace(dcfg, resilience=resilience)
         n_ep = (mesh.shape[ep_axis]
                 if mesh is not None and ep_axis in mesh.axis_names else 1)
         if n_dev is None:
@@ -524,6 +535,11 @@ class DiceServer:
             dcfg = paging_lib.resolve_budget(dcfg, self.expert_pool)
             self.dcfg = dcfg
             self.params = paging_lib.strip_expert_params(self.params)
+        if self.expert_pool is not None:
+            # the pool's retry/fallback policy + seeded fetch faults
+            # (DESIGN.md Sec. 17 rung 1) follow the server's config
+            self.expert_pool.set_resilience(
+                fault_lib.resilience_of(self.dcfg))
         if mesh is not None:
             # place once at construction; the per-batch ep_shard_params
             # inside make_rf_step then sees an already-sharded tree and
@@ -747,6 +763,15 @@ def serve_continuous(server: "DiceServer", requests: List[Request], *,
     dcfg = plan_lib.normalize_placement(dcfg, n_ep)
     # and paging (Sec. 15): one device holds every expert locally
     dcfg = paging_lib.normalize_paging(dcfg, n_ep)
+    # resilience (DESIGN.md Sec. 17): the in-graph half (guards, seeded
+    # corruption) rides in dcfg as a closure constant; the host-side
+    # ladder — paging retry/fallback, watchdog demotion, quarantine,
+    # bounded admission — lives in this loop.  res None keeps every code
+    # path below byte-identical to the pre-resilience engine.
+    res = fault_lib.resilience_of(dcfg)
+    fplan = (fault_lib.FaultPlan(res.faults)
+             if res is not None and res.faults is not None else None)
+    ctrl = degrade_lib.DegradationController(res) if res is not None else None
     pool = (server.expert_pool
             if paging_lib.paging_of(dcfg) is not None else None)
     if paging_lib.paging_of(dcfg) is not None:
@@ -848,9 +873,16 @@ def serve_continuous(server: "DiceServer", requests: List[Request], *,
     slots = [_Slot() for _ in range(B)]
     ever_used = [False] * B
 
-    pending = sorted(
-        ((0.0 if arrival_steps is None else float(arrival_steps[i]), i, r)
-         for i, r in enumerate(requests)), key=lambda a: (a[0], a[1]))
+    # bounded admission (Sec. 17 rungs 4-5): with no ResilienceConfig the
+    # queue is unbounded and reproduces the legacy sorted-pending-list
+    # semantics exactly (FIFO by arrival then index; nothing is ever shed)
+    queue = recovery_lib.AdmissionQueue(
+        max_queue_depth=res.max_queue_depth if res is not None else 0,
+        admission_deadline_steps=(res.admission_deadline_steps
+                                  if res is not None else 0))
+    for i, r in enumerate(requests):
+        queue.push(0.0 if arrival_steps is None else float(arrival_steps[i]),
+                   r)
     out: dict = {}
     tick = 0
     t0 = time.time()
@@ -859,7 +891,38 @@ def serve_continuous(server: "DiceServer", requests: List[Request], *,
         g = int(np.ceil(g))
         return g + (-g) % period
 
-    while pending or any(s.active for s in slots):
+    while len(queue) or any(s.active for s in slots):
+        # ---- watchdog variant demotion at aligned boundaries (Sec. 17) ---
+        # repeated step-deadline breaches while the ring engine is live
+        # demote overlap ring->blocking; repeated codec-error blowups
+        # demote codec->none.  Same controlled plan-swap machinery as the
+        # placement re-shard below: peak jit-cache folds in via the
+        # max-gauge, the rebuild swaps dcfg, nothing ever crashes.
+        if ctrl is not None and tick % period == 0:
+            kind = ctrl.should_demote(
+                ring_live=bool(plan_lib.overlap_of(dcfg)),
+                codec_live=plan_lib.codec_spec_of(dcfg) is not None)
+            if kind is not None:
+                reg.gauge("dice_jit_cache_size",
+                          "jit cache entries of the step fn",
+                          lab).set_max(int(rf_step._cache_size()))
+                if tracer is not None:
+                    tracer.instant("demote", args={"kind": kind,
+                                                   "tick": tick})
+                if kind == degrade_lib.DEMOTE_OVERLAP:
+                    dcfg = dataclasses.replace(dcfg, overlap="blocking")
+                else:
+                    dcfg = dataclasses.replace(dcfg, compress=None)
+                splan, merge_plan, rf_step = _build(dcfg)
+                period = plan_lib.steady_period(dcfg, cfg.num_layers,
+                                                experts_per_token=k_exp)
+                merge_wants_cache = any(a.want_cache
+                                        for a in merge_plan.actions)
+                ctrl.record_demotion(kind)
+                reg.counter("dice_demotions_total",
+                            "watchdog variant demotions",
+                            {**lab, "kind": kind}).inc()
+
         # ---- drift-triggered re-shard at aligned boundaries --------------
         # (same cadence as admission: every established slot is at a plan-
         # cycle boundary, so swapping the placement epoch never splits a
@@ -897,9 +960,11 @@ def serve_continuous(server: "DiceServer", requests: List[Request], *,
         if tick % period == 0:
             recycle = np.zeros(B, bool)
             for i, slot in enumerate(slots):
-                if slot.active or not pending or pending[0][0] > tick:
+                if slot.active:
                     continue
-                _, _, req = pending.pop(0)
+                req = queue.pop_ready(tick)
+                if req is None:
+                    break
                 slots[i] = _Slot(rid=req.rid, class_id=req.class_id,
                                  local_step=0, active=True)
                 recycle[i] = True
@@ -917,6 +982,14 @@ def serve_continuous(server: "DiceServer", requests: List[Request], *,
                         "recycled": bool(ever_used[i])})
                 admit_time[req.rid] = time.perf_counter()
                 ever_used[i] = True
+            # load shedding (Sec. 17 rung 5): only when a depth bound or
+            # admission deadline is configured — a no-op ([], peak-depth
+            # bookkeeping only) on the unbounded default
+            for rid in queue.shed_overdue(tick, retry_after=float(period)):
+                reg.counter("dice_shed_requests_total",
+                            "requests shed by admission bounds", lab).inc()
+                if tracer is not None:
+                    tracer.instant("shed", args={"rid": rid, "tick": tick})
             if recycle.any():
                 m = jnp.asarray(recycle)
                 states = stale_lib.reset_slots(states, m, tokens_per_slot=Tp)
@@ -931,8 +1004,11 @@ def serve_continuous(server: "DiceServer", requests: List[Request], *,
                                                       ep_axis=b_dim)
                     x = _place(x)
         if not any(s.active for s in slots):
+            nxt = queue.next_arrival()
+            if nxt is None:
+                break          # everything remaining was shed
             # fully idle: jump to the next aligned tick with an arrival
-            tick = _next_aligned(max(pending[0][0], tick + 1))
+            tick = _next_aligned(max(nxt, tick + 1))
             continue
 
         # ---- one engine tick --------------------------------------------
@@ -973,16 +1049,36 @@ def serve_continuous(server: "DiceServer", requests: List[Request], *,
                 x, jnp.asarray(classes), states, states_u, {}, {}, t,
                 jax.random.fold_in(step_key, tick), plan=plan,
                 slotted=slotted, slot_fresh=slot_fresh, consume_mask=consume)
-            if obs_on:
+            if (fplan is not None and plan_lib.overlap_of(dcfg)
+                    and fplan.hop_delay(tick)):
+                # injected slow ring hop (Sec. 17): host-visible, so the
+                # watchdog sees the walltime breach.  Gated on the LIVE
+                # engine — demoting ring->blocking stops the injection,
+                # the closed loop the chaos test asserts.
+                reg.counter("dice_injected_hop_delays_total",
+                            "injected slow ring hops", lab).inc()
+                time.sleep(fplan.cfg.hop_delay_s)
+            if obs_on or ctrl is not None:
                 # measured (not modeled) per-tick walltime; the sync is
-                # obs-gated so the default async dispatch is untouched
+                # obs/watchdog-gated so the default async dispatch is
+                # untouched
                 jax.block_until_ready(x)
+        wall = time.perf_counter() - t_tick
         if obs_on:
             reg.histogram("dice_step_wall_seconds",
                           "measured wall seconds per engine tick",
-                          lab).observe(time.perf_counter() - t_tick)
+                          lab).observe(wall)
             if "telemetry" in aux:
                 _publish_telemetry_step(reg, aux["telemetry"], lab)
+        if ctrl is not None:
+            codec_err = None
+            if "telemetry" in aux:
+                codec_err = float(np.asarray(
+                    aux["telemetry"])[:, obs_fields.CODEC_ERR].mean())
+            if ctrl.observe_step(wall, codec_err):
+                reg.counter("dice_watchdog_breaches_total",
+                            "engine-tick step-deadline breaches",
+                            lab).inc()
 
         n_free = sum(not s.active for s in slots)
         reg.counter("dice_ticks_total", "engine ticks executed", lab).inc()
@@ -994,7 +1090,16 @@ def serve_continuous(server: "DiceServer", requests: List[Request], *,
         reg.series("dice_slot_occupancy", "active-slot fraction per tick",
                    lab).append(1.0 - n_free / B)
         reg.series("dice_queue_depth", "requests still waiting",
-                   lab).append(len(pending))
+                   lab).append(len(queue))
+        if "fault_events" in aux:
+            fe = np.asarray(aux["fault_events"])
+            for idx, nm in enumerate(("corrupt_combine", "guarded_combine",
+                                      "corrupt_dispatch",
+                                      "guarded_dispatch")):
+                if fe[idx]:
+                    reg.counter("dice_fault_events_total",
+                                "in-graph wire corruption / guard events",
+                                {**lab, "event": nm}).inc(float(fe[idx]))
         hist.update(np.asarray(aux["expert_counts"]))
         reg.counter("dice_dispatch_bytes_total", "dispatch payload moved",
                     lab).inc(float(aux["dispatch_bytes"]))
@@ -1011,6 +1116,60 @@ def serve_continuous(server: "DiceServer", requests: List[Request], *,
         reg.gauge("dice_buffer_bytes",
                   "persistent staleness-buffer footprint",
                   lab).set(int(aux["buffer_bytes"]))
+
+        # ---- slot quarantine (Sec. 17 rung 4) ----------------------------
+        # a non-finite lane — corruption that escaped the wire guards, or
+        # the deterministic poison_tick injection — is quarantined BEFORE
+        # the completion scan: its staleness rows reset, its lane zeroed
+        # (so no NaN pollutes ring peers on the next tick), its request
+        # requeued for a deterministic replay (request_noise is rid-keyed)
+        # up to max_requeues, then shed.
+        if res is not None and res.quarantine:
+            if fplan is not None and fplan.poison(tick):
+                victim = next((i for i, s in enumerate(slots) if s.active),
+                              None)
+                if victim is not None:
+                    x = x.at[victim].set(jnp.nan)
+                    if tracer is not None:
+                        tracer.instant("poison", args={"slot": victim,
+                                                       "tick": tick})
+            bad = ~np.isfinite(np.asarray(x).reshape(B, -1)).all(axis=1)
+            hit = [i for i in range(B) if bad[i] and slots[i].active]
+            if hit:
+                qm = np.zeros(B, bool)
+                for i in hit:
+                    slot = slots[i]
+                    reg.counter("dice_quarantined_slots_total",
+                                "poisoned slots quarantined", lab).inc()
+                    if tracer is not None:
+                        tracer.instant("quarantine", args={
+                            "rid": slot.rid, "slot": i, "tick": tick})
+                    if queue.requeue(tick, Request(class_id=slot.class_id,
+                                                   rid=slot.rid),
+                                     res.max_requeues):
+                        reg.counter("dice_requeued_requests_total",
+                                    "quarantined requests requeued",
+                                    lab).inc()
+                    else:
+                        reg.counter("dice_shed_requests_total",
+                                    "requests shed by admission bounds",
+                                    lab).inc()
+                    admit_time.pop(slot.rid, None)
+                    qm[i] = True
+                    slots[i] = _Slot()
+                    classes[i] = cfg.num_classes
+                m = jnp.asarray(qm)
+                x = jnp.where(m[:, None, None], 0.0, x)
+                states = stale_lib.reset_slots(states, m,
+                                               tokens_per_slot=Tp)
+                states_u = stale_lib.reset_slots(states_u, m,
+                                                 tokens_per_slot=Tp)
+                if mesh is not None:
+                    states = stale_lib.shard_states(states, mesh,
+                                                    ep_axis=b_dim)
+                    states_u = stale_lib.shard_states(states_u, mesh,
+                                                      ep_axis=b_dim)
+                    x = _place(x)
 
         for i, slot in enumerate(slots):
             if not slot.active:
@@ -1089,6 +1248,30 @@ def serve_continuous(server: "DiceServer", requests: List[Request], *,
             reg.value("dice_placement_reshards_total", lab)),
         "placement_wire_scale": plan_lib.placement_wire_scale(dcfg),
     }
+
+    def _cnt(name, labels=lab):
+        return reg.value(name, labels) if reg.get(name, labels) is not None \
+            else 0.0
+
+    if res is not None:
+        # resilience observability (Sec. 17): every rung's event counts,
+        # all views of the same registry the tracer/metrics exports carry
+        stats.update({
+            "quarantined": int(_cnt("dice_quarantined_slots_total")),
+            "requeued": int(_cnt("dice_requeued_requests_total")),
+            "shed": len(queue.shed),
+            "shed_rids": sorted(rid for rid, _ in queue.shed),
+            "queue_peak_depth": queue.peak_depth,
+            "watchdog_breaches": int(_cnt("dice_watchdog_breaches_total")),
+            "injected_hop_delays": int(
+                _cnt("dice_injected_hop_delays_total")),
+            "demotions": list(ctrl.demotions),
+            "fault_events": {
+                nm: float(_cnt("dice_fault_events_total",
+                               {**lab, "event": nm}))
+                for nm in ("corrupt_combine", "guarded_combine",
+                           "corrupt_dispatch", "guarded_dispatch")},
+        })
     if pool is not None:
         # drain in-flight fetches before reading the ledger (Sec. 15)
         jax.block_until_ready(x)
@@ -1105,6 +1288,19 @@ def serve_continuous(server: "DiceServer", requests: List[Request], *,
         stats["paged_bytes_in"] = pool.bytes_transferred
         stats["peak_resident_expert_bytes"] = pool.peak_resident_bytes
         stats["expert_hbm_budget"] = paging_lib.paging_of(dcfg).budget_bytes
+        if res is not None:
+            reg.counter("dice_paging_fetch_errors_total",
+                        "failed expert-shard fetch attempts",
+                        lab).inc(pool.fetch_errors)
+            reg.counter("dice_paging_fetch_retries_total",
+                        "expert-shard fetch re-attempts",
+                        lab).inc(pool.fetch_retries)
+            reg.counter("dice_paging_stale_fallbacks_total",
+                        "fetches served from the stale resident shard",
+                        lab).inc(pool.stale_fallbacks)
+            stats["paging_fetch_errors"] = pool.fetch_errors
+            stats["paging_fetch_retries"] = pool.fetch_retries
+            stats["paging_stale_fallbacks"] = pool.stale_fallbacks
     server.metrics.merge(reg)
     return out, stats
 
@@ -1203,6 +1399,14 @@ def main():
                     help="write the metrics registry here after the run: "
                          "Prometheus text, or a JSON snapshot when the "
                          "path ends in .json (implies --obs)")
+    ap.add_argument("--faults", default=None,
+                    help="resilience / chaos spec (DESIGN.md Sec. 17): "
+                         "comma-separated key=value, e.g. 'seed=7,"
+                         "corrupt=0.05,paging_err=0.3,hop_delay=0.5:0.01,"
+                         "queue=16'.  Fault keys inject seeded failures; "
+                         "policy keys (guards, retries, quarantine, "
+                         "demote_after, queue, admit_deadline, requeues) "
+                         "tune the degradation ladder.  'off' disables")
     args = ap.parse_args()
 
     cfg = tiny() if args.tiny else xl_config()
@@ -1230,6 +1434,7 @@ def main():
         from repro.launch.mesh import make_mesh
         mesh = make_mesh(ep=max(1, args.ep), dp=args.dp, patch=args.patch)
     obs_on = bool(args.obs or args.trace_out or args.metrics_out)
+    resilience = fault_lib.parse_resilience(args.faults)
     server = DiceServer(cfg, dcfg, params=params, n_dev=args.n_dev,
                         mesh=mesh,
                         compress=CompressConfig(codec=args.codec,
@@ -1242,7 +1447,8 @@ def main():
                         expert_pool=expert_pool,
                         devices_per_host=args.devices_per_host,
                         inter_host_bw=args.inter_host_bw,
-                        obs=ObsConfig(enabled=obs_on))
+                        obs=ObsConfig(enabled=obs_on),
+                        resilience=resilience)
     reqs = [Request(class_id=i % cfg.num_classes, rid=i)
             for i in range(args.requests)]
     splan = server.plan(args.steps)
@@ -1258,7 +1464,11 @@ def main():
           + (f", paging on (pool {server.expert_pool.num_experts}->"
              f"{server.expert_pool.num_wire_experts} experts, budget "
              f"{paging_lib.paging_of(server.dcfg).budget_bytes} B/dev)"
-             if server.expert_pool is not None else ""))
+             if server.expert_pool is not None else "")
+          + (", resilience on"
+             + (f" (fault seed {resilience.faults.seed})"
+                if resilience.faults is not None else "")
+             if fault_lib.resilience_of(server.dcfg) is not None else ""))
     print(f"step plan: {splan.num_variants} compiled variants for "
           f"{splan.num_steps} steps "
           f"({[len(splan.steps_of_variant(v)) for v in range(splan.num_variants)]} "
@@ -1273,10 +1483,17 @@ def main():
             print(f"wrote metrics to {args.metrics_out}")
 
     if args.continuous:
+        arrivals = None
+        if (resilience is not None and resilience.faults is not None
+                and resilience.faults.burst_size > 0):
+            arrivals = fault_lib.bursty_arrivals(
+                len(reqs), rate=1.0,
+                burst_size=resilience.faults.burst_size)
         out, stats = serve_continuous(server, reqs,
                                       max_batch=args.max_batch,
                                       num_steps=args.steps,
-                                      guidance=args.guidance)
+                                      guidance=args.guidance,
+                                      arrival_steps=arrivals)
         finite = all(bool(np.isfinite(s).all()) for s in out.values())
         print(f"served {len(out)} requests continuously, finite={finite}")
         for k, v in stats.items():

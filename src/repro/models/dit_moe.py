@@ -32,6 +32,7 @@ from repro.core import moe as moe_lib
 from repro.models import layers as L
 from repro.obs import telemetry as obs_telemetry
 from repro.obs.telemetry import ObsConfig
+from repro.resilience import faults as fault_lib
 
 
 # ---------------------------------------------------------------------------
@@ -159,6 +160,10 @@ def dit_forward(params, x, t, y, cfg: ModelConfig, dcfg: DiceConfig,
             raise TypeError("dit_forward needs either plan= or step_idx=")
         plan = plan_lib.plan_for_step(dcfg, cfg.num_layers, step_idx,
                                       experts_per_token=cfg.experts_per_token)
+    # resilience rides inside dcfg (a closure constant, like obs): the
+    # planner ignores it, so plans/variants are untouched and None keeps
+    # the traced graph byte-identical (DESIGN.md Sec. 17)
+    res = fault_lib.resilience_of(dcfg)
     paged = any(a.paging is not None for a in plan.actions)
     if paged and expert_pool is None:
         raise ValueError("the plan carries expert paging but no expert_pool "
@@ -194,6 +199,8 @@ def dit_forward(params, x, t, y, cfg: ModelConfig, dcfg: DiceConfig,
     dropped = 0.0
     served_counts = []
     telems = []
+    fault_events = jnp.zeros((fault_lib.NUM_FAULT_EVENTS,), jnp.float32) \
+        if res is not None else None
 
     for i, blk in enumerate(params["blocks"]):
         if paged and plan.actions[i].paging is not None:
@@ -235,7 +242,8 @@ def dit_forward(params, x, t, y, cfg: ModelConfig, dcfg: DiceConfig,
             with obs_telemetry.scope(obs, f"moe_l{i:02d}_distrifusion"):
                 moe_out, aux = moe_lib.moe_forward(blk["moe"], flat, cfg,
                                                    use_pallas=use_pallas,
-                                                   obs=obs)
+                                                   obs=obs, resilience=res,
+                                                   fault_salt=i)
             new_st = stale_lib.MoELayerState()
         else:
             flat = hn.reshape(B * T, d)
@@ -259,7 +267,8 @@ def dit_forward(params, x, t, y, cfg: ModelConfig, dcfg: DiceConfig,
                     key=key, ep_axis=ep_axis, use_pallas=use_pallas,
                     slot_fresh=slot_fresh, consume_mask=consume_mask,
                     reduce_axes=reduce_axes, hop_schedule=hop_schedule,
-                    num_wire_experts=wire_E, obs=obs)
+                    num_wire_experts=wire_E, obs=obs,
+                    resilience=res, layer_idx=i)
             if patch_axis is not None:
                 new_st = stale_lib.unflatten_state(new_st, B, T)
         new_states[i] = new_st
@@ -272,6 +281,8 @@ def dit_forward(params, x, t, y, cfg: ModelConfig, dcfg: DiceConfig,
         dropped += aux.dropped_frac
         served_counts.append(aux.served_counts)
         telems.append(aux.telemetry)
+        if fault_events is not None and aux.fault_events is not None:
+            fault_events = fault_events + aux.fault_events
         h = h + g2[:, None, :] * moe_out.reshape(B, T, d).astype(h.dtype)
 
     fmod = jax.nn.silu(c) @ params["final_mod"]
@@ -301,6 +312,11 @@ def dit_forward(params, x, t, y, cfg: ModelConfig, dcfg: DiceConfig,
         # keyed into aux only when obs is on so the off graph (and its
         # pytree structure) is exactly the historical one
         aux_out["telemetry"] = jnp.stack(telems)
+    if fault_events is not None:
+        # (NUM_FAULT_EVENTS,) in-graph fault accounting summed over layers
+        # (Sec. 17) — keyed in only when resilience is on, same discipline
+        # as telemetry
+        aux_out["fault_events"] = fault_events
     mean_axes = reduce_axes if reduce_axes is not None else ep_axis
     if mean_axes is not None:
         # mesh-native execution (inside shard_map): token-mean quantities
@@ -324,6 +340,11 @@ def dit_forward(params, x, t, y, cfg: ModelConfig, dcfg: DiceConfig,
             # on every shard, so the mean is exact for it)
             aux_out["telemetry"] = jax.lax.pmean(aux_out["telemetry"],
                                                  mean_axes)
+        if "fault_events" in aux_out:
+            # psum, not pmean: fault events are shard-local COUNTS, and
+            # the registry wants the global total
+            aux_out["fault_events"] = jax.lax.psum(aux_out["fault_events"],
+                                                   mean_axes)
         scale = 1
         for ax in ((mean_axes,) if isinstance(mean_axes, str)
                    else tuple(mean_axes)):

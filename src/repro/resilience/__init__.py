@@ -1,0 +1,17 @@
+from repro.resilience.faults import (
+    FE_CORRUPT_COMBINE,
+    FE_CORRUPT_DISPATCH,
+    FE_GUARDED_COMBINE,
+    FE_GUARDED_DISPATCH,
+    NUM_FAULT_EVENTS,
+    FaultConfig,
+    FaultPlan,
+    ResilienceConfig,
+    bursty_arrivals,
+    corruption_mask,
+    normalize_resilience,
+    parse_resilience,
+    resilience_of,
+)
+from repro.resilience.degrade import DegradationController
+from repro.resilience.recovery import AdmissionQueue

@@ -34,6 +34,7 @@ from repro.core.schedules import DiceConfig
 from repro.models.dit_moe import dit_forward, dit_train_forward
 from repro.obs.telemetry import ObsConfig
 from repro.optim.adamw import adamw_update, clip_by_global_norm, cosine_schedule
+from repro.resilience import faults as fault_lib
 
 
 # ---------------------------------------------------------------------------
@@ -276,6 +277,10 @@ def _make_mesh_rf_step(params, cfg: ModelConfig, dcfg: DiceConfig, *,
             # telemetry is pmean'd inside the mapped body like the other
             # aux reductions -> replicated (DESIGN.md Sec. 16)
             aux_spec["telemetry"] = P()
+        if fault_lib.resilience_of(dcfg) is not None:
+            # in-graph fault accounting, psum'd inside the mapped body ->
+            # replicated global counts (DESIGN.md Sec. 17)
+            aux_spec["fault_events"] = P()
         ops = (params, x, classes, states, states_u, patch_states,
                patch_states_u, t, key, patch_fresh)
         in_specs = (pspecs, x_spec, b_spec, st_spec, stu_spec, pst_spec,

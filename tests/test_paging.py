@@ -224,6 +224,92 @@ def test_resolve_budget_auto_sentinel():
 
 
 # ---------------------------------------------------------------------------
+# fetch resilience (ISSUE 10): retry/backoff, stale fallback, and the
+# no-budget-leak reservation ledger
+# ---------------------------------------------------------------------------
+def _res(**kw):
+    from repro.resilience import FaultConfig, ResilienceConfig
+    fault_kw = {k: kw.pop(k) for k in list(kw)
+                if k in ("seed", "paging_error_rate")}
+    return ResilienceConfig(faults=FaultConfig(**fault_kw) if fault_kw
+                            else None, **kw)
+
+
+def test_fetch_error_releases_reservation_no_budget_leak():
+    # a fetch that never delivered bytes must not occupy a window slot,
+    # count a transfer, or move the residency peak — across ALL retries
+    pool = ExpertPool(_layers(num_layers=4, e=8), n_dev=4)
+    pool._resident_window = 2
+    pool.set_resilience(_res(seed=0, paging_error_rate=1.0,
+                             paging_retries=2, paging_backoff_s=0.0,
+                             stale_fallback=False))
+    from repro.core.paging import PagingFetchError
+    for layer in range(4):
+        with pytest.raises(PagingFetchError, match="injected"):
+            pool._fetch_host(layer, np.int32(0))
+    assert pool.transfers == 0
+    assert pool.bytes_transferred == 0
+    assert pool.peak_resident_bytes == 0
+    assert pool._resident.get(0, []) == []           # nothing leaked
+    assert pool.fetch_errors == 4 * 3                # every attempt failed
+    assert pool.fetch_retries == 4 * 2
+    # the pool still works once the fault clears
+    pool.set_resilience(_res(stale_fallback=True))
+    shards = pool._fetch_host(0, np.int32(0))
+    np.testing.assert_array_equal(shards[0], pool._slice_shards(0, 0)[0])
+    assert pool.transfers == 1 and pool._resident[0] == [0]
+
+
+def test_fetch_retry_then_success():
+    # find a seed where attempt 0 rolls a fault and attempt 1 does not:
+    # the retry path must deliver the shard and count exactly one error
+    from repro.resilience.faults import FaultPlan, FaultConfig
+    rate = 0.5
+    seed = next(s for s in range(1000)
+                if FaultPlan(FaultConfig(s, paging_error_rate=rate)
+                             ).paging_error(0, 0, 1, 0)
+                and not FaultPlan(FaultConfig(s, paging_error_rate=rate)
+                                  ).paging_error(0, 0, 1, 1))
+    pool = ExpertPool(_layers(num_layers=2, e=8), n_dev=4)
+    pool.set_resilience(_res(seed=seed, paging_error_rate=rate,
+                             paging_retries=2, paging_backoff_s=0.0))
+    shards = pool._fetch_host(0, np.int32(0))
+    np.testing.assert_array_equal(shards[0], pool._slice_shards(0, 0)[0])
+    assert pool.fetch_errors == 1
+    assert pool.fetch_retries == 1
+    assert pool.transfers == 1                        # delivered exactly once
+
+
+def test_stale_fallback_serves_resident_shard():
+    # all retries exhausted with the fallback on: the still-resident shard
+    # is served (bit-identical — weights are static), no transfer counted
+    pool = ExpertPool(_layers(num_layers=2, e=8), n_dev=4)
+    pool.set_resilience(_res())
+    ok = pool._fetch_host(0, np.int32(0))             # clean fetch first
+    assert pool.transfers == 1
+    pool.set_resilience(_res(seed=0, paging_error_rate=1.0,
+                             paging_retries=0, stale_fallback=True))
+    again = pool._fetch_host(0, np.int32(0))
+    for a, b in zip(ok, again):
+        np.testing.assert_array_equal(a, b)
+    assert pool.stale_fallbacks == 1
+    assert pool.transfers == 1                        # nothing new moved
+    assert pool._resident[0] == [0]                   # residency kept
+
+
+def test_fetch_deadline_cuts_retries_short():
+    # a backoff that would bust the deadline stops retrying immediately
+    pool = ExpertPool(_layers(num_layers=2, e=8), n_dev=4)
+    pool.set_resilience(_res(seed=0, paging_error_rate=1.0,
+                             paging_retries=5, paging_backoff_s=10.0,
+                             paging_deadline_s=1e-3, stale_fallback=True))
+    pool._fetch_host(0, np.int32(0))
+    assert pool.fetch_errors == 1                     # first attempt only
+    assert pool.fetch_retries == 0
+    assert pool.stale_fallbacks == 1
+
+
+# ---------------------------------------------------------------------------
 # 8-device conformance (subprocess, like test_ep_dice)
 # ---------------------------------------------------------------------------
 PROG = textwrap.dedent("""
